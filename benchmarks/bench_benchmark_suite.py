@@ -1,0 +1,43 @@
+"""Paper Figure 1: FedALIGN vs FedAvg(priority) vs FedAvg(all) on the three
+benchmark-dataset stand-ins (uniclass shards, N=60, |P|=2, E=5, eps=0.2,
+10% warm-up). Offline container => class-prototype synthetic stand-ins with
+matching shard statistics (DESIGN.md §6)."""
+from __future__ import annotations
+
+from benchmarks.common import fed_suite
+from repro.data.shards import make_benchmark_federation
+
+DATASET_MODEL = {"fmnist": "logreg", "emnist": "mlp2", "cifar": "cnn"}
+
+
+def run(fast=True, datasets=("fmnist", "emnist", "cifar"), seeds=(0,)):
+    rows = []
+    rounds = 20 if fast else 200
+    for ds in datasets:
+        n_pri = 2
+        # fast mode (single CPU core): fewer clients for the heavy models
+        clients = None
+        if fast and ds == "cifar":
+            clients, rounds_ds = 4, 3      # CNN on 1 CPU core: keep it tiny
+        elif fast and ds == "emnist":
+            clients, rounds_ds = 10, 10
+        else:
+            rounds_ds = rounds
+        fedn = make_benchmark_federation(ds, seed=0, n_priority=n_pri,
+                                         clients=clients,
+                                         samples_per_client=(100 if ds == 'cifar' else 150) if fast else None)
+        out = fed_suite(fedn, DATASET_MODEL[ds],
+                        dict(num_clients=fedn.x.shape[0], num_priority=n_pri,
+                             rounds=rounds_ds, local_epochs=5, epsilon=0.2,
+                             lr=0.1 if ds != "cifar" else 0.01,
+                             warmup_frac=0.1, batch_size=32),
+                        seeds=seeds)
+        for r in out:
+            r["dataset"] = ds
+        rows += out
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print({k: v for k, v in r.items() if k != "acc_curve"})

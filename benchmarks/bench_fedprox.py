@@ -1,0 +1,26 @@
+"""Paper Figure 4 (App C.2): FedALIGN adapted to FedProx (mu=1), 4 priority
+clients — the selection rule is algorithm-independent."""
+from __future__ import annotations
+
+from benchmarks.common import fed_suite
+from repro.data.shards import make_benchmark_federation
+
+
+def run(fast=True, seeds=(0,)):
+    rounds = 20 if fast else 150
+    fedn = make_benchmark_federation("fmnist", seed=0, n_priority=4,
+                                     samples_per_client=200 if fast else None)
+    rows = fed_suite(fedn, "logreg",
+                     dict(num_clients=fedn.x.shape[0], num_priority=4,
+                          rounds=rounds, local_epochs=5, epsilon=0.2, lr=0.1,
+                          warmup_frac=0.1, batch_size=32,
+                          algorithm="fedprox", prox_mu=1.0),
+                     seeds=seeds)
+    for r in rows:
+        r["algorithm"] = "fedprox"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print({k: v for k, v in r.items() if k != "acc_curve"})

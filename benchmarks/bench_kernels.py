@@ -1,0 +1,86 @@
+"""Kernel micro-benchmarks: wall-time of the production jnp paths on host
+(CPU here; the same harness times the Pallas paths on TPU), plus oracle
+max-error so every timing row is also a correctness row."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(fast=True):
+    rows = []
+    # flash attention
+    B, S, H, KV, hd = (1, 512, 8, 2, 64) if fast else (4, 2048, 16, 4, 128)
+    q = jax.random.normal(KEY, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, hd))
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, block_kv=128))
+    us = _time(f, q, k, v)
+    err = float(jnp.max(jnp.abs(f(q, k, v) - ref.attention_ref(q, k, v))))
+    rows.append({"kernel": "flash_attention", "us_per_call": round(us, 1),
+                 "max_err_vs_oracle": err})
+    # decode attention
+    kc = jax.random.normal(KEY, (B, 4096, KV, hd))
+    vc = jax.random.normal(jax.random.fold_in(KEY, 3), (B, 4096, KV, hd))
+    qd = jax.random.normal(KEY, (B, 1, H, hd))
+    fd = jax.jit(lambda q, k, v: ops.decode_attention(q, k, v, kv_len=4000))
+    us = _time(fd, qd, kc, vc)
+    err = float(jnp.max(jnp.abs(fd(qd, kc, vc)
+                                - ref.decode_attention_ref(qd, kc, vc, kv_len=4000))))
+    rows.append({"kernel": "decode_attention", "us_per_call": round(us, 1),
+                 "max_err_vs_oracle": err})
+    # fedagg
+    C, M = 60, 1_000_000 if not fast else 100_000
+    u = jax.random.normal(KEY, (C, M))
+    w = jnp.full((C,), 1.0 / 2)
+    g = (jax.random.uniform(jax.random.fold_in(KEY, 4), (C,)) > 0.5).astype(jnp.float32)
+    fa = jax.jit(ops.fedagg)
+    us = _time(fa, u, w, g)
+    err = float(jnp.max(jnp.abs(fa(u, w, g) - ref.fedagg_ref(u, w, g))))
+    rows.append({"kernel": "fedagg", "us_per_call": round(us, 1),
+                 "max_err_vs_oracle": err})
+    # ssm scan
+    Bt, S2, Di, N = (2, 512, 64, 16) if fast else (4, 4096, 512, 16)
+    x = jax.random.normal(KEY, (Bt, S2, Di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 5), (Bt, S2, Di))) * 0.1
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 6), (Di, N)) * 0.5)
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 7), (Bt, S2, N))
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 8), (Bt, S2, N))
+    Dm = jax.random.normal(jax.random.fold_in(KEY, 9), (Di,))
+    fs = jax.jit(lambda *a: ops.ssm_scan(*a, chunk=128))
+    us = _time(fs, x, dt, A, Bm, Cm, Dm)
+    err = float(jnp.max(jnp.abs(fs(x, dt, A, Bm, Cm, Dm)
+                                - ref.ssm_scan_ref(x, dt, A, Bm, Cm, Dm))))
+    rows.append({"kernel": "ssm_scan_chunked", "us_per_call": round(us, 1),
+                 "max_err_vs_oracle": err})
+    # rmsnorm
+    x = jax.random.normal(KEY, (4096, 1024))
+    s = jax.random.uniform(jax.random.fold_in(KEY, 10), (1024,))
+    fr = jax.jit(ops.rmsnorm)
+    us = _time(fr, x, s)
+    err = float(jnp.max(jnp.abs(fr(x, s) - ref.rmsnorm_ref(x, s))))
+    rows.append({"kernel": "rmsnorm", "us_per_call": round(us, 1),
+                 "max_err_vs_oracle": err})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,28 @@
+"""Paper Figure 6 (App C.4): priority-count and local-epoch sweeps — the
+FedALIGN advantage shrinks as the priority set grows (homogenization)."""
+from __future__ import annotations
+
+from benchmarks.common import fed_suite
+from repro.data.shards import make_benchmark_federation
+
+
+def run(fast=True, seeds=(0,)):
+    rounds = 15 if fast else 150
+    rows = []
+    for n_pri, E in [(2, 5), (6, 5), (18, 5), (6, 3)]:
+        fedn = make_benchmark_federation("fmnist", seed=0, n_priority=n_pri,
+                                         samples_per_client=150 if fast else None)
+        out = fed_suite(fedn, "logreg",
+                        dict(num_clients=fedn.x.shape[0], num_priority=n_pri,
+                             rounds=rounds, local_epochs=E, epsilon=0.2,
+                             lr=0.1, warmup_frac=0.1, batch_size=32),
+                        seeds=seeds, selections=("fedalign", "priority_only"))
+        for r in out:
+            r["n_priority"], r["E"] = n_pri, E
+        rows += out
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print({k: v for k, v in r.items() if k != "acc_curve"})

@@ -1,0 +1,40 @@
+"""Theorem-1 benchmark: theta_T/rho_T trade-off and bound tightness on the
+exactly-solvable quadratic PFL testbed (core/theory.py)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.theory import (empirical_theta_rho, make_quadratic_pfl,
+                               run_fedalign_gd as _run_fedalign_gd,
+                               theorem1_bound, theorem1_constants)
+
+
+def run(fast=True):
+    q = make_quadratic_pfl(seed=3, n_priority=4, n_nonpriority=6, dim=8)
+    L, mu = q.smoothness()
+    E = 5
+    gamma = max(8 * L / mu, E)
+    lr_fn = lambda t: 2.0 / (mu * (t + gamma))
+    T_rounds = 40 if fast else 200
+    rows = []
+    for eps in (0.0, 0.2, 0.5, 2.0, 1e9):
+        w_T, th, rh = _run_fedalign_gd(q, T_rounds, E, eps, lr_fn)
+        err = q.F(w_T) - q.F(q.w_star())
+        theta_T, rho_un = empirical_theta_rho(th, rh, gamma, E)
+        G = np.sqrt(max(np.linalg.norm(q.A[k] @ (np.zeros(8) - q.c[k])) ** 2
+                        for k in range(len(q.d))) * 4 + 1.0)
+        C1, C2, _ = theorem1_constants(L, mu, 0.0, G, E,
+                                       np.linalg.norm(q.w_star()) ** 2)
+        bound = theorem1_bound(T_rounds * E, C1=C1, C2=C2, gamma=gamma,
+                               Gamma=q.gamma(), theta_T=theta_T,
+                               rho_T=2 * L / mu * rho_un)
+        rows.append({"eps": eps, "error": float(err), "bound": float(bound),
+                     "theta_T": round(theta_T, 4),
+                     "rho_unscaled": round(rho_un, 6),
+                     "bound_holds": bool(err <= bound)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing: each bench_*.py exposes run(fast=True) ->
+list[dict] rows; benchmarks/run.py times them and emits CSV."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import FedConfig
+from repro.fl.simulator import run_federation
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+
+def fed_suite(dataset_fed, model_name, fed_kwargs, *, selections=("fedalign",
+              "priority_only", "all"), seeds=(0,), eval_every=5, init_seed=42):
+    """Run the three paper baselines over seeds; return summary rows."""
+    init_fn, apply_fn = SMALL_MODELS[model_name]
+    loss_fn = make_loss_fn(apply_fn)
+    import sys, time
+    rows = []
+    for sel in selections:
+        for seed in seeds:
+            t0 = time.time()
+            print(f"#   fed_suite: {model_name} sel={sel} seed={seed} "
+                  f"rounds={fed_kwargs['rounds']} ...", file=sys.stderr, flush=True)
+            fed = FedConfig(**{**fed_kwargs, "selection": sel, "seed": seed})
+            hist = run_federation(loss_fn, init_fn(jax.random.PRNGKey(init_seed)),
+                                  fed, dataset_fed, eval_every=eval_every)
+            print(f"#   ... done in {time.time()-t0:.0f}s", file=sys.stderr, flush=True)
+            s = hist.summary()
+            rows.append({
+                "selection": sel, "seed": seed,
+                "final_acc": round(s["final_acc"], 4),
+                "best_acc": round(s["best_acc"], 4),
+                "mean_included": round(s["mean_included"], 2),
+                "final_loss": round(s["final_loss"], 4),
+                "acc_curve": [round(a, 4) for a in hist.test_acc],
+            })
+    return rows
+
+
+def post_warmup_rounds_to(acc_target, acc_curve, eval_every):
+    """Convergence-speed proxy: evals until reaching the target accuracy."""
+    for i, a in enumerate(acc_curve):
+        if a >= acc_target:
+            return i * eval_every
+    return None

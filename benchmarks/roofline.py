@@ -1,0 +1,173 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For every (arch x shape x mesh) record in results/dryrun:
+
+    compute term    = FLOPs_dev / peak_FLOPs        (197 TFLOP/s bf16, v5e)
+    memory term     = bytes_dev / HBM_bw            (819 GB/s)
+    collective term = coll_bytes_dev / link_bw      (~50 GB/s/link ICI)
+
+FLOPs/bytes/collective-bytes are the SCAN-CORRECTED per-device numbers from
+launch/hlo_analysis.py (XLA's cost_analysis counts while bodies once; we
+multiply by known_trip_count along the call graph). MODEL_FLOPS (useful
+compute) is 6*N*D for training, 2*N_active*D for inference, computed from
+the config; the ratio MODEL_FLOPS / (FLOPs_dev * devices) flags remat /
+dispatch / padding waste.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+FIX_NOTES = {
+    "compute": "raise arithmetic efficiency: bigger per-device tiles, fuse "
+               "elementwise chains, drop fp32 staging",
+    "memory": "cut HBM traffic: fuse attention/scan intermediates (Pallas), "
+              "keep activations bf16, remat less",
+    "collective": "cut bytes on the wire: shard to kill resharding "
+                  "all-gathers, overlap TP collectives, aggregate deltas "
+                  "in bf16",
+}
+
+
+def model_flops(rec, cfg) -> float:
+    """Useful FLOPs for the whole program execution (all devices)."""
+    from repro.configs import INPUT_SHAPES
+    shape = INPUT_SHAPES[rec["shape"]]
+    N = rec["n_params"]
+    N_act = active_params(cfg, N)
+    if shape.kind == "train":
+        # FedALIGN round: E local steps (6ND each) + the gating forward
+        # (2ND); the server-batch forward is negligible and ignored.
+        E = rec["meta"].get("local_steps", 5)
+        D = shape.global_batch * shape.seq_len
+        return (6 * E + 2) * N_act * D
+    if shape.kind == "prefill":
+        return 2 * N_act * shape.global_batch * shape.seq_len
+    # decode: one token per sequence + attention reads don't count as FLOPs
+    return 2 * N_act * shape.global_batch
+
+
+def active_params(cfg, n_params) -> float:
+    """MoE: only top_k (+shared) experts are active per token."""
+    if not cfg.moe:
+        return n_params
+    # expert params per MoE layer
+    ep_layer = 3 * cfg.d_model * cfg.moe_d_ff * cfg.num_experts
+    n_moe_layers = sum(1 for i in range(cfg.num_layers - cfg.first_dense)
+                       if cfg.layer_kinds()[i % cfg.period]["ffn"] == "moe")
+    total_expert = ep_layer * n_moe_layers
+    active_expert = total_expert * cfg.top_k / cfg.num_experts
+    shared = 3 * cfg.d_model * cfg.moe_d_ff * cfg.num_shared_experts * n_moe_layers
+    return n_params - total_expert + active_expert  # shared already in n_params
+
+
+def analyze_record(path: str, *, use_hlo=True) -> dict | None:
+    rec = json.load(open(path))
+    if rec["status"] != "ok":
+        return rec if rec["status"] == "skipped" else None
+    from repro.configs import get_config
+    from repro.launch.dryrun import adapt_config
+    cfg = adapt_config(get_config(rec["arch"]), rec["shape"])
+
+    hlo_path = path.replace(".json", ".hlo.txt.gz")
+    if use_hlo and os.path.exists(hlo_path):
+        from repro.launch.hlo_analysis import analyze_file
+        agg = analyze_file(hlo_path)
+        flops_dev = agg["flops"]
+        bytes_dev = agg["bytes"]
+        coll_dev = agg["coll_total"]
+        coll_by_op = {k: float(v) for k, v in agg["coll"].items()}
+    else:   # fall back to (scan-undercounted) XLA numbers
+        flops_dev = rec.get("flops_per_device") or 0
+        bytes_dev = rec.get("bytes_per_device") or 0
+        coll_by_op = rec.get("collective_bytes_per_device", {})
+        coll_dev = sum(coll_by_op.values())
+
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec, cfg)
+    hlo_total = flops_dev * rec["devices"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "devices": rec["devices"],
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": (mf / hlo_total) if hlo_total else None,
+        "coll_by_op": coll_by_op,
+        "peak_bytes_dev": (rec.get("memory") or {}).get("peak_memory_in_bytes"),
+        "fits_hbm": ((rec.get("memory") or {}).get("peak_memory_in_bytes", 0)
+                     or 0) < 16e9,
+        "note": FIX_NOTES[dominant],
+        "status": "ok",
+    }
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def run(fast=True, dir="results/dryrun", multi_pod=False):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("multi_pod", False) != multi_pod:
+            continue
+        out = analyze_record(path)
+        if out is not None:
+            rows.append(out)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    rows = run(dir=args.dir, multi_pod=args.multi_pod)
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'collective':>11s} {'dominant':>10s} {'useful':>7s} {'fits':>5s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:24s} {r['shape']:12s} {'skipped':>9s}")
+            continue
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        print(f"{r['arch']:24s} {r['shape']:12s} {fmt_s(r['compute_s']):>9s} "
+              f"{fmt_s(r['memory_s']):>9s} {fmt_s(r['collective_s']):>11s} "
+              f"{r['dominant']:>10s} {ur:>7s} {str(r['fits_hbm']):>5s}")
+    if args.csv:
+        import csv
+        with open(args.csv, "w", newline="") as f:
+            wr = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            wr.writeheader()
+            for r in rows:
+                if r.get("status") == "ok":
+                    wr.writerow(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Benchmark entrypoint — one suite per paper table/figure + kernels +
+roofline. Prints ``name,us_per_call,derived`` CSV rows per the repo
+contract; full row dumps land in results/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+SUITES = [
+    ("fig1_benchmark_suite", "benchmarks.bench_benchmark_suite"),
+    ("fig2_synth_noise", "benchmarks.bench_synth_noise"),
+    ("fig3_local_vs_global", "benchmarks.bench_local_vs_global"),
+    ("fig4_fedprox", "benchmarks.bench_fedprox"),
+    ("fig5_partial_participation", "benchmarks.bench_partial"),
+    ("fig6_sweeps", "benchmarks.bench_sweeps"),
+    ("thm1_theory", "benchmarks.bench_theory"),
+    ("ablations", "benchmarks.bench_ablations"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline_single_pod", "benchmarks.roofline"),
+]
+
+
+def derived_summary(name: str, rows) -> str:
+    """One derived scalar per suite for the CSV line."""
+    try:
+        if name.startswith(("fig1", "fig2", "fig4", "fig5", "fig6")):
+            fa = [r["final_acc"] for r in rows if r["selection"] == "fedalign"]
+            base = [r["final_acc"] for r in rows if r["selection"] != "fedalign"]
+            return (f"fedalign_mean_acc={sum(fa)/len(fa):.4f};"
+                    f"baseline_mean_acc={sum(base)/len(base):.4f}")
+        if name.startswith("fig3"):
+            wins = sum(r["fedalign_beats_local"] for r in rows)
+            return f"fedalign_beats_local={wins}/{len(rows)}"
+        if name.startswith("thm1"):
+            holds = sum(r["bound_holds"] for r in rows)
+            return f"bound_holds={holds}/{len(rows)}"
+        if name == "ablations":
+            accs = {f"{r['ablation']}/{r['setting']}": r["final_acc"] for r in rows}
+            return ";".join(f"{k}={v}" for k, v in accs.items())
+        if name == "kernels":
+            worst = max(r["max_err_vs_oracle"] for r in rows)
+            return f"max_oracle_err={worst:.2e}"
+        if name.startswith("roofline"):
+            ok = [r for r in rows if r.get("status") == "ok"]
+            if not ok:
+                return "no_dryrun_artifacts(run repro.launch.dryrun first)"
+            dom: dict = {}
+            for r in ok:
+                dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+            fits = sum(r["fits_hbm"] for r in ok)
+            return f"combos={len(ok)};fits_hbm={fits};dominant={dom}"
+    except Exception as e:  # noqa: BLE001
+        return f"derived_error={type(e).__name__}"
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale rounds")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    os.makedirs("results/bench", exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, modname in SUITES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# running {name} ...", file=sys.stderr, flush=True)
+        mod = importlib.import_module(modname)
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(fast=not args.full)
+            status = ""
+        except Exception as e:  # noqa: BLE001
+            rows, status = [], f"ERROR:{type(e).__name__}:{e}"
+        us = (time.perf_counter() - t0) * 1e6
+        derived = status or derived_summary(name, rows)
+        print(f"{name},{us:.0f},{derived}", flush=True)
+        with open(f"results/bench/{name}.json", "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""End-to-end driver: federated FedALIGN training of an assigned
+architecture on synthetic token streams with controllable client alignment.
+
+Default: reduced xlstm-125m family for a quick CPU run. ``--full`` uses the
+real 125M-parameter xlstm-125m config (the assignment's ~100M model) — the
+same code path the dry-run lowers for the production mesh.
+
+    PYTHONPATH=src python examples/llm_fedalign.py                 # reduced
+    PYTHONPATH=src python examples/llm_fedalign.py --full --rounds 300
+"""
+import argparse
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    args = ap.parse_args()
+
+    params, hist = run(arch=args.arch, smoke=not args.full,
+                       rounds=args.rounds, clients=args.clients,
+                       n_priority=args.clients // 2, per_client=4,
+                       seq=args.seq, lr=args.lr, misalign_max=1.0)
+    print("\nround  server_loss  included_nonpriority")
+    for h in hist:
+        print(f"{h['round']:5d}  {h['server_loss']:11.4f}  {h['included']:8.0f}")
+    drop = hist[0]["server_loss"] - hist[-1]["server_loss"]
+    print(f"\nserver loss drop over {args.rounds} rounds: {drop:.3f}")
+
+
+if __name__ == "__main__":
+    main()

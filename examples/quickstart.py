@@ -1,0 +1,30 @@
+"""Quickstart: FedALIGN on SYNTH(1,1) in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import FedConfig
+from repro.data.synth import make_synth_federation
+from repro.fl.simulator import run_federation
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+# 1. a federation: 10 priority clients (define the objective) + 10 free
+#    clients holding noisy copies of the global data
+federation = make_synth_federation(seed=0, n_priority=10, n_nonpriority=10,
+                                   samples_per_client=200,
+                                   label_noise_skew=1.5, random_data_skew=1.5)
+
+# 2. the paper's model for this dataset: logistic regression on 60 dims
+init_fn, apply_fn = SMALL_MODELS["synth_logreg"]
+loss_fn = make_loss_fn(apply_fn)
+
+# 3. FedALIGN: eps=0.2 loss-matching, E=5 local epochs, 10% warm-up
+fed = FedConfig(num_clients=20, num_priority=10, rounds=60, local_epochs=5,
+                epsilon=0.2, lr=0.1, warmup_frac=0.1, selection="fedalign")
+
+hist = run_federation(loss_fn, init_fn(jax.random.PRNGKey(42)), fed,
+                      federation, eval_every=5, verbose=True)
+s = hist.summary()
+print(f"\nfinal priority-test accuracy: {s['final_acc']:.4f} "
+      f"(mean non-priority clients included/round: {s['mean_included']:.1f})")

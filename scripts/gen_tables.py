@@ -1,0 +1,68 @@
+"""Generate EXPERIMENTS.md markdown tables from dry-run + roofline artifacts."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import analyze_record, fmt_s  # noqa: E402
+
+
+def dryrun_table(multi_pod):
+    rows = []
+    for path in sorted(glob.glob("results/dryrun/*.json")):
+        if "__opt" in path or "__rebase" in path:
+            continue
+        r = json.load(open(path))
+        if r.get("multi_pod") != multi_pod:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | — | — | — |")
+            continue
+        mem = (r.get("memory") or {})
+        peak = mem.get("peak_memory_in_bytes", 0) / 1e9
+        coll = sum(r.get("collective_bytes_per_device", {}).values()) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok ({r['compile_s']}s) "
+            f"| {peak:.2f} | {coll:.2f} | {r['meta'].get('mode')} |")
+    hdr = ("| arch | shape | lower+compile | peak GB/dev | HLO coll GB/dev (uncorrected) | mode |\n"
+           "|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table():
+    rows = []
+    for path in sorted(glob.glob("results/dryrun/*.json")):
+        if "__opt" in path or "__rebase" in path:
+            continue
+        rec = json.load(open(path))
+        if rec.get("multi_pod"):
+            continue
+        r = analyze_record(path)
+        if r is None:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |")
+            continue
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "—"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| **{r['dominant']}** | {ur} | {str(r['fits_hbm'])} |")
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "useful (6ND/HLO) | fits 16GB |\n|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Single pod (16x16 = 256 chips)\n")
+        print(dryrun_table(False))
+        print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+        print(dryrun_table(True))
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single pod)\n")
+        print(roofline_table())

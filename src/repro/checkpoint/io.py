@@ -1,0 +1,58 @@
+"""Msgpack pytree checkpointing.
+
+Arrays are gathered to host (works for sharded arrays via
+``jax.device_get``), serialized with shape/dtype headers, and restored to
+the exact pytree structure. Sufficient for single-controller runs; a real
+multi-host deployment would write per-shard files keyed by device — the
+layout here keeps that extension local to this module.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(obj):
+    if isinstance(obj, (np.ndarray, jnp.ndarray)):
+        arr = np.asarray(obj)
+        return {b"__nd__": True, b"dtype": arr.dtype.str, b"shape": list(arr.shape),
+                b"data": arr.tobytes()}
+    raise TypeError(type(obj))
+
+
+def _decode(obj):
+    if b"__nd__" in obj:
+        return np.frombuffer(obj[b"data"], dtype=np.dtype(obj[b"dtype"])
+                             ).reshape(obj[b"shape"]).copy()
+    return obj
+
+
+def save_pytree(path: str, tree: Any, step: int | None = None) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    payload = {"treedef": str(treedef), "step": step,
+               "leaves": host_leaves}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, default=_encode))
+    os.replace(tmp, path)           # atomic
+
+
+def load_pytree(path: str, like: Any):
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), object_hook=_decode, strict_map_key=False)
+    leaves, treedef = jax.tree.flatten(like)
+    new_leaves = payload["leaves"]
+    assert len(new_leaves) == len(leaves), (len(new_leaves), len(leaves))
+    out = []
+    for old, new in zip(leaves, new_leaves):
+        assert tuple(new.shape) == tuple(old.shape), (new.shape, old.shape)
+        out.append(jnp.asarray(new, dtype=old.dtype))
+    return jax.tree.unflatten(treedef, out), payload.get("step")

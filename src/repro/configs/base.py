@@ -1,0 +1,204 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture gets a module in this package exposing
+``CONFIG`` (the exact full-size config) and ``smoke_config()`` (a reduced
+variant of the same family: <=2 layers-per-period repeats, d_model<=512,
+<=4 experts) used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0           # 0 = full attention
+    causal: bool = True
+
+    # --- MLA (DeepSeek/MiniCPM3-style latent attention) ---------------------
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE ----------------------------------------------------------------
+    moe: bool = False
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                 # per-expert hidden dim
+    moe_every: int = 1                # MoE FFN on layers where (i % moe_every == moe_offset)
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- layer pattern ------------------------------------------------------
+    # "attn"  : homogeneous attention blocks
+    # "jamba" : period 8 = [attn, mamba x7]; MoE every other layer
+    # "xlstm" : period 2 = [mlstm, slstm]
+    pattern: str = "attn"
+    first_dense: int = 0              # leading layers with dense FFN (DeepSeek-MoE: 1)
+
+    # --- SSM (mamba) ----------------------------------------------------------
+    ssm_state_dim: int = 16
+    ssm_conv_dim: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0              # 0 -> ceil(d_model/16)
+    ssm_chunk: int = 256              # chunked-scan length (train/prefill)
+
+    # --- xLSTM ----------------------------------------------------------------
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+
+    # --- encoder/decoder (whisper) -------------------------------------------
+    encdec: bool = False
+    encoder_layers: int = 0
+    num_frames: int = 1500            # stubbed conv-frontend output length
+
+    # --- VLM (llava) -----------------------------------------------------------
+    vlm: bool = False
+    num_image_tokens: int = 0         # stubbed ViT/projector output tokens
+
+    # --- numerics --------------------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    tie_embeddings: bool = True
+
+    # --- execution knobs ---------------------------------------------------------
+    attn_block_q: int = 512           # flash-attention query block
+    attn_block_kv: int = 1024         # flash-attention kv block
+    loss_chunk: int = 512             # chunked softmax-xent sequence chunk
+    remat: bool = True                # checkpoint each scanned period
+    remat_policy: str = "full"        # full | save_mixer (keep attention/scan
+                                      # outputs; don't recompute them in bwd)
+    use_pallas: bool = False          # TPU kernels (CPU falls back to refs)
+    # beyond-paper perf knobs (EXPERIMENTS.md SSPerf):
+    seq_shard_attn: bool = False      # sequence-parallel attention: shard S over
+                                      # "model" when heads % model_axis != 0
+    attn_bf16: bool = False           # bf16 qk^T / pv matmuls (f32 softmax state)
+    expert_parallel: bool = False     # shard MoE experts (not dff) over "model"
+    dp_axes: tuple = ("data",)        # data-parallel mesh axes for constraints
+
+    # --- citation / provenance ------------------------------------------------
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.ssm_dt_rank == 0:
+            object.__setattr__(self, "ssm_dt_rank", -(-self.d_model // 16))
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def period(self) -> int:
+        return {"attn": 1, "jamba": 8, "xlstm": 2}[self.pattern]
+
+    @property
+    def n_periods(self) -> int:
+        n = self.num_layers - self.first_dense
+        assert n % self.period == 0, (self.name, self.num_layers, self.period)
+        return n // self.period
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def layer_kinds(self) -> list[dict]:
+        """Blocks of one period, in order. kind: mixer + ffn type."""
+        if self.pattern == "attn":
+            return [{"mixer": "attn", "ffn": "moe" if self.moe else "dense"}]
+        if self.pattern == "jamba":
+            kinds = []
+            for i in range(8):
+                mixer = "attn" if i == 0 else "mamba"
+                ffn = "moe" if (self.moe and i % self.moe_every == self.moe_offset) else "dense"
+                kinds.append({"mixer": mixer, "ffn": ffn})
+            return kinds
+        if self.pattern == "xlstm":
+            # xLSTM blocks are self-contained (d_ff = 0): no separate FFN.
+            return [{"mixer": "mlstm", "ffn": "none"}, {"mixer": "slstm", "ffn": "none"}]
+        raise ValueError(self.pattern)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One of the assigned (seq_len, global_batch) workload points."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    """FedALIGN / federation hyper-parameters (paper §3-4)."""
+    num_clients: int = 60
+    num_priority: int = 2
+    local_epochs: int = 5             # E
+    epsilon: float = 0.2              # selection threshold eps_t
+    epsilon_decay: float = 0.0        # eps_t = epsilon * (1 - decay)^round (fine-tuning)
+    epsilon_schedule: str = "constant"  # constant | linear | exp | step
+    warmup_frac: float = 0.1          # priority-only warm-up rounds
+    rounds: int = 100
+    lr: float = 0.1
+    lr_schedule: str = "constant"     # constant | paper_decay (2/(mu(t+gamma)))
+    mu_strong: float = 1.0            # mu for paper_decay
+    gamma_decay: float = 10.0         # gamma for paper_decay
+    participation: float = 1.0        # fraction sampled per round (<1 = partial)
+    straggler_period: int = 0         # >0: non-priority client k only shows up
+                                      # every (2 + k % period) rounds — the
+                                      # paper's App. A.4 arbitrary-participation
+                                      # model (stragglers)
+    algorithm: str = "fedavg"         # local solver: fedavg | fedprox
+    prox_mu: float = 1.0              # FedProx proximal coefficient
+    selection: str = "fedalign"       # fedalign | all | priority_only
+    align_stat: str = "accuracy"      # accuracy (paper experiments) | loss (theory)
+    server_opt: str = "none"          # none | momentum (beyond-paper server optimizer)
+    server_lr: float = 1.0
+    server_momentum: float = 0.9
+    agg_dtype: str = "float32"        # dtype of aggregated client DELTAS on the
+                                      # wire (bfloat16 halves FedALIGN's
+                                      # aggregation collective — beyond-paper)
+    batch_size: int = 32              # local minibatch
+    seed: int = 0
+
+    def replace(self, **kw) -> "FedConfig":
+        return dataclasses.replace(self, **kw)

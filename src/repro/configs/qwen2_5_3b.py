@@ -1,0 +1,28 @@
+"""qwen2.5-3b [dense] — GQA (kv=2), QKV bias. [hf:Qwen/Qwen2.5-0.5B family]
+
+36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151936,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen2.5-0.5B (family card)",
+)
+
+
+def smoke_config():
+    return CONFIG.replace(
+        num_layers=2, d_model=256, num_heads=8, num_kv_heads=2, head_dim=32,
+        d_ff=512, vocab_size=512, param_dtype="float32", compute_dtype="float32",
+        loss_chunk=64, attn_block_kv=64)

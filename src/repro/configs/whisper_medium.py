@@ -1,0 +1,35 @@
+"""whisper-medium [audio] — encoder-decoder, conv frontend STUBBED.
+[arXiv:2212.04356]
+
+24L d_model=1024 16H d_ff=4096 vocab=51865; 24 encoder + 24 decoder layers.
+``input_specs()`` provides precomputed frame embeddings [B, 1500, d] (the
+mel + 2xconv frontend output length for 30s audio).
+long_500k is SKIPPED for this arch (bounded decoder context; see DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    encdec=True,
+    num_layers=24,                    # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    head_dim=64,
+    num_frames=1500,
+    rope_theta=10_000.0,              # unused (learned positions)
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+)
+
+
+def smoke_config():
+    return CONFIG.replace(
+        num_layers=2, encoder_layers=2, d_model=256, num_heads=8, num_kv_heads=8,
+        head_dim=32, d_ff=512, vocab_size=512, num_frames=32,
+        param_dtype="float32", compute_dtype="float32",
+        loss_chunk=64, attn_block_kv=64)

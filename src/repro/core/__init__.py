@@ -1,0 +1,4 @@
+from repro.core.alignment import (epsilon_at, global_loss_from_locals,  # noqa: F401
+                                  inclusion_gates)
+from repro.core.aggregation import aggregate_clients, aggregate_updates  # noqa: F401
+from repro.core.round import make_round_fn  # noqa: F401

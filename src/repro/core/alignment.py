@@ -1,0 +1,70 @@
+"""FedALIGN's selection rule (the paper's core contribution, §3.1).
+
+A non-priority client k is included in the aggregation of round t iff
+
+    |F(w_t) - F_k(w_t)| < eps_t
+
+evaluated at the *received* global model w_t: the client is only willing to
+participate when the model is already good on its data
+(F_k <= F + eps, the incentive side), and the server only accepts updates
+whose loss matches the global loss (the alignment side).
+
+Priority clients are always included (subject to participation sampling).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def epsilon_at(fed, round_idx):
+    """eps_t schedule. The paper's fine-tuning knob (§3.2): start permissive,
+    optionally decay toward 0 to eliminate the rho_T bias in late rounds."""
+    t = jnp.asarray(round_idx, jnp.float32)
+    eps0 = jnp.float32(fed.epsilon)
+    if fed.epsilon_schedule == "constant":
+        return eps0
+    if fed.epsilon_schedule == "exp":
+        return eps0 * (1.0 - fed.epsilon_decay) ** t
+    if fed.epsilon_schedule == "linear":
+        return jnp.maximum(eps0 * (1.0 - fed.epsilon_decay * t), 0.0)
+    if fed.epsilon_schedule == "step":
+        # halve every 1/decay rounds
+        k = jnp.floor(t * fed.epsilon_decay)
+        return eps0 * 0.5 ** k
+    raise ValueError(fed.epsilon_schedule)
+
+
+def inclusion_gates(local_losses, global_loss, eps, priority_mask, *,
+                    warmup=False, participation_mask=None, selection="fedalign"):
+    """I_{k,t} per client. local_losses: [C] F_k(w_t); global_loss: scalar
+    F(w_t); priority_mask: [C] bool.
+
+    selection:
+      fedalign      — paper rule (priority always; non-priority loss-matched)
+      all           — FedAvg over everyone (baseline 2)
+      priority_only — FedAvg over priority clients (baseline 1)
+    """
+    C = local_losses.shape[0]
+    pri = priority_mask.astype(jnp.float32)
+    if selection == "priority_only":
+        gates = pri
+    elif selection == "all":
+        gates = jnp.ones((C,), jnp.float32)
+    elif selection == "fedalign":
+        aligned = (jnp.abs(local_losses - global_loss) < eps).astype(jnp.float32)
+        non_pri = (1.0 - pri) * aligned * (0.0 if warmup else 1.0)
+        gates = pri + non_pri
+    else:
+        raise ValueError(selection)
+    if participation_mask is not None:
+        gates = gates * participation_mask.astype(jnp.float32)
+    return gates
+
+
+def global_loss_from_locals(local_losses, priority_mask, weights):
+    """F(w) = sum_{k in P} p_k F_k(w); weights normalized so priority mass = 1."""
+    pri = priority_mask.astype(jnp.float32)
+    num = jnp.sum(pri * weights * local_losses)
+    den = jnp.maximum(jnp.sum(pri * weights), 1e-30)
+    return num / den

@@ -1,0 +1,3 @@
+from repro.data.synth import make_synth_federation  # noqa: F401
+from repro.data.shards import make_benchmark_federation  # noqa: F401
+from repro.data.tokens import make_token_federation  # noqa: F401

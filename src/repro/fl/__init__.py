@@ -1,0 +1,1 @@
+from repro.fl.simulator import evaluate, run_federation, run_local_baseline  # noqa: F401

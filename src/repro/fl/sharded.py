@@ -1,0 +1,160 @@
+"""Pod-scale FedALIGN: the communication round as a single pjit program.
+
+Two execution modes, chosen by model size (DESIGN.md §3):
+
+* **spatial** — clients ARE the (pod, data) mesh shards. Client-stacked
+  params [C, ...] are vmapped through E local SGD steps in parallel; the
+  gated aggregation contracts the client axis, lowering to ONE all-reduce
+  over (pod, data) — FedALIGN's entire server communication.
+
+* **temporal** — for models too large to replicate per client (jamba-398b,
+  llava-34b): params stay (data, model)-sharded (FSDP+TP); the client
+  cohort is traversed with lax.scan, each client running its local steps
+  on the full mesh; gated updates accumulate in the scan carry. The
+  federation semantics are identical — clients are time-multiplexed
+  instead of space-multiplexed.
+
+The server statistic F(w_t) is computed on a server-held global batch
+(paper §3.1: "the server transmits ... also its associated loss"), so the
+gate needs no second pass over clients.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import aggregate_clients
+from repro.utils import tree_axpy, tree_cast
+
+FSDP_ARCHS = {"jamba-1.5-large-398b", "llava-next-34b"}
+
+
+def needs_fsdp(cfg) -> bool:
+    return cfg.name in FSDP_ARCHS
+
+
+def _local_steps(model, params, batch, lr, n_steps):
+    """E local SGD steps on one client's batch. Returns (params', F_k(w_t))."""
+    loss0, _ = model.loss_fn(params, batch)
+
+    def step(p, _):
+        loss, grads = jax.value_and_grad(
+            lambda q: model.loss_fn(q, batch)[0])(p)
+        return tree_axpy(-lr, grads, p), loss
+
+    params, _ = jax.lax.scan(step, params, None, length=n_steps)
+    return params, loss0
+
+
+def _gates(local_losses, server_loss, eps, priority_mask):
+    pri = priority_mask.astype(jnp.float32)
+    aligned = (jnp.abs(local_losses - server_loss) < eps).astype(jnp.float32)
+    return pri + (1.0 - pri) * aligned
+
+
+def make_spatial_round(model, fed, num_clients: int):
+    """Returns round_step(params, batch) -> (params', stats).
+
+    batch: client-stacked arrays [C, b, ...] + server_* arrays (global data).
+    priority_mask/weights [C] ride inside batch so everything is one pytree.
+    """
+    E = fed.local_epochs
+    lr = fed.lr
+
+    def round_step(params, batch):
+        client_batch = batch["clients"]
+        pm = batch["priority_mask"]
+        w = batch["weights"]
+
+        server_loss, _ = model.loss_fn(params, batch["server"])
+
+        client_params, local_losses = jax.vmap(
+            lambda cb: _local_steps(model, params, cb, lr, E))(client_batch)
+
+        gates = _gates(local_losses, server_loss, jnp.float32(fed.epsilon), pm)
+        if fed.agg_dtype != "float32":
+            # aggregate client DELTAS on the wire in reduced precision:
+            # w <- w + agg(cast(w_k - w)); halves FedALIGN's server all-reduce
+            ad = jnp.dtype(fed.agg_dtype)
+            deltas = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
+                                  client_params, params)
+            agg = aggregate_clients(deltas, w, gates)
+            new_params = jax.tree.map(
+                lambda g, d: (g + d.astype(jnp.float32)).astype(g.dtype),
+                params, agg)
+        else:
+            new_params = aggregate_clients(client_params, w, gates)
+            new_params = jax.tree.map(lambda n, p: n.astype(p.dtype),
+                                      new_params, params)
+        stats = {
+            "server_loss": server_loss,
+            "local_losses": local_losses,
+            "gates": gates,
+            "theta_round": 1.0 / (1.0 + jnp.sum((1 - pm.astype(jnp.float32)) * w * gates)),
+        }
+        return new_params, stats
+
+    return round_step
+
+
+def make_temporal_round(model, fed, cohort: int):
+    """FSDP variant: scan over a client cohort; accumulate gated updates.
+
+    batch['clients'] leaves are [C, b, ...] with C the SCAN axis (unsharded);
+    the inner batch dim b is sharded over (pod, data).
+    """
+    E = fed.local_epochs
+    lr = fed.lr
+
+    def round_step(params, batch):
+        pm = batch["priority_mask"]
+        w = batch["weights"]
+        server_loss, _ = model.loss_fn(params, batch["server"])
+
+        def per_client(carry, inp):
+            acc_num, acc_den = carry
+            cbatch, pm_k, w_k = inp
+            p_k, loss0 = _local_steps(model, params, cbatch, lr, E)
+            gate = _gates(loss0[None], server_loss, jnp.float32(fed.epsilon),
+                          pm_k[None])[0]
+            wg = w_k * gate
+            acc_num = jax.tree.map(
+                lambda a, pk: a + wg * pk.astype(jnp.float32), acc_num, p_k)
+            return (acc_num, acc_den + wg), (loss0, gate)
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (num, den), (losses, gates) = jax.lax.scan(
+            per_client, (zeros, jnp.float32(0)),
+            (batch["clients"], pm, w))
+        new_params = jax.tree.map(
+            lambda n, p: (n / jnp.maximum(den, 1e-30)).astype(p.dtype), num, params)
+        stats = {
+            "server_loss": server_loss,
+            "local_losses": losses,
+            "gates": gates,
+            "theta_round": 1.0 / (1.0 + jnp.sum((1 - pm.astype(jnp.float32)) * w * gates)),
+        }
+        return new_params, stats
+
+    return round_step
+
+
+def make_round_step(model, fed, num_clients: int, *, fsdp: bool):
+    return (make_temporal_round(model, fed, num_clients) if fsdp
+            else make_spatial_round(model, fed, num_clients))
+
+
+# ----------------------------------------------------------------- serving
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+    return serve_step

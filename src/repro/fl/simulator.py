@@ -1,0 +1,105 @@
+"""In-silico federation driver: jitted FedALIGN rounds in a python loop,
+evaluation + history logging. This is the engine behind every paper
+experiment (benchmarks/bench_*.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import History
+from repro.core.round import make_round_fn
+from repro.data.synth import Federation
+from repro.utils import tree_axpy
+
+
+def evaluate(loss_fn, params, x, y, batch=4096):
+    """Mean loss and accuracy over a test set (jitted: eager CNN eval on a
+    1-core host was the dominant cost of whole benchmark suites)."""
+    jitted = jax.jit(loss_fn)   # jax caches by fn identity across calls
+    n = y.shape[0]
+    losses, accs, cnt = [], [], 0
+    for i in range(0, n, batch):
+        b = {"x": jnp.asarray(x[i:i + batch]), "y": jnp.asarray(y[i:i + batch])}
+        loss, m = jitted(params, b)
+        w = b["y"].shape[0]
+        losses.append(float(loss) * w)
+        accs.append(float(m["acc"]) * w)
+        cnt += w
+    return sum(losses) / cnt, sum(accs) / cnt
+
+
+def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
+                   *, eval_every: int = 1, verbose: bool = False) -> History:
+    """Run ``fed.rounds`` FedALIGN communication rounds."""
+    round_fn = jax.jit(make_round_fn(loss_fn, fed))
+    data = {"x": jnp.asarray(federation.x), "y": jnp.asarray(federation.y)}
+    pm = jnp.asarray(federation.priority_mask)
+    w = jnp.asarray(federation.weights)
+    params = init_params
+    rng = jax.random.PRNGKey(fed.seed)
+    hist = History()
+
+    # beyond-paper: FedAvgM-style server momentum over aggregated deltas
+    use_server_m = fed.server_opt == "momentum"
+    server_m = jax.tree.map(jnp.zeros_like, params) if use_server_m else None
+
+    @jax.jit
+    def apply_server_momentum(old, new, m):
+        delta = jax.tree.map(jnp.subtract, new, old)
+        m = jax.tree.map(lambda mi, d: fed.server_momentum * mi + d, m, delta)
+        upd = jax.tree.map(lambda o, mi: o + fed.server_lr * mi, old, m)
+        return upd, m
+
+    for r in range(fed.rounds):
+        rng, rkey = jax.random.split(rng)
+        new_params, stats = round_fn(params, data, pm, w, rkey, jnp.int32(r))
+        if use_server_m:
+            params, server_m = apply_server_momentum(params, new_params, server_m)
+        else:
+            params = new_params
+        if r % eval_every == 0 or r == fed.rounds - 1:
+            tl, ta = evaluate(loss_fn, params, federation.test_x, federation.test_y)
+            hist.log(stats, test_acc=ta, test_loss=tl)
+            if verbose:
+                print(f"  round {r:4d} loss={float(stats['global_loss']):.4f} "
+                      f"test_acc={ta:.4f} inc={float(stats['included_nonpriority']):.1f}")
+        else:
+            hist.log(stats)
+    hist.params = params
+    return hist
+
+
+def run_local_baseline(loss_fn, init_fn, fed, federation: Federation,
+                       *, epochs: int = None, client_ids=None):
+    """Paper App. C.1: train each client alone on its local data; report the
+    per-client locally-trained model accuracy on the global test set."""
+    from repro.core.round import _local_solver
+    epochs = epochs or fed.rounds * fed.local_epochs
+    fed_local = fed
+    solver = _local_solver(loss_fn, fed_local)
+    C = federation.x.shape[0]
+    client_ids = client_ids if client_ids is not None else range(C)
+    rng = jax.random.PRNGKey(fed.seed + 1)
+
+    @jax.jit
+    def train_one(d, key, params0):
+        # reuse the E-epoch solver repeatedly to reach `epochs`
+        def body(p, k):
+            return solver(p, d, k, jnp.float32(fed.lr)), None
+        keys = jax.random.split(key, max(epochs // fed.local_epochs, 1))
+        p, _ = jax.lax.scan(body, params0, keys)
+        return p
+
+    accs = {}
+    for c in client_ids:
+        rng, k = jax.random.split(rng)
+        d = {"x": jnp.asarray(federation.x[c]), "y": jnp.asarray(federation.y[c])}
+        p = train_one(d, k, init_fn(jax.random.PRNGKey(fed.seed + 100 + c)))
+        _, acc = evaluate(loss_fn, p, federation.test_x, federation.test_y)
+        accs[c] = acc
+    return accs

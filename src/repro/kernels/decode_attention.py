@@ -1,0 +1,101 @@
+"""Pallas TPU decode attention: one query token vs a long KV cache.
+
+The cache length axis is tiled in ``block_kv`` rows and is the sequential
+grid axis; the online-softmax state for the G query heads of one kv-head
+group lives in VMEM scratch. ``kv_len`` (number of valid cache rows) is a
+dynamic scalar, passed via scalar prefetch so block masking happens on-core.
+
+Memory-bound by design: decode attention moves the whole cache through
+VMEM once; the roofline term that matters is HBM bandwidth, so blocks are
+sized to keep the DMA pipeline busy rather than to feed the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, block_kv, nkv, G, hd):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # [bk, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, bk]
+    k_pos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32, (G, block_kv), 1)
+    s = jnp.where(k_pos < kv_len_ref[0], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, *, kv_len, scale=None,
+                            block_kv=512, interpret=False):
+    """q: [B,1,H,hd]; caches: [B,Skv,KV,hd]; kv_len: scalar int32."""
+    B, Sq, H, hd = q.shape
+    assert Sq == 1
+    _, Skv, KV, _ = k_cache.shape
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    block_kv = min(block_kv, Skv)
+    assert Skv % block_kv == 0
+    nkv = Skv // block_kv
+
+    qr = q[:, 0].reshape(B, KV, G, hd)
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_kernel, scale=scale, block_kv=block_kv,
+                               nkv=nkv, G=G, hd=hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nkv),
+        in_specs=[
+            # index maps receive the prefetched scalar ref as trailing arg
+            pl.BlockSpec((1, 1, G, hd), lambda b, kv, ik, s: (b, kv, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd), lambda b, kv, ik, s: (b, ik, kv, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd), lambda b, kv, ik, s: (b, ik, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, kv, ik, s: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(kv_len_arr, qr, k_cache, v_cache)
+
+    return out.reshape(B, 1, H, hd)

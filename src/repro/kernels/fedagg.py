@@ -1,0 +1,55 @@
+"""Pallas TPU kernel for FedALIGN's gated weighted client aggregation.
+
+This is the paper's server step (eq. (15)): given C client updates (flattened
+to [C, M]), data fractions p_k and inclusion gates I_k, compute
+
+    out[m] = sum_k p_k I_k u[k, m] / sum_k p_k I_k
+
+The parameter axis M is tiled in ``block_m`` columns; each grid cell loads a
+[C, block_m] update slab into VMEM plus the tiny weight/gate vectors, and
+emits one [block_m] output row. The reduction over clients is a [1,C]x[C,bm]
+MXU contraction. Memory-bound (arithmetic intensity ~= 1 FLOP/byte), so
+block_m is sized for DMA efficiency (multiples of 512 lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, w_ref, g_ref, o_ref):
+    wg = (w_ref[...] * g_ref[...]).astype(jnp.float32)        # [C]
+    den = jnp.maximum(jnp.sum(wg), 1e-30)
+    u = u_ref[...].astype(jnp.float32)                        # [C, bm]
+    num = jax.lax.dot_general(wg[None, :], u, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)[0]
+    o_ref[...] = (num / den).astype(o_ref.dtype)
+
+
+def fedagg_pallas(updates, weights, gates, *, block_m=2048, interpret=False):
+    """updates: [C, M]; weights, gates: [C] -> [M]."""
+    C, M = updates.shape
+    block_m = min(block_m, M)
+    pad = (-M) % block_m
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    Mp = M + pad
+    nm = Mp // block_m
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((C, block_m), lambda im: (0, im)),
+            pl.BlockSpec((C,), lambda im: (0,)),
+            pl.BlockSpec((C,), lambda im: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda im: (im,)),
+        out_shape=jax.ShapeDtypeStruct((Mp,), updates.dtype),
+        interpret=interpret,
+    )(updates, weights, gates)
+    return out[:M]

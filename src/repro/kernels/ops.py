@@ -1,0 +1,207 @@
+"""jit'd dispatch layer for the Pallas kernels.
+
+Every op has (a) a Pallas TPU kernel (``<name>.py``), (b) a production jnp
+fallback here (chunked / memory-safe, used on CPU and in dry-run lowering),
+and (c) a naive oracle in ``ref.py`` used by tests.
+
+``use_pallas=True`` selects the Pallas path; on a CPU backend the Pallas
+kernels only run in ``interpret=True`` mode (tests do this explicitly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ============================================================ flash attention
+def _flash_attention_jnp(q, k, v, *, causal, window, block_kv, kv_len=None,
+                         scale=None, mm_dtype=None):
+    """Blockwise online-softmax attention (no [S,S] materialization).
+
+    q: [B,Sq,H,hd]; k/v: [B,Skv,KV,hd]; queries occupy the LAST Sq absolute
+    positions of the kv sequence (q_offset = Skv - Sq).
+    mm_dtype: matmul input dtype (e.g. bf16); softmax state stays f32.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    block = min(block_kv, Skv)
+    q_offset = Skv - Sq
+    if Skv % block:                       # pad kv to a block multiple, mask the tail
+        pad = block - Skv % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = Skv
+        Skv += pad
+    nblk = Skv // block
+
+    md = mm_dtype or jnp.float32
+    qf = (q.astype(jnp.float32) * scale).astype(md).reshape(B, Sq, KV, G, hd)
+    kb = k.astype(md).reshape(B, nblk, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.astype(md).reshape(B, nblk, block, KV, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, blk = inp
+        k_pos = blk * block + jnp.arange(block)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kc,
+                       preferred_element_type=jnp.float32)     # [B,KV,G,Sq,blk]
+        mask = jnp.ones((Sq, block), bool)
+        if kv_len is not None:
+            mask = mask & (k_pos[None, :] < kv_len)
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p_, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p_.astype(md), vc,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr[..., None] + pv), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_kv=1024,
+                    kv_len=None, scale=None, use_pallas=False, interpret=False,
+                    mm_dtype=None):
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      kv_len=kv_len, scale=scale, interpret=interpret)
+    return _flash_attention_jnp(q, k, v, causal=causal, window=window,
+                                block_kv=block_kv, kv_len=kv_len, scale=scale,
+                                mm_dtype=mm_dtype)
+
+
+# ============================================================ decode attention
+def _decode_attention_jnp(q, k_cache, v_cache, *, kv_len, scale=None):
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k_cache.shape
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(Skv)[None, :] < kv_len
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bkgqh", w, v_cache.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, kv_len, scale=None,
+                     use_pallas=False, interpret=False):
+    if use_pallas:
+        from repro.kernels.decode_attention import decode_attention_pallas
+        return decode_attention_pallas(q, k_cache, v_cache, kv_len=kv_len,
+                                       scale=scale, interpret=interpret)
+    return _decode_attention_jnp(q, k_cache, v_cache, kv_len=kv_len, scale=scale)
+
+
+# ===================================================================== fedagg
+def _fedagg_jnp(updates, weights, gates):
+    wg = (weights * gates).astype(jnp.float32)
+    num = jnp.einsum("c,cm->m", wg, updates.astype(jnp.float32))
+    den = jnp.maximum(jnp.sum(wg), 1e-30)
+    return (num / den).astype(updates.dtype)
+
+
+def fedagg(updates, weights, gates, *, use_pallas=False, interpret=False):
+    """Gated weighted client aggregation: [C,M],[C],[C] -> [M]."""
+    if use_pallas:
+        from repro.kernels.fedagg import fedagg_pallas
+        return fedagg_pallas(updates, weights, gates, interpret=interpret)
+    return _fedagg_jnp(updates, weights, gates)
+
+
+# ==================================================================== rmsnorm
+def _rmsnorm_jnp(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm(x, scale, *, eps=1e-6, use_pallas=False, interpret=False):
+    if use_pallas:
+        from repro.kernels.rmsnorm import rmsnorm_pallas
+        return rmsnorm_pallas(x, scale, eps=eps, interpret=interpret)
+    return _rmsnorm_jnp(x, scale, eps)
+
+
+# =================================================================== ssm scan
+def _ssm_scan_jnp(x, dt, A, B, C, D, *, chunk=256):
+    """Chunked parallel selective scan (Mamba S6).
+
+    Within a chunk the linear recurrence h_t = a_t h_{t-1} + b_t is solved
+    with an associative scan; chunks are chained with a lax.scan carry.
+    Shapes as in ref.ssm_scan_ref.
+    """
+    Bt, S, Di = x.shape
+    N = A.shape[1]
+    S0 = S
+    chunk = min(chunk, S)
+    if S % chunk:
+        # identity-step padding: dt=0 => a=1, b=0 (state unchanged)
+        pad = chunk - S % chunk
+        p3 = ((0, 0), (0, pad), (0, 0))
+        x, dt, B, C = (jnp.pad(t, p3) for t in (x, dt, B, C))
+        S += pad
+    nch = S // chunk
+    xf = x.astype(jnp.float32).reshape(Bt, nch, chunk, Di).transpose(1, 0, 2, 3)
+    dtf = dt.astype(jnp.float32).reshape(Bt, nch, chunk, Di).transpose(1, 0, 2, 3)
+    Bf = B.astype(jnp.float32).reshape(Bt, nch, chunk, N).transpose(1, 0, 2, 3)
+    Cf = C.astype(jnp.float32).reshape(Bt, nch, chunk, N).transpose(1, 0, 2, 3)
+    Af = A.astype(jnp.float32)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def body(h0, inp):
+        xc, dtc, Bc, Cc = inp                              # [Bt,chunk,...]
+        a = jnp.exp(dtc[..., None] * Af[None, None])       # [Bt,c,Di,N]
+        b = (dtc * xc)[..., None] * Bc[:, :, None, :]      # [Bt,c,Di,N]
+        A_cum, B_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = A_cum * h0[:, None] + B_cum                    # [Bt,c,Di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h, Cc)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((Bt, Di, N), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, (xf, dtf, Bf, Cf))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bt, S, Di)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None]
+    return y[:, :S0].astype(x.dtype)
+
+
+def ssm_scan(x, dt, A, B, C, D, *, chunk=256, use_pallas=False, interpret=False):
+    if use_pallas:
+        from repro.kernels.ssm_scan import ssm_scan_pallas
+        return ssm_scan_pallas(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)
+    return _ssm_scan_jnp(x, dt, A, B, C, D, chunk=chunk)
+
+
+def ssm_step(h, xt, dtt, A, Bt_, Ct):
+    """Single decode step of the selective scan. h:[B,Di,N] -> (h', y[B,Di])."""
+    dA = jnp.exp(dtt[..., None] * A[None].astype(jnp.float32))
+    dB = dtt[..., None] * Bt_[:, None, :].astype(jnp.float32)
+    h = dA * h + dB * xt[..., None].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, Ct.astype(jnp.float32))
+    return h, y

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the *naive, obviously-correct* implementations used by the kernel
+allclose tests (``tests/test_kernels.py``). They deliberately materialize
+full intermediates (e.g. the [Sq, Skv] score matrix) — correctness first.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- attention
+def attention_ref(q, k, v, *, causal=True, window=0, kv_len=None, scale=None):
+    """Naive full-scores GQA attention. q:[B,Sq,H,hd] k/v:[B,Skv,KV,hd]."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    q_offset = Skv - Sq  # queries are the last Sq positions
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if kv_len is not None:
+        mask = mask & (k_pos[None, :] < kv_len)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bkgqh", w, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, *, kv_len, scale=None):
+    """Naive single-token attention against a cache with kv_len valid rows."""
+    return attention_ref(q, k_cache, v_cache, causal=False, kv_len=kv_len, scale=scale)
+
+
+# ------------------------------------------------------------------- fedagg
+def fedagg_ref(updates, weights, gates):
+    """FedALIGN gated weighted aggregation (paper eq. after (14)).
+
+    updates: [C, M]  per-client flattened parameter updates
+    weights: [C]     data fractions p_k (priority mass sums to 1)
+    gates:   [C]     inclusion indicators I_k in {0,1} (priority rows = 1)
+    returns: [M]     sum_k p_k g_k u_k / sum_k p_k g_k
+    """
+    wg = (weights * gates).astype(jnp.float32)
+    num = jnp.einsum("c,cm->m", wg, updates.astype(jnp.float32))
+    den = jnp.sum(wg)
+    return (num / jnp.maximum(den, 1e-30)).astype(updates.dtype)
+
+
+# ------------------------------------------------------------------- rmsnorm
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ ssm scan
+def ssm_scan_ref(x, dt, A, B, C, D):
+    """Sequential selective-scan oracle (Mamba S6).
+
+    x:  [Bt, S, Di]      input sequence
+    dt: [Bt, S, Di]      positive step sizes (already softplus'd)
+    A:  [Di, N]          (negative) state matrix, diagonal over Di
+    B:  [Bt, S, N]       input projection
+    C:  [Bt, S, N]       output projection
+    D:  [Di]             skip
+    returns y: [Bt, S, Di]
+    """
+    Bt, S, Di = x.shape
+    N = A.shape[1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Af, Bf, Cf, Df = (A.astype(jnp.float32), B.astype(jnp.float32),
+                      C.astype(jnp.float32), D.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Btt, Ctt = inp                       # [Bt,Di],[Bt,Di],[Bt,N],[Bt,N]
+        dA = jnp.exp(dtt[..., None] * Af[None])       # [Bt,Di,N]
+        dB = dtt[..., None] * Btt[:, None, :]         # [Bt,Di,N]
+        h = dA * h + dB * xt[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, Ctt)
+        return h, y
+
+    h0 = jnp.zeros((Bt, Di, N), jnp.float32)
+    xs = (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xf * Df[None, None]
+    return y.astype(x.dtype)

@@ -1,0 +1,47 @@
+"""Pallas TPU fused RMSNorm.
+
+Row-tiled: each grid cell normalizes ``block_r`` rows of a [R, D] input in
+one VMEM pass (load, square-reduce, rsqrt, scale, store) instead of the
+4-pass HLO sequence XLA emits for the unfused jnp version. Memory-bound;
+the win is moving x through HBM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)                       # [br, D]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, *, eps=1e-6, block_r=256, interpret=False):
+    """x: [..., D]; scale: [D]."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xr = x.reshape(-1, D)
+    R = xr.shape[0]
+    block_r = min(block_r, R)
+    pad = (-R) % block_r
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    Rp = R + pad
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(Rp // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, D), lambda ir: (ir, 0)),
+            pl.BlockSpec((D,), lambda ir: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, D), lambda ir: (ir, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, D), x.dtype),
+        interpret=interpret,
+    )(xr, scale)
+    return out[:R].reshape(orig_shape)

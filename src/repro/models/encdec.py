@@ -1,0 +1,204 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv feature extractor is STUBBED per the assignment:
+``input_specs()`` feeds precomputed frame embeddings [B, T_frames, d]
+(already conv-downsampled). We implement the transformer backbone: a
+bidirectional encoder over frames and a causal decoder with self- +
+cross-attention. Whisper idioms kept: pre-LayerNorm, GELU MLP, learned
+positional embeddings, no RoPE.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.models.attention import cross_attention, init_cross_attn
+from repro.utils import fold_in_name
+
+
+def _init_self_attn(key, cfg):
+    return init_cross_attn(key, cfg)   # same 4-matrix shape, H == KV
+
+
+def _init_enc_block(key, cfg):
+    return {
+        "norm1": L.init_layernorm(cfg.d_model, cfg.pdtype),
+        "attn": _init_self_attn(fold_in_name(key, "attn"), cfg),
+        "norm2": L.init_layernorm(cfg.d_model, cfg.pdtype),
+        "mlp": L.init_gelu_mlp(fold_in_name(key, "mlp"), cfg.d_model, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def _init_dec_block(key, cfg):
+    return {
+        "norm1": L.init_layernorm(cfg.d_model, cfg.pdtype),
+        "self_attn": _init_self_attn(fold_in_name(key, "sa"), cfg),
+        "norm_x": L.init_layernorm(cfg.d_model, cfg.pdtype),
+        "cross_attn": init_cross_attn(fold_in_name(key, "xa"), cfg),
+        "norm2": L.init_layernorm(cfg.d_model, cfg.pdtype),
+        "mlp": L.init_gelu_mlp(fold_in_name(key, "mlp"), cfg.d_model, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def init(key, cfg):
+    enc_keys = jax.random.split(fold_in_name(key, "enc"), cfg.encoder_layers)
+    dec_keys = jax.random.split(fold_in_name(key, "dec"), cfg.num_layers)
+    return {
+        "embed": L.embed_init(fold_in_name(key, "embed"),
+                              (cfg.vocab_size, cfg.d_model), cfg.pdtype),
+        "pos_enc": L.embed_init(fold_in_name(key, "pe"),
+                                (cfg.num_frames, cfg.d_model), cfg.pdtype),
+        "pos_dec": L.embed_init(fold_in_name(key, "pd"),
+                                (max(cfg.num_frames, 65536), cfg.d_model), cfg.pdtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": L.init_layernorm(cfg.d_model, cfg.pdtype),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "dec_norm": L.init_layernorm(cfg.d_model, cfg.pdtype),
+    }
+
+
+def _self_attn(p, x, cfg, *, causal, positions=None, mode="train", cache=None):
+    """Non-roped MHA used by both stacks; decode maintains a kv cache."""
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    cd = cfg.cdtype
+    q = (x @ p["wq"].astype(cd)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(B, S, H, hd)
+    v = (x @ p["wv"].astype(cd)).reshape(B, S, H, hd)
+    new_cache = None
+    if mode == "decode":
+        pos = positions[-1]
+        slot = pos.astype(jnp.int32)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        kv_len = jnp.minimum(pos + 1, kc.shape[1]).astype(jnp.int32)
+        out = kops.decode_attention(q, kc, vc, kv_len=kv_len, use_pallas=cfg.use_pallas)
+        new_cache = {"k": kc, "v": vc, "len": kv_len}
+    else:
+        out = kops.flash_attention(q, k, v, causal=causal,
+                                   block_kv=cfg.attn_block_kv, use_pallas=cfg.use_pallas)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v, "len": jnp.asarray(S, jnp.int32)}
+    y = out.reshape(B, S, H * hd) @ p["wo"].astype(cd)
+    return y, new_cache
+
+
+def encode(params, frames, cfg):
+    """frames: [B, T, d] stubbed conv-frontend output."""
+    cd = cfg.cdtype
+    T = frames.shape[1]
+    x = frames.astype(cd) + params["pos_enc"][:T].astype(cd)[None]
+
+    def block(x, p):
+        h, _ = _self_attn(p["attn"], L.layernorm(p["norm1"], x), cfg, causal=False)
+        x = x + h
+        x = x + L.gelu_mlp_apply(p["mlp"], L.layernorm(p["norm2"], x), cd)
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["enc_blocks"])
+    return L.layernorm(params["enc_norm"], x)
+
+
+def _cross_kv(p, enc, cfg):
+    """Precompute cross-attention K/V from encoder states (once per request)."""
+    B, T, _ = enc.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    cd = cfg.cdtype
+    k = (enc @ p["wk"].astype(cd)).reshape(B, T, H, hd)
+    v = (enc @ p["wv"].astype(cd)).reshape(B, T, H, hd)
+    return {"k": k, "v": v}
+
+
+def _cross_attn_cached(p, x, ckv, cfg):
+    """Cross-attention against precomputed K/V (decode: no 1500-frame
+    re-projection per generated token)."""
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    cd = cfg.cdtype
+    q = (x @ p["wq"].astype(cd)).reshape(B, S, H, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   ckv["k"].astype(jnp.float32)) * hd ** -0.5
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, ckv["v"].astype(jnp.float32)).astype(cd)
+    return out.reshape(B, S, H * hd) @ p["wo"].astype(cd)
+
+
+def decode_forward(params, tokens, enc_out, cfg, *, mode, positions=None, caches=None):
+    cd = cfg.cdtype
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    x = params["embed"][tokens].astype(cd) + params["pos_dec"][positions].astype(cd)[None]
+
+    def block(carry, scanned):
+        xc = carry
+        p, cache = scanned
+        c_sa = cache["self"] if cache is not None else None
+        h, new_sa = _self_attn(p["self_attn"], L.layernorm(p["norm1"], xc), cfg,
+                               causal=True, positions=positions, mode=mode, cache=c_sa)
+        xc = xc + h
+        xq = L.layernorm(p["norm_x"], xc)
+        if mode == "train":                 # recompute K/V (fused, remat-friendly)
+            xc = xc + cross_attention(p["cross_attn"], xq, enc_out, cfg)
+            return (xc + L.gelu_mlp_apply(p["mlp"], L.layernorm(p["norm2"], xc), cd),
+                    {"self": new_sa})
+        # prefill/decode: cross K/V cached once per request — decoding must
+        # not re-project the 1500 encoder frames per generated token
+        ckv = cache["cross"] if (cache is not None and cache.get("cross")
+                                 is not None) else _cross_kv(p["cross_attn"],
+                                                             enc_out, cfg)
+        xc = xc + _cross_attn_cached(p["cross_attn"], xq, ckv, cfg)
+        xc = xc + L.gelu_mlp_apply(p["mlp"], L.layernorm(p["norm2"], xc), cd)
+        return xc, {"self": new_sa, "cross": ckv}
+
+    if mode == "train" and cfg.remat:
+        block = jax.checkpoint(block)
+
+    if caches is None:
+        x, out_caches = jax.lax.scan(
+            lambda c, p: block(c, (p, None)), x, params["dec_blocks"])
+    else:
+        x, out_caches = jax.lax.scan(block, x, (params["dec_blocks"], caches["dec"]))
+    x = L.layernorm(params["dec_norm"], x)
+    return x, ({"dec": out_caches, "enc_out": enc_out} if mode != "train" else None)
+
+
+def loss_fn(params, batch, cfg):
+    """batch: frames [B,T,d], tokens/labels/mask [B,S]."""
+    enc_out = encode(params, batch["frames"], cfg)
+    hidden, _ = decode_forward(params, batch["tokens"], enc_out, cfg, mode="train")
+    s_loss, s_cnt = L.chunked_softmax_xent(hidden, params["embed"], batch["labels"],
+                                           batch["mask"], cfg.loss_chunk)
+    loss = s_loss / jnp.maximum(s_cnt, 1)
+    return loss, {"task_loss": loss, "aux_loss": jnp.float32(0), "tokens": s_cnt}
+
+
+def make_cache(cfg, batch_size, cache_len):
+    B, H, hd = batch_size, cfg.num_heads, cfg.head_dim
+    cd = cfg.cdtype
+    one = {"self": {"k": jnp.zeros((B, cache_len, H, hd), cd),
+                    "v": jnp.zeros((B, cache_len, H, hd), cd),
+                    "len": jnp.zeros((), jnp.int32)},
+           "cross": {"k": jnp.zeros((B, cfg.num_frames, H, hd), cd),
+                     "v": jnp.zeros((B, cfg.num_frames, H, hd), cd)}}
+    dec = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one)
+    return {"dec": dec, "enc_out": jnp.zeros((B, cfg.num_frames, cfg.d_model), cd)}
+
+
+def prefill(params, batch, cfg):
+    enc_out = encode(params, batch["frames"], cfg)
+    hidden, caches = decode_forward(params, batch["tokens"], enc_out, cfg, mode="prefill")
+    logits = hidden[:, -1].astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return caches, logits
+
+
+def decode_step(params, caches, tokens, pos, cfg):
+    positions = jnp.asarray(pos).reshape(1)
+    hidden, new_caches = decode_forward(params, tokens, caches["enc_out"], cfg,
+                                        mode="decode", positions=positions, caches=caches)
+    logits = hidden[:, -1].astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, new_caches

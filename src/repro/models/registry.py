@@ -1,0 +1,31 @@
+"""Model registry: maps a ModelConfig to its functional implementation."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.models import encdec, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    """Functional model bundle; cfg is pre-bound into every fn."""
+    init: Callable            # (key) -> params
+    loss_fn: Callable         # (params, batch) -> (loss, metrics)
+    prefill: Callable         # (params, batch) -> (caches, last_logits)
+    decode_step: Callable     # (params, caches, tokens, pos) -> (logits, caches)
+    make_cache: Callable      # (batch_size, cache_len) -> caches
+    cfg: Any
+
+
+def get_model(cfg) -> Model:
+    mod = encdec if cfg.encdec else transformer
+    return Model(
+        init=lambda key: mod.init(key, cfg),
+        loss_fn=lambda params, batch: mod.loss_fn(params, batch, cfg),
+        prefill=lambda params, batch: mod.prefill(params, batch, cfg),
+        decode_step=lambda params, caches, tokens, pos: mod.decode_step(
+            params, caches, tokens, pos, cfg),
+        make_cache=lambda batch_size, cache_len: mod.make_cache(cfg, batch_size, cache_len),
+        cfg=cfg,
+    )

@@ -1,0 +1,95 @@
+"""The paper's own experiment models (App. B.1):
+
+  * logreg  — 784x10 logistic regression               (FMNIST)
+  * mlp2    — 784-200-200-47 two-layer network         (balanced EMNIST)
+  * cnn     — 2xconv5x5 (32,64ch) + FC(512x128) + 128x10, batchnorm-free
+              variant with ReLU + Kaiming init          (CIFAR-10)
+  * synth_logreg — 60x10 logistic regression            (SYNTH(a,b))
+
+All return per-example logits; ``loss_fn`` is softmax cross-entropy, the
+loss the paper's FedALIGN alignment statistic uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import fold_in_name
+
+
+def _kaiming(key, shape):
+    fan_in = int(jnp.prod(jnp.asarray(shape[:-1])))
+    return jax.random.normal(key, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+
+
+# ------------------------------------------------------------------- logistic
+def init_logreg(key, in_dim=784, num_classes=10):
+    return {"w": jnp.zeros((in_dim, num_classes), jnp.float32),
+            "b": jnp.zeros((num_classes,), jnp.float32)}
+
+
+def logreg_apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ------------------------------------------------------------------------ mlp
+def init_mlp2(key, in_dim=784, hidden=200, num_classes=47):
+    ks = [fold_in_name(key, n) for n in ("w1", "w2", "w3")]
+    return {
+        "w1": _kaiming(ks[0], (in_dim, hidden)), "b1": jnp.zeros((hidden,)),
+        "w2": _kaiming(ks[1], (hidden, hidden)), "b2": jnp.zeros((hidden,)),
+        "w3": _kaiming(ks[2], (hidden, num_classes)), "b3": jnp.zeros((num_classes,)),
+    }
+
+
+def mlp2_apply(p, x):
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    h = jax.nn.relu(h @ p["w2"] + p["b2"])
+    return h @ p["w3"] + p["b3"]
+
+
+# ------------------------------------------------------------------------ cnn
+def init_cnn(key, num_classes=10):
+    ks = [fold_in_name(key, n) for n in ("c1", "c2", "f1", "f2")]
+    return {
+        "c1": _kaiming(ks[0], (5, 5, 3, 32)), "cb1": jnp.zeros((32,)),
+        "c2": _kaiming(ks[1], (5, 5, 32, 64)), "cb2": jnp.zeros((64,)),
+        "f1": _kaiming(ks[2], (64 * 8 * 8, 128)), "fb1": jnp.zeros((128,)),
+        "f2": _kaiming(ks[3], (128, num_classes)), "fb2": jnp.zeros((num_classes,)),
+    }
+
+
+def cnn_apply(p, x):
+    """x: [B, 32, 32, 3]."""
+    y = jax.lax.conv_general_dilated(x, p["c1"], (1, 1), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["cb1"])
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    y = jax.lax.conv_general_dilated(y, p["c2"], (1, 1), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["cb2"])
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    y = y.reshape(y.shape[0], -1)
+    y = jax.nn.relu(y @ p["f1"] + p["fb1"])
+    return y @ p["f2"] + p["fb2"]
+
+
+# ------------------------------------------------------------------- registry
+SMALL_MODELS = {
+    "logreg": (lambda key: init_logreg(key), logreg_apply),
+    "mlp2": (lambda key: init_mlp2(key), mlp2_apply),
+    "cnn": (lambda key: init_cnn(key), cnn_apply),
+    "synth_logreg": (lambda key: init_logreg(key, in_dim=60, num_classes=10), logreg_apply),
+}
+
+
+def make_loss_fn(apply_fn):
+    """Mean softmax cross-entropy + accuracy. batch: {'x','y'}."""
+    def loss_fn(params, batch):
+        logits = apply_fn(params, batch["x"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+        loss = jnp.mean(logz - gold)
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+        return loss, {"acc": acc}
+    return loss_fn

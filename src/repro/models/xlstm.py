@@ -1,0 +1,280 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential) — arXiv:2405.04517.
+
+TPU adaptation: the mLSTM training path uses a *chunkwise* formulation
+(intra-chunk [c,c] parallel attention-like matrices + inter-chunk recurrent
+[hd,hd] state carried through a lax.scan) rather than the O(S^2) fully
+parallel form — the same memory-hierarchy reasoning as flash attention.
+Exponential gating is stabilized with a running log-max ``m`` exactly as in
+the paper (App. formulas); forget gate uses log-sigmoid.
+
+sLSTM has a true sequential dependency (recurrent R-matrix through h_{t-1})
+and cannot be parallelized over time; it is a lax.scan over steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+from repro.utils import fold_in_name
+
+NEG_INF = -1e30
+
+
+# ===================================================================== mLSTM
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    K = cfg.ssm_conv_dim
+    ks = {n: fold_in_name(key, n) for n in ("up", "q", "k", "v", "if", "down", "conv")}
+    return {
+        "w_up": dense_init(ks["up"], (d, 2 * di), cfg.pdtype),
+        "conv_w": dense_init(ks["conv"], (K, di), cfg.pdtype, scale=K ** -0.5),
+        "conv_b": jnp.zeros((di,), cfg.pdtype),
+        "wq": dense_init(ks["q"], (di, di), cfg.pdtype),
+        "wk": dense_init(ks["k"], (di, di), cfg.pdtype),
+        "wv": dense_init(ks["v"], (di, di), cfg.pdtype),
+        "w_if": dense_init(ks["if"], (di, 2 * H), jnp.float32),
+        "b_if": jnp.zeros((2 * H,), jnp.float32),
+        "gn_scale": jnp.ones((di,), cfg.pdtype),
+        "w_down": dense_init(ks["down"], (di, d), cfg.pdtype),
+    }
+
+
+def _mlstm_qkv_gates(p, xi, cfg):
+    """xi: [B,S,di] -> q,k,v [B,S,H,hd], li,lf [B,S,H] (log gates, fp32)."""
+    from repro.models.ssm import _causal_conv
+    B, S, di = xi.shape
+    H = cfg.num_heads
+    hd = di // H
+    cd = cfg.cdtype
+    xc = jax.nn.silu(_causal_conv(xi, p["conv_w"].astype(cd), p["conv_b"].astype(cd),
+                                  cfg.ssm_conv_dim))
+    q = (xc @ p["wq"].astype(cd)).reshape(B, S, H, hd)
+    k = (xc @ p["wk"].astype(cd)).reshape(B, S, H, hd) * hd ** -0.5
+    v = (xi @ p["wv"].astype(cd)).reshape(B, S, H, hd)
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["b_if"]             # [B,S,2H]
+    li, f_raw = gates[..., :H], gates[..., H:]
+    lf = jax.nn.log_sigmoid(f_raw)
+    return q, k, v, li, lf
+
+
+def _group_norm(h, scale, H):
+    """Per-head normalization of h: [B,S,H,hd] -> [B,S,H*hd]."""
+    B, S, Hh, hd = h.shape
+    hf = h.astype(jnp.float32)
+    mu = jnp.mean(hf, axis=-1, keepdims=True)
+    var = jnp.var(hf, axis=-1, keepdims=True)
+    y = (hf - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (y.reshape(B, S, Hh * hd) * scale.astype(jnp.float32)).astype(h.dtype)
+
+
+def mlstm_chunked(q, k, v, li, lf, state=None, chunk=256):
+    """Chunkwise stabilized mLSTM.
+
+    q/k/v: [B,S,H,hd]; li/lf: [B,S,H].
+    state: (Ct [B,H,hd,hd], nt [B,H,hd], mt [B,H]) or None.
+    Returns (h [B,S,H,hd], state').
+    """
+    B, S, H, hd = q.shape
+    S0 = S
+    chunk = min(chunk, S)
+    if S % chunk:
+        # pad with identity steps: li=-inf (no input), lf=0 (no decay)
+        pad = chunk - S % chunk
+        padt = lambda x, val=0.0: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2),
+                                          constant_values=val)
+        q, k, v = padt(q), padt(k), padt(v)
+        li, lf = padt(li, NEG_INF), padt(lf, 0.0)
+        S += pad
+    nch = S // chunk
+
+    def resh(x, extra):
+        return x.reshape((B, nch, chunk) + extra).transpose((1, 0) + tuple(range(2, x.ndim + 1)))
+
+    qc = resh(q.astype(jnp.float32), (H, hd))     # [nch,B,c,H,hd]
+    kc = resh(k.astype(jnp.float32), (H, hd))
+    vc = resh(v.astype(jnp.float32), (H, hd))
+    lic = resh(li, (H,))                          # [nch,B,c,H]
+    lfc = resh(lf, (H,))
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))                     # s<=t
+
+    def body(carry, inp):
+        Cp, np_, mp = carry
+        qb, kb, vb, lib, lfb = inp
+        F = jnp.cumsum(lfb, axis=1)                                    # [B,c,H] inclusive
+        # in-chunk log weights: w[t,s] = F_t - F_s + li_s  (s<=t)
+        logw = (F[:, :, None] - F[:, None, :] + lib[:, None, :])       # [B,t,s,H]
+        logw = jnp.where(tri[None, :, :, None], logw, NEG_INF)
+        carry_log = F + mp[:, None]                                    # [B,c,H]
+        m_t = jnp.maximum(jnp.max(logw, axis=2), carry_log)            # [B,c,H]
+        w_in = jnp.exp(logw - m_t[:, :, None])                         # [B,t,s,H]
+        w_carry = jnp.exp(carry_log - m_t)                             # [B,c,H]
+
+        qk = jnp.einsum("bthd,bshd->btsh", qb, kb)                     # [B,t,s,H]
+        num_in = jnp.einsum("btsh,bshd->bthd", w_in * qk, vb)
+        num_carry = jnp.einsum("bthd,bhde->bthe", qb, Cp) * w_carry[..., None]
+        den_in = jnp.einsum("btsh,btsh->bth", w_in, qk)
+        den_carry = jnp.einsum("bthd,bhd->bth", qb, np_) * w_carry
+        num = num_in + num_carry
+        den = den_in + den_carry
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # ---- state update to end of chunk -----------------------------------
+        Fc = F[:, -1]                                                  # [B,H]
+        src_log = Fc[:, None] - F + lib                                # [B,c,H]
+        m_out = jnp.maximum(mp + Fc, jnp.max(src_log, axis=1))
+        w_src = jnp.exp(src_log - m_out[:, None])                      # [B,c,H]
+        w_old = jnp.exp(mp + Fc - m_out)                               # [B,H]
+        C_new = (Cp * w_old[..., None, None]
+                 + jnp.einsum("bsh,bshd,bshe->bhde", w_src, kb, vb))
+        n_new = np_ * w_old[..., None] + jnp.einsum("bsh,bshd->bhd", w_src, kb)
+        return (C_new, n_new, m_out), h
+
+    (Cn, nn_, mn), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)[:, :S0]
+    return h.astype(q.dtype), (Cn, nn_, mn)
+
+
+def mlstm_step(q, k, v, li, lf, state):
+    """Single decode step. q/k/v: [B,H,hd]; li/lf: [B,H]."""
+    Cp, np_, mp = state
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    m_new = jnp.maximum(lf + mp, li)
+    fw = jnp.exp(lf + mp - m_new)
+    iw = jnp.exp(li - m_new)
+    C = Cp * fw[..., None, None] + iw[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n = np_ * fw[..., None] + iw[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), (C, n, m_new)
+
+
+def mlstm_block(p, x, cfg, *, mode, cache=None):
+    """x: [B,S,d]. cache (decode): {'conv': [B,K-1,di], 'C','n','m'}."""
+    B, S, d = x.shape
+    di = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    hd = di // H
+    K = cfg.ssm_conv_dim
+    cd = cfg.cdtype
+    u = x @ p["w_up"].astype(cd)
+    xi, z = jnp.split(u, 2, axis=-1)
+
+    if mode in ("train", "prefill"):
+        q, k, v, li, lf = _mlstm_qkv_gates(p, xi, cfg)
+        h, state = mlstm_chunked(q, k, v, li, lf, chunk=cfg.ssm_chunk)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": xi[:, S - (K - 1):].astype(cd),
+                         "C": state[0], "n": state[1], "m": state[2]}
+    else:
+        window = jnp.concatenate([cache["conv"], xi], axis=1)          # [B,K,di]
+        xc_ = jnp.einsum("bkd,kd->bd", window.astype(cd), p["conv_w"].astype(cd))
+        xc_ = jax.nn.silu(xc_ + p["conv_b"].astype(cd))
+        q = (xc_ @ p["wq"].astype(cd)).reshape(B, H, hd)
+        k = (xc_ @ p["wk"].astype(cd)).reshape(B, H, hd) * hd ** -0.5
+        v = (xi[:, 0] @ p["wv"].astype(cd)).reshape(B, H, hd)
+        gates = xc_.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+        li, lf = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+        h, state = mlstm_step(q, k, v, li, lf, (cache["C"], cache["n"], cache["m"]))
+        h = h[:, None]                                                  # [B,1,H,hd]
+        new_cache = {"conv": window[:, 1:], "C": state[0], "n": state[1], "m": state[2]}
+
+    y = _group_norm(h, p["gn_scale"], H) * jax.nn.silu(z)
+    return y @ p["w_down"].astype(cd), new_cache
+
+
+# ===================================================================== sLSTM
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    f = cfg.slstm_proj_factor
+    dff = int(f * d)
+    ks = {n: fold_in_name(key, n) for n in ("w", "r", "conv", "up", "down")}
+    return {
+        "conv_w": dense_init(ks["conv"], (cfg.ssm_conv_dim, d), cfg.pdtype,
+                             scale=cfg.ssm_conv_dim ** -0.5),
+        "conv_b": jnp.zeros((d,), cfg.pdtype),
+        "w_gates": dense_init(ks["w"], (d, 4 * d), jnp.float32),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "r_gates": dense_init(ks["r"], (H, hd, 4 * hd), jnp.float32, scale=hd ** -0.5),
+        "gn_scale": jnp.ones((d,), cfg.pdtype),
+        "w_up": dense_init(ks["up"], (d, 2 * dff), cfg.pdtype),
+        "w_down": dense_init(ks["down"], (dff, d), cfg.pdtype),
+    }
+
+
+def _slstm_cell(p, gx, state, H, hd):
+    """One sLSTM step. gx: [B,4d] input-side gate preactivations."""
+    h, c, n, m = state                                                 # h,c,n: [B,d]; m: [B,d]
+    B = h.shape[0]
+    hr = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hr, p["r_gates"]).reshape(B, 4 * H * hd)
+    g = gx + rec
+    d = H * hd
+    li_raw, f_raw, z_raw, o_raw = jnp.split(g, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + m, li_raw)
+    i_ = jnp.exp(li_raw - m_new)
+    f_ = jnp.exp(lf + m - m_new)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block(p, x, cfg, *, mode, cache=None):
+    """x: [B,S,d]. cache (decode): {'conv', 'h','c','n','m'}."""
+    from repro.models.ssm import _causal_conv
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    K = cfg.ssm_conv_dim
+    cd = cfg.cdtype
+
+    if mode in ("train", "prefill"):
+        xc = jax.nn.silu(_causal_conv(x, p["conv_w"].astype(cd), p["conv_b"].astype(cd), K))
+        gx = xc.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]      # [B,S,4d]
+
+        def step(state, gxt):
+            new = _slstm_cell(p, gxt, state, H, hd)
+            return new, new[0]
+
+        z0 = jnp.zeros((B, d), jnp.float32)
+        state0 = (z0, z0, z0, jnp.full((B, d), NEG_INF, jnp.float32))
+        state, hs = jax.lax.scan(step, state0, gx.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2)                                      # [B,S,d]
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": x[:, S - (K - 1):].astype(cd),
+                         "h": state[0], "c": state[1], "n": state[2], "m": state[3]}
+    else:
+        window = jnp.concatenate([cache["conv"], x.astype(cd)], axis=1)
+        xc_ = jnp.einsum("bkd,kd->bd", window.astype(cd), p["conv_w"].astype(cd))
+        xc_ = jax.nn.silu(xc_ + p["conv_b"].astype(cd))
+        gx = xc_.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+        state = _slstm_cell(p, gx, (cache["h"], cache["c"], cache["n"], cache["m"]), H, hd)
+        h = state[0][:, None]
+        new_cache = {"conv": window[:, 1:], "h": state[0], "c": state[1],
+                     "n": state[2], "m": state[3]}
+
+    h4 = h.reshape(B, -1, H, hd)
+    y = _group_norm(h4, p["gn_scale"], H).astype(cd)
+    u = y @ p["w_up"].astype(cd)
+    a, b = jnp.split(u, 2, axis=-1)
+    return (jax.nn.silu(a) * b) @ p["w_down"].astype(cd), new_cache

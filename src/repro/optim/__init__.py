@@ -1,0 +1,3 @@
+from repro.optim.optimizers import Optimizer, adam, adamw, sgd  # noqa: F401
+from repro.optim.schedules import (constant_schedule, cosine_schedule,  # noqa: F401
+                                   make_schedule, paper_decay_schedule)

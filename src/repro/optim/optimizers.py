@@ -1,0 +1,77 @@
+"""Hand-built functional optimizers (no optax in this container).
+
+``Optimizer`` mirrors the optax GradientTransformation triple but folds the
+parameter update in: ``update(grads, state, params, lr)`` returns
+(new_params, new_state). lr is passed per-call so schedules stay outside.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]      # (grads, state, params, lr) -> (params, state)
+    name: str = "opt"
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """Plain SGD (paper's local solver) with optional momentum."""
+    if momentum == 0.0:
+        def init(params):
+            return ()
+
+        def update(grads, state, params, lr):
+            new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+            return new, state
+    else:
+        def init(params):
+            return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+        def update(grads, state, params, lr):
+            m = jax.tree.map(lambda mi, g: momentum * mi + g.astype(mi.dtype),
+                             state["m"], grads)
+            if nesterov:
+                step = jax.tree.map(lambda g, mi: g.astype(mi.dtype) + momentum * mi,
+                                    grads, m)
+            else:
+                step = m
+            new = jax.tree.map(lambda p, s: p - lr * s.astype(p.dtype), params, step)
+            return new, {"m": m}
+    return Optimizer(init, update, "sgd")
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda p, mi, vi: (p - lr * (mi / bc1) /
+                               (jnp.sqrt(vi / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+    return Optimizer(init, update, "adam")
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    base = adam(b1, b2, eps)
+
+    def update(grads, state, params, lr):
+        decayed = jax.tree.map(lambda p: p * (1 - lr * weight_decay), params)
+        return base.update(grads, state, decayed, lr)
+    return Optimizer(base.init, update, "adamw")

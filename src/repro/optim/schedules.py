@@ -1,0 +1,32 @@
+"""Learning-rate schedules, including the paper's decaying rate
+eta_t = 2 / (mu (t + gamma)), gamma = max{8L/mu, E}  (Theorem 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr):
+    return lambda t: jnp.float32(lr)
+
+
+def paper_decay_schedule(mu: float, gamma: float):
+    """eta_t = 2 / (mu (t + gamma)) — the Theorem-1 rate."""
+    return lambda t: 2.0 / (mu * (jnp.asarray(t, jnp.float32) + gamma))
+
+
+def cosine_schedule(peak, total_steps, warmup=0):
+    def f(t):
+        t = jnp.asarray(t, jnp.float32)
+        warm = peak * t / jnp.maximum(warmup, 1)
+        prog = jnp.clip((t - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = 0.5 * peak * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(t < warmup, warm, cos)
+    return f
+
+
+def make_schedule(fed_cfg):
+    if fed_cfg.lr_schedule == "constant":
+        return constant_schedule(fed_cfg.lr)
+    if fed_cfg.lr_schedule == "paper_decay":
+        return paper_decay_schedule(fed_cfg.mu_strong, fed_cfg.gamma_decay)
+    raise ValueError(fed_cfg.lr_schedule)

@@ -1,0 +1,2 @@
+from repro.sharding.specs import (auto_batch_specs, auto_param_specs,  # noqa: F401
+                                  auto_tree_specs, dp_axes, shaped_with)

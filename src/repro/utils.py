@@ -1,0 +1,76 @@
+"""Small shared utilities: pytree math, PRNG fan-out, parameter counting."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x: Pytree, y: Pytree) -> Pytree:
+    """a * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_dot(a: Pytree, b: Pytree) -> jax.Array:
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return functools.reduce(jnp.add, jax.tree.leaves(leaves))
+
+
+def tree_sq_norm(tree: Pytree) -> jax.Array:
+    return tree_dot(tree, tree)
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def param_count(tree: Pytree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def param_bytes(tree: Pytree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def fold_in_name(key: jax.Array, name: str) -> jax.Array:
+    """Derive a named sub-key deterministically from a string."""
+    h = np.uint32(abs(hash(name)) % (2**31 - 1))
+    return jax.random.fold_in(key, h)
+
+
+def split_like(key: jax.Array, names: list[str]) -> dict[str, jax.Array]:
+    return {n: fold_in_name(key, n) for n in names}
+
+
+def has_nan(tree: Pytree) -> jax.Array:
+    leaves = [jnp.any(jnp.isnan(x)) for x in jax.tree.leaves(tree) if jnp.issubdtype(x.dtype, jnp.floating)]
+    return functools.reduce(jnp.logical_or, leaves, jnp.asarray(False))
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b

@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) for FedALIGN's selection rule and
+renormalized aggregation — the paper's system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import aggregate_clients
+from repro.core.alignment import (epsilon_at, global_loss_from_locals,
+                                  inclusion_gates)
+from repro.configs.base import FedConfig
+
+finite = st.floats(min_value=0.0, max_value=10.0, allow_nan=False)
+
+
+@st.composite
+def client_setup(draw):
+    C = draw(st.integers(2, 16))
+    losses = np.array(draw(st.lists(finite, min_size=C, max_size=C)), np.float32)
+    npri = draw(st.integers(1, C - 1))
+    pm = np.zeros(C, bool)
+    pm[:npri] = True
+    w = np.full(C, 1.0 / npri, np.float32)
+    return jnp.asarray(losses), jnp.asarray(pm), jnp.asarray(w)
+
+
+@given(client_setup(), st.floats(0.0, 5.0, allow_nan=False))
+@settings(max_examples=60, deadline=None)
+def test_gates_binary_and_priority_always_in(setup, eps):
+    losses, pm, w = setup
+    g_loss = global_loss_from_locals(losses, pm, w)
+    gates = inclusion_gates(losses, g_loss, jnp.float32(eps), pm)
+    gates = np.asarray(gates)
+    assert set(np.unique(gates)).issubset({0.0, 1.0})
+    assert np.all(gates[np.asarray(pm)] == 1.0)            # priority always in
+
+
+@given(client_setup())
+@settings(max_examples=40, deadline=None)
+def test_eps_zero_is_priority_only(setup):
+    """Paper §3.2: eps_t = 0 => theta_T = 1, rho_T = 0 => FedAvg-on-priority."""
+    losses, pm, w = setup
+    g_loss = global_loss_from_locals(losses, pm, w)
+    gates = inclusion_gates(losses, g_loss, jnp.float32(0.0), pm)
+    np.testing.assert_array_equal(np.asarray(gates), np.asarray(pm, np.float32))
+
+
+@given(client_setup())
+@settings(max_examples=40, deadline=None)
+def test_eps_inf_includes_everyone(setup):
+    losses, pm, w = setup
+    g_loss = global_loss_from_locals(losses, pm, w)
+    gates = inclusion_gates(losses, g_loss, jnp.float32(1e9), pm)
+    assert np.all(np.asarray(gates) == 1.0)
+
+
+@given(client_setup(), st.floats(0.0, 4.0, allow_nan=False),
+       st.floats(0.0, 4.0, allow_nan=False))
+@settings(max_examples=60, deadline=None)
+def test_gates_monotone_in_eps(setup, e1, e2):
+    """A larger eps can only ADD clients (inclusion is monotone)."""
+    losses, pm, w = setup
+    lo, hi = min(e1, e2), max(e1, e2)
+    g_loss = global_loss_from_locals(losses, pm, w)
+    g_lo = np.asarray(inclusion_gates(losses, g_loss, jnp.float32(lo), pm))
+    g_hi = np.asarray(inclusion_gates(losses, g_loss, jnp.float32(hi), pm))
+    assert np.all(g_hi >= g_lo)
+
+
+@given(client_setup())
+@settings(max_examples=40, deadline=None)
+def test_theta_round_bounds(setup):
+    """1/(1 + sum p_k I_k) in (0, 1] — paper eq. (7) per-round term."""
+    losses, pm, w = setup
+    g_loss = global_loss_from_locals(losses, pm, w)
+    for eps in (0.0, 0.5, 1e9):
+        gates = inclusion_gates(losses, g_loss, jnp.float32(eps), pm)
+        npri = 1.0 - np.asarray(pm, np.float32)
+        theta = 1.0 / (1.0 + float(jnp.sum(npri * w * gates)))
+        assert 0.0 < theta <= 1.0
+        if eps == 0.0:
+            assert theta == 1.0
+
+
+# ------------------------------------------------------ aggregation invariants
+@st.composite
+def stacked_params(draw):
+    C = draw(st.integers(2, 8))
+    dim = draw(st.integers(1, 16))
+    vals = draw(st.lists(st.floats(-5, 5, allow_nan=False, width=32),
+                         min_size=C * dim, max_size=C * dim))
+    return jnp.asarray(np.array(vals, np.float32).reshape(C, dim))
+
+
+@given(stacked_params())
+@settings(max_examples=40, deadline=None)
+def test_aggregate_is_convex_combination(leaf):
+    """Output lies inside the per-coordinate hull of included clients."""
+    C = leaf.shape[0]
+    w = jnp.ones((C,)) / C
+    g = jnp.ones((C,)).at[0].set(1.0)
+    tree = {"p": leaf}
+    out = aggregate_clients(tree, w, g)["p"]
+    assert np.all(np.asarray(out) <= np.asarray(leaf.max(0)) + 1e-5)
+    assert np.all(np.asarray(out) >= np.asarray(leaf.min(0)) - 1e-5)
+
+
+@given(stacked_params())
+@settings(max_examples=40, deadline=None)
+def test_aggregate_identical_clients_identity(leaf):
+    C = leaf.shape[0]
+    same = jnp.broadcast_to(leaf[0], leaf.shape)
+    w = jax.random.uniform(jax.random.PRNGKey(0), (C,)) + 0.1
+    g = jnp.ones((C,))
+    out = aggregate_clients({"p": same}, w, g)["p"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(leaf[0]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_aggregate_renormalization_matches_paper():
+    """w <- (sum_P p_k w_k + sum_notP p_k I_k w_k) / (1 + sum_notP p_k I_k)."""
+    C, dim = 5, 7
+    rng = np.random.default_rng(0)
+    stack = jnp.asarray(rng.normal(size=(C, dim)).astype(np.float32))
+    pm = np.array([1, 1, 0, 0, 0], bool)
+    p = np.array([0.5, 0.5, 0.3, 0.4, 0.3], np.float32)   # priority mass = 1
+    I = np.array([1, 1, 1, 0, 1], np.float32)
+    out = aggregate_clients({"w": stack}, jnp.asarray(p), jnp.asarray(I))["w"]
+    num = sum(p[k] * I[k] * np.asarray(stack[k]) for k in range(C))
+    den = 1.0 + p[2] * 1 + p[4] * 1
+    np.testing.assert_allclose(np.asarray(out), num / den, rtol=1e-5)
+
+
+def test_epsilon_schedules():
+    fed = FedConfig(epsilon=0.4, epsilon_schedule="exp", epsilon_decay=0.1)
+    e0 = float(epsilon_at(fed, 0))
+    e10 = float(epsilon_at(fed, 10))
+    assert abs(e0 - 0.4) < 1e-6 and e10 < e0
+    fed = FedConfig(epsilon=0.4, epsilon_schedule="constant")
+    assert float(epsilon_at(fed, 100)) == np.float32(0.4)

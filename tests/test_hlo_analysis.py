@@ -1,0 +1,62 @@
+"""Scan-aware HLO analyzer: trip-count multiplication must hold on real
+compiled programs (the roofline's correctness depends on it)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_text
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def _scan_matmul(n):
+    def fn(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=n)
+        return y
+    return fn
+
+
+def test_scan_flops_scale_with_trip_count():
+    x = jnp.ones((64, 64))
+    w = jnp.ones((64, 64))
+    f4 = analyze_text(_compiled_text(_scan_matmul(4), x, w))
+    f8 = analyze_text(_compiled_text(_scan_matmul(8), x, w))
+    assert f4["flops"] > 0
+    ratio = f8["flops"] / f4["flops"]
+    assert 1.7 < ratio < 2.3, ratio        # ~2x, not ~1x (XLA's undercount)
+
+
+def test_dot_flops_exact_single_matmul():
+    a = jnp.ones((32, 48))
+    b = jnp.ones((48, 16))
+    agg = analyze_text(_compiled_text(lambda a, b: a @ b, a, b))
+    want = 2 * 32 * 48 * 16
+    assert agg["flops"] == pytest.approx(want, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def fn(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    x = jnp.ones((16, 16))
+    w = jnp.ones((16, 16))
+    agg = analyze_text(_compiled_text(fn, x, w))
+    want = 2 * 16 * 16 * 16 * 15          # 5 x 3 matmuls
+    assert agg["flops"] == pytest.approx(want, rel=0.05)
+
+
+def test_bytes_and_transcendental_nonzero():
+    x = jnp.ones((128, 128))
+    agg = analyze_text(_compiled_text(lambda x: jnp.tanh(x) @ x, x))
+    assert agg["bytes"] > 0
+    assert agg["transc"] >= 128 * 128

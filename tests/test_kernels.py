@@ -1,0 +1,153 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) and the production jnp
+paths, swept over shapes/dtypes, against the pure-jnp oracles in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.fedagg import fedagg_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, dtype=jnp.float32, k=0):
+    return jax.random.normal(jax.random.fold_in(KEY, k), shape).astype(dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,Sq,Skv,H,KV,hd", [
+    (1, 128, 128, 4, 4, 32),      # MHA
+    (2, 128, 128, 8, 2, 64),      # GQA
+    (1, 64, 256, 4, 1, 32),       # MQA, q shorter than kv
+    (2, 256, 256, 6, 2, 16),      # odd head dim grouping
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 48])
+def test_flash_attention(B, Sq, Skv, H, KV, hd, dtype, window):
+    q = rand((B, Sq, H, hd), dtype, 1)
+    k = rand((B, Skv, KV, hd), dtype, 2)
+    v = rand((B, Skv, KV, hd), dtype, 3)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    got_jnp = ops.flash_attention(q, k, v, causal=True, window=window, block_kv=64)
+    got_pal = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                     block_q=64, block_kv=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_jnp, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(got_pal, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_flash_attention_nondivisible_kv():
+    """kv length not a block multiple (whisper's 1500 frames)."""
+    q = rand((1, 96, 4, 32), k=1)
+    k = rand((1, 96, 4, 32), k=2)
+    v = rand((1, 96, 4, 32), k=3)
+    want = ref.attention_ref(q, k, v, causal=False)
+    got = ops.flash_attention(q, k, v, causal=False, block_kv=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------ decode attention
+@pytest.mark.parametrize("B,Skv,H,KV,hd", [
+    (1, 256, 4, 4, 32), (3, 512, 8, 2, 64), (2, 128, 4, 1, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, Skv, H, KV, hd, dtype):
+    q = rand((B, 1, H, hd), dtype, 4)
+    kc = rand((B, Skv, KV, hd), dtype, 5)
+    vc = rand((B, Skv, KV, hd), dtype, 6)
+    kv_len = Skv - 37
+    want = ref.decode_attention_ref(q, kc, vc, kv_len=kv_len)
+    got_jnp = ops.decode_attention(q, kc, vc, kv_len=kv_len)
+    got_pal = decode_attention_pallas(q, kc, vc, kv_len=kv_len,
+                                      block_kv=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_jnp, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(got_pal, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+# --------------------------------------------------------------------- fedagg
+@pytest.mark.parametrize("C,M", [(4, 64), (16, 1000), (60, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedagg(C, M, dtype):
+    u = rand((C, M), dtype, 7)
+    w = jax.random.uniform(jax.random.fold_in(KEY, 8), (C,))
+    g = (jax.random.uniform(jax.random.fold_in(KEY, 9), (C,)) > 0.4).astype(jnp.float32)
+    g = g.at[0].set(1.0)                       # never empty
+    want = ref.fedagg_ref(u, w, g)
+    got_jnp = ops.fedagg(u, w, g)
+    got_pal = fedagg_pallas(u, w, g, block_m=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_jnp, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(got_pal, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_fedagg_one_hot_returns_that_client():
+    u = rand((5, 128), k=10)
+    w = jnp.ones((5,))
+    g = jnp.zeros((5,)).at[3].set(1.0)
+    out = ops.fedagg(u, w, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(u[3]), atol=1e-6)
+
+
+# -------------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("shape", [(4, 37, 128), (2, 256), (1, 5, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = rand(shape, dtype, 11)
+    s = jax.random.uniform(jax.random.fold_in(KEY, 12), (shape[-1],))
+    want = ref.rmsnorm_ref(x, s)
+    got = rmsnorm_pallas(x, s, block_r=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+# ------------------------------------------------------------------- ssm scan
+@pytest.mark.parametrize("Bt,S,Di,N,chunk", [
+    (1, 64, 16, 4, 16), (2, 128, 32, 8, 32), (2, 96, 8, 16, 32),
+])
+def test_ssm_scan(Bt, S, Di, N, chunk):
+    x = rand((Bt, S, Di), k=13) * 0.5
+    dt = jax.nn.softplus(rand((Bt, S, Di), k=14)) * 0.1
+    A = -jnp.exp(rand((Di, N), k=15) * 0.5)
+    B = rand((Bt, S, N), k=16)
+    C = rand((Bt, S, N), k=17)
+    D = rand((Di,), k=18)
+    want = ref.ssm_scan_ref(x, dt, A, B, C, D)
+    got_jnp = ops.ssm_scan(x, dt, A, B, C, D, chunk=chunk)
+    got_pal = ssm_scan_pallas(x, dt, A, B, C, D, chunk=chunk,
+                              block_d=max(Di // 2, 1), interpret=True)
+    np.testing.assert_allclose(np.asarray(got_jnp), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_pal), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_ssm_step_matches_scan():
+    """Sequential decode steps reproduce the chunked scan."""
+    Bt, S, Di, N = 2, 16, 8, 4
+    x = rand((Bt, S, Di), k=19) * 0.5
+    dt = jax.nn.softplus(rand((Bt, S, Di), k=20)) * 0.1
+    A = -jnp.exp(rand((Di, N), k=21) * 0.5)
+    B = rand((Bt, S, N), k=22)
+    C = rand((Bt, S, N), k=23)
+    D = rand((Di,), k=24)
+    want = ref.ssm_scan_ref(x, dt, A, B, C, D)
+    h = jnp.zeros((Bt, Di, N))
+    outs = []
+    for t in range(S):
+        h, y = ops.ssm_step(h, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        outs.append(y + x[:, t] * D[None])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-4)

@@ -1,0 +1,46 @@
+"""Federated batch loader + document packing."""
+import numpy as np
+
+from repro.data.loader import FederatedBatches, pack_token_documents
+
+
+def test_batches_cover_epoch_without_repeats():
+    C, n, d = 3, 12, 4
+    data = {"x": np.arange(C * n * d).reshape(C, n, d),
+            "y": np.arange(C * n).reshape(C, n)}
+    fb = FederatedBatches(data, batch_size=4, seed=0)
+    seen = [set() for _ in range(C)]
+    for _ in range(3):                     # one epoch = 3 batches
+        b = fb.next_batch()
+        assert b["x"].shape == (C, 4, d)
+        for c in range(C):
+            for yv in b["y"][c]:
+                assert yv not in seen[c]   # no repeats within the epoch
+                seen[c].add(int(yv))
+    assert all(len(s) == n for s in seen)
+
+
+def test_batches_reshuffle_across_epochs():
+    data = {"y": np.arange(2 * 8).reshape(2, 8)}
+    fb = FederatedBatches(data, batch_size=8, seed=0)
+    e1 = fb.next_batch()["y"].copy()
+    e2 = fb.next_batch()["y"].copy()
+    assert sorted(e1[0]) == sorted(e2[0])
+    assert not np.array_equal(e1, e2)      # different order
+
+
+def test_pack_token_documents():
+    docs = [np.arange(10, dtype=np.int32), np.arange(7, dtype=np.int32)]
+    rows = pack_token_documents(docs, seq_len=4)
+    assert rows.shape[1] == 5
+    assert rows.shape[0] == 17 // 5
+    flat = np.concatenate(docs)
+    np.testing.assert_array_equal(rows.reshape(-1), flat[:rows.size])
+
+
+def test_pack_short_doc_pads():
+    rows = pack_token_documents([np.arange(3, dtype=np.int32)], seq_len=7,
+                                pad_id=9)
+    assert rows.shape == (1, 8)
+    assert list(rows[0][:3]) == [0, 1, 2]
+    assert all(rows[0][3:] == 9)

@@ -1,0 +1,57 @@
+"""Optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adam, adamw, sgd
+from repro.optim.schedules import (constant_schedule, cosine_schedule,
+                                   paper_decay_schedule)
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("opt", [sgd(), sgd(momentum=0.9),
+                                 sgd(momentum=0.9, nesterov=True),
+                                 adam(), adamw(weight_decay=0.0)])
+def test_optimizers_converge_on_quadratic(opt):
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((3,))}
+    state = opt.init(params)
+    lr = 0.1 if opt.name != "adam" else 0.3
+    for _ in range(200):
+        g = jax.grad(quad_loss)(params)
+        params, state = opt.update(g, state, params, lr)
+    assert float(quad_loss(params)) < 1e-3, opt.name
+
+
+def test_paper_decay_schedule():
+    """eta_t = 2/(mu (t+gamma)) — decays as Theorem 1 requires, and
+    eta_t <= 2 eta_{t+E} (the condition used in Lemma A.4)."""
+    mu, gamma, E = 0.5, 16.0, 5
+    sched = paper_decay_schedule(mu, gamma)
+    for t in range(0, 100, 7):
+        assert float(sched(t)) > float(sched(t + 1))
+        assert float(sched(t)) <= 2 * float(sched(t + E)) + 1e-9
+    assert np.isclose(float(sched(0)), 2 / (mu * gamma))
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1.0, 100, warmup=10)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0, abs=1e-5)
+    assert float(s(100)) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_momentum_matches_manual():
+    opt = sgd(momentum=0.5)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    g1 = {"w": jnp.array([2.0])}
+    params, state = opt.update(g1, state, params, 0.1)
+    assert np.isclose(float(params["w"][0]), 1.0 - 0.1 * 2.0)
+    g2 = {"w": jnp.array([1.0])}
+    params, state = opt.update(g2, state, params, 0.1)
+    # m2 = 0.5*2 + 1 = 2 -> w -= 0.1*2
+    assert np.isclose(float(params["w"][0]), 0.8 - 0.2)

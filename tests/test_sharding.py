@@ -1,0 +1,99 @@
+"""Auto-sharder rules on the production AbstractMesh (no devices needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.models import get_model
+from repro.sharding.specs import (auto_batch_specs, auto_param_specs,
+                                  auto_tree_specs, dp_axes)
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _check_divisible(shapes, specs, mesh):
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(shapes)[0],
+            jax.tree_util.tree_flatten_with_path(specs)[0]):
+        for dim, axis in enumerate(spec):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % size == 0, (path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [MESH, MESH3], ids=["single", "multi"])
+def test_param_specs_divisible_full_configs(arch, mesh):
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = auto_param_specs(shapes, mesh, fsdp=arch in
+                             ("jamba_1_5_large_398b", "llava_next_34b"))
+    _check_divisible(shapes, specs, mesh)
+
+
+def test_model_axis_used_on_big_weights():
+    cfg = get_config("qwen1_5_0_5b")
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = auto_param_specs(shapes, MESH)
+    # attention projections must be tensor-parallel
+    wq_spec = specs["periods"]["l0"]["attn"]["wq"]
+    assert "model" in tuple(wq_spec)
+    # embed sharded too (vocab or d)
+    assert any(x is not None for x in specs["embed"])
+
+
+def test_fsdp_adds_data_axis():
+    cfg = get_config("llava_next_34b")
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs_f = auto_param_specs(shapes, MESH, fsdp=True)
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda s: int("data" in [a for a in s if a]), specs_f,
+        is_leaf=lambda s: isinstance(s, P)))
+    assert sum(leaves) > 0
+
+
+def test_batch_specs():
+    shapes = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+              "odd": jax.ShapeDtypeStruct((3, 5), jnp.float32)}
+    specs = auto_batch_specs(shapes, MESH)
+    assert specs["tokens"] == P(("data",), None) or specs["tokens"] == P(("data",),) \
+        or specs["tokens"][0] == ("data",)
+    assert all(s is None for s in specs["odd"])
+
+
+def test_cache_specs_divisible():
+    cfg = get_config("qwen2_5_3b")       # KV=2: model axis must NOT land on KV
+    model = get_model(cfg)
+    shapes = jax.eval_shape(lambda: model.make_cache(128, 32768))
+    specs = auto_tree_specs(shapes, MESH)
+    _check_divisible(shapes, specs, MESH)
+
+
+def test_cache_specs_batch_one():
+    cfg = get_config("xlstm_125m")
+    model = get_model(cfg)
+    shapes = jax.eval_shape(lambda: model.make_cache(1, 524288))
+    specs = auto_tree_specs(shapes, MESH)
+    _check_divisible(shapes, specs, MESH)
+
+
+def test_expert_parallel_toggle():
+    cfg = get_config("jamba_1_5_large_398b")   # 16 experts == model axis
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    sp = auto_param_specs(shapes, MESH, expert_parallel=True)
+    moe_spec = sp["periods"]["l1"]["moe"]["w_gate"]
+    # stacked periods axis + expert axis
+    assert jax.tree.leaves(moe_spec)[0] is None or True
+    flat = [a for a in moe_spec if a is not None]
+    assert "model" in flat
+    # expert dim (index 1 after the period-stack axis) carries model
+    assert moe_spec[1] == "model"

@@ -1,0 +1,99 @@
+"""Theorem-1 validation on the exactly-solvable quadratic PFL testbed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.theory import (QuadraticPFL, empirical_theta_rho,
+                               make_quadratic_pfl, run_fedalign_gd,
+                               theorem1_bound, theorem1_constants)
+
+_run_fedalign_gd = run_fedalign_gd
+
+
+def test_quadratic_closed_forms():
+    q = make_quadratic_pfl(seed=0)
+    ws = q.w_star()
+    # gradient of the priority objective vanishes at w*
+    grad = sum(q.weights[k] * q.A[k] @ (ws - q.c[k])
+               for k in range(len(q.d)) if q.priority_mask[k])
+    assert np.linalg.norm(grad) < 1e-8
+    assert q.gamma() >= -1e-10
+    L, mu = q.smoothness()
+    assert L >= mu > 0
+
+
+def test_aligned_nonpriority_have_small_gamma_k():
+    q = make_quadratic_pfl(seed=1, n_nonpriority=6,
+                           nonpriority_align=np.linspace(1, 0, 6))
+    gks = [q.gamma_k(k) for k in range(4, 10)]
+    assert gks[0] < gks[-1]          # aligned client -> small Gamma_k
+    assert gks[0] < 0.5
+
+
+def test_theorem1_bound_holds_on_quadratic():
+    """E[F(w_T)] - F* <= (C1 + C2 theta_T Gamma)/(T+gamma) + rho_T with
+    the paper's constants, on a strongly-convex instance (deterministic
+    gradients => sigma = 0)."""
+    q = make_quadratic_pfl(seed=3, n_priority=4, n_nonpriority=6, dim=8)
+    L, mu = q.smoothness()
+    E = 5
+    gamma = max(8 * L / mu, E)
+    lr_fn = lambda t: 2.0 / (mu * (t + gamma))
+    T_rounds = 60
+    w_T, theta_hist, rho_hist = _run_fedalign_gd(q, T_rounds, E, eps=0.5,
+                                                 lr_fn=lr_fn)
+    err = q.F(w_T) - q.F(q.w_star())
+    # G bound: gradients along the trajectory are bounded; use a generous cap
+    G2 = max(np.linalg.norm(q.A[k] @ (np.zeros(8) - q.c[k])) ** 2
+             for k in range(len(q.d))) * 4 + 1.0
+    C1, C2, _ = theorem1_constants(L, mu, sigma=0.0, G=np.sqrt(G2), E=E,
+                                   w0_dist_sq=np.linalg.norm(q.w_star()) ** 2)
+    T = T_rounds * E
+    theta_T, rho_un = empirical_theta_rho(theta_hist, rho_hist, gamma, E)
+    rho_T = 2 * L / mu * rho_un
+    bound = theorem1_bound(T, C1=C1, C2=C2, gamma=gamma, Gamma=q.gamma(),
+                           theta_T=theta_T, rho_T=rho_T)
+    assert err <= bound, (err, bound)
+    assert 0 < theta_T <= 1.0
+
+
+def test_theta_rho_tradeoff_direction():
+    """Larger eps => smaller theta_T (more inclusion) and larger rho_T —
+    the paper's central trade-off (§3.2)."""
+    q = make_quadratic_pfl(seed=4, n_priority=3, n_nonpriority=8, dim=6)
+    L, mu = q.smoothness()
+    E, gamma = 5, max(8 * L / mu, 5)
+    lr_fn = lambda t: 2.0 / (mu * (t + gamma))
+    res = {}
+    for eps in (0.0, 0.3, 3.0, 1e9):
+        _, th, rh = _run_fedalign_gd(q, 30, E, eps, lr_fn)
+        theta_T, rho_un = empirical_theta_rho(th, rh, gamma, E)
+        res[eps] = (theta_T, rho_un)
+    assert res[0.0][0] == pytest.approx(1.0 * 30 * 5 / (30 * 5 + gamma - 2), rel=1e-6)
+    assert res[1e9][0] < res[0.3][0] <= res[0.0][0] + 1e-9
+    assert res[1e9][1] >= res[0.0][1]
+    assert res[0.0][1] == 0.0
+
+
+def test_eps_zero_recovers_fedavg_priority_rate():
+    """With eps=0 FedALIGN == FedAvg-on-priority: same iterates exactly."""
+    q = make_quadratic_pfl(seed=5)
+    L, mu = q.smoothness()
+    lr_fn = lambda t: 2.0 / (mu * (t + max(8 * L / mu, 5)))
+    w_a, _, _ = _run_fedalign_gd(q, 20, 5, eps=0.0, lr_fn=lr_fn)
+    # manual FedAvg over priority clients only
+    C = len(q.d)
+    w = np.zeros(q.c.shape[1])
+    t = 0
+    for r in range(20):
+        locals_ = []
+        for k in range(C):
+            wk = w.copy()
+            for e in range(5):
+                wk = wk - lr_fn(t + e) * (q.A[k] @ (wk - q.c[k]))
+            locals_.append(wk)
+        t += 5
+        wg = q.weights * q.priority_mask
+        w = np.einsum("k,ki->i", wg, np.stack(locals_)) / wg.sum()
+    np.testing.assert_allclose(w_a, w, atol=1e-10)
