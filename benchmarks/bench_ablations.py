@@ -5,6 +5,9 @@
 2. Straggler participation (paper App. A.4): non-priority clients appear
    only every few rounds; FedALIGN must still help.
 3. Server momentum (beyond-paper FedAvgM on aggregated deltas).
+4. Selection strategies (fl/engine.py registry): the paper's fedalign rule
+   vs its budgeted topk_align variant and gradient-similarity grad_sim
+   selection (Tupitsa et al., arXiv:2402.05050) under label noise.
 """
 from __future__ import annotations
 
@@ -66,6 +69,21 @@ def run(fast=True, seeds=(0,)):
                            fedn, eval_every=5)
         rows.append({"ablation": "server_opt", "setting": name,
                      "selection": "fedalign",
+                     "final_acc": round(h.summary()["final_acc"], 4),
+                     "mean_included": round(h.summary()["mean_included"], 2)})
+
+    # 4. selection strategies under noise
+    for name, kw in [
+        ("fedalign", dict(selection="fedalign", epsilon=0.4)),
+        ("topk_align_k3", dict(selection="topk_align", epsilon=0.4, topk=3)),
+        ("grad_sim_0.0", dict(selection="grad_sim", sim_threshold=0.0)),
+        ("grad_sim_0.2", dict(selection="grad_sim", sim_threshold=0.2)),
+    ]:
+        fed = FedConfig(**base, align_stat="loss", **kw)
+        h = run_federation(loss_fn, init_fn(jax.random.PRNGKey(42)), fed,
+                           fedn_hi, eval_every=5)
+        rows.append({"ablation": "selection_strategy", "setting": name,
+                     "selection": kw["selection"],
                      "final_acc": round(h.summary()["final_acc"], 4),
                      "mean_included": round(h.summary()["mean_included"], 2)})
     return rows

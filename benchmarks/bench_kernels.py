@@ -56,6 +56,26 @@ def run(fast=True):
     err = float(jnp.max(jnp.abs(fa(u, w, g) - ref.fedagg_ref(u, w, g))))
     rows.append({"kernel": "fedagg", "us_per_call": round(us, 1),
                  "max_err_vs_oracle": err})
+    # fused multi-leaf aggregation: the whole client-stacked pytree in ONE
+    # fedagg call vs one call per leaf (the production round path)
+    from repro.core.aggregation import aggregate_clients
+    n_leaves = 12
+    leaf_m = M // n_leaves
+    tree = {f"l{i}": jax.random.normal(jax.random.fold_in(KEY, 20 + i),
+                                       (C, leaf_m))
+            for i in range(n_leaves)}
+    agg_fused = jax.jit(lambda t, w, g: aggregate_clients(t, w, g, fused=True))
+    agg_leaf = jax.jit(lambda t, w, g: aggregate_clients(t, w, g, fused=False))
+    us_f = _time(agg_fused, tree, w, g)
+    us_l = _time(agg_leaf, tree, w, g)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+              zip(jax.tree.leaves(agg_fused(tree, w, g)),
+                  jax.tree.leaves(agg_leaf(tree, w, g))))
+    assert err < 1e-5, f"fused aggregation diverged from per-leaf: {err}"
+    rows.append({"kernel": f"fedagg_fused_{n_leaves}leaf",
+                 "us_per_call": round(us_f, 1), "max_err_vs_oracle": err})
+    rows.append({"kernel": f"fedagg_per_leaf_{n_leaves}leaf",
+                 "us_per_call": round(us_l, 1), "max_err_vs_oracle": 0.0})
     # ssm scan
     Bt, S2, Di, N = (2, 512, 64, 16) if fast else (4, 4096, 512, 16)
     x = jax.random.normal(KEY, (Bt, S2, Di)) * 0.5

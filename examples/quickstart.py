@@ -19,12 +19,24 @@ federation = make_synth_federation(seed=0, n_priority=10, n_nonpriority=10,
 init_fn, apply_fn = SMALL_MODELS["synth_logreg"]
 loss_fn = make_loss_fn(apply_fn)
 
-# 3. FedALIGN: eps=0.2 loss-matching, E=5 local epochs, 10% warm-up
+# 3. FedALIGN: eps=0.2 loss-matching, E=5 local epochs, 10% warm-up.
+#    `selection` names any SelectionStrategy registered in fl/engine.py —
+#    try "topk_align" (budgeted inclusion) or "grad_sim" (update-cosine
+#    friends selection); `backend` picks vmap_spatial / scan_temporal
+#    client execution (identical rounds, different hardware schedule).
 fed = FedConfig(num_clients=20, num_priority=10, rounds=60, local_epochs=5,
-                epsilon=0.2, lr=0.1, warmup_frac=0.1, selection="fedalign")
+                epsilon=0.2, lr=0.1, warmup_frac=0.1, selection="fedalign",
+                backend="vmap_spatial")
 
 hist = run_federation(loss_fn, init_fn(jax.random.PRNGKey(42)), fed,
                       federation, eval_every=5, verbose=True)
 s = hist.summary()
 print(f"\nfinal priority-test accuracy: {s['final_acc']:.4f} "
       f"(mean non-priority clients included/round: {s['mean_included']:.1f})")
+
+# 4. one-liner ablation: swap the selection strategy, nothing else changes
+for sel in ("topk_align", "priority_only"):
+    h = run_federation(loss_fn, init_fn(jax.random.PRNGKey(42)),
+                       fed.replace(selection=sel, topk=5), federation,
+                       eval_every=20)
+    print(f"{sel:>14}: final acc {h.summary()['final_acc']:.4f}")

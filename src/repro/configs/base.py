@@ -189,7 +189,15 @@ class FedConfig:
                                       # model (stragglers)
     algorithm: str = "fedavg"         # local solver: fedavg | fedprox
     prox_mu: float = 1.0              # FedProx proximal coefficient
-    selection: str = "fedalign"       # fedalign | all | priority_only
+    selection: str = "fedalign"       # SelectionStrategy name (fl/engine.py
+                                      # registry): fedalign | all |
+                                      # priority_only | topk_align | grad_sim
+    topk: int = 4                     # topk_align budget: at most k best
+                                      # loss-matched non-priority clients
+    sim_threshold: float = 0.0        # grad_sim: min cosine(delta_k, delta_P)
+    backend: str = "vmap_spatial"     # engine execution backend:
+                                      # vmap_spatial (clients in parallel) |
+                                      # scan_temporal (time-multiplexed)
     align_stat: str = "accuracy"      # accuracy (paper experiments) | loss (theory)
     server_opt: str = "none"          # none | momentum (beyond-paper server optimizer)
     server_lr: float = 1.0
@@ -197,6 +205,11 @@ class FedConfig:
     agg_dtype: str = "float32"        # dtype of aggregated client DELTAS on the
                                       # wire (bfloat16 halves FedALIGN's
                                       # aggregation collective — beyond-paper)
+    use_pallas: bool = False          # aggregate via the fedagg Pallas TPU
+                                      # kernel (CPU keeps the jnp lowering)
+    fused_agg: bool = True            # flatten the whole client-stacked pytree
+                                      # to [C, M_total]: ONE fedagg call per
+                                      # round instead of one per leaf
     batch_size: int = 32              # local minibatch
     seed: int = 0
 

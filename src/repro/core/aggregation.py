@@ -2,11 +2,13 @@
 
     w <- sum_k p_k I_k w_k / sum_k p_k I_k
 
-applied leaf-wise over client-stacked parameter pytrees. The inner reduce
-is the ``fedagg`` Pallas kernel on TPU (kernels/fedagg.py); the jnp path
-compiles to one fused contraction per leaf, which under pjit with the
-client axis sharded over (pod, data) lowers to exactly one all-reduce —
-FedALIGN's entire server-side communication.
+over client-stacked parameter pytrees. The default ``fused`` path flattens
+the WHOLE pytree into one [C, M_total] buffer and invokes the ``fedagg``
+kernel (Pallas on TPU, its jnp lowering on CPU) ONCE per round instead of
+once per leaf — one kernel launch, one contraction, and under pjit with the
+client axis sharded over (pod, data) exactly one all-reduce: FedALIGN's
+entire server-side communication. Accumulation is f32 regardless of leaf
+dtype, so fused and per-leaf outputs agree to the cast.
 """
 from __future__ import annotations
 
@@ -16,23 +18,60 @@ import jax.numpy as jnp
 from repro.kernels import ops as kops
 
 
-def aggregate_clients(client_params, weights, gates, *, use_pallas=False):
-    """client_params: pytree with leading client axis C on every leaf."""
-    def agg_leaf(leaf):
-        C = leaf.shape[0]
-        flat = leaf.reshape(C, -1)
-        out = kops.fedagg(flat, weights, gates, use_pallas=use_pallas)
-        return out.reshape(leaf.shape[1:])
-    return jax.tree.map(agg_leaf, client_params)
+def flatten_stacked(client_params, dtype=jnp.float32):
+    """Client-stacked pytree ([C, ...] leaves) -> one [C, M_total] buffer."""
+    leaves = jax.tree.leaves(client_params)
+    C = leaves[0].shape[0]
+    return jnp.concatenate(
+        [leaf.reshape(C, -1).astype(dtype) for leaf in leaves], axis=1)
+
+
+def aggregate_clients(client_params, weights, gates, *, use_pallas=False,
+                      fused=True, interpret=False):
+    """client_params: pytree with leading client axis C on every leaf.
+
+    fused=True (default): one fedagg call on the [C, M_total] flattening;
+    fused=False: one fedagg call per leaf (the pre-fusion path, kept as the
+    parity reference and for incremental/per-leaf sharded layouts)."""
+    leaves, treedef = jax.tree.flatten(client_params)
+    if not leaves:
+        return client_params
+    C = leaves[0].shape[0]
+
+    if not fused:
+        def agg_leaf(leaf):
+            flat = leaf.reshape(C, -1)
+            out = kops.fedagg(flat, weights, gates, use_pallas=use_pallas,
+                              interpret=interpret)
+            return out.reshape(leaf.shape[1:])
+        return jax.tree.map(agg_leaf, client_params)
+
+    # keep a uniform leaf dtype on the wire (bf16 deltas stay bf16 in the
+    # [C, M_total] buffer and its collective); mixed-dtype trees go f32.
+    # fedagg accumulates in f32 either way, so fused == per-leaf numerics.
+    dtypes = {leaf.dtype for leaf in leaves}
+    buf_dtype = dtypes.pop() if len(dtypes) == 1 else jnp.float32
+    sizes = [leaf.size // C for leaf in leaves]
+    buf = flatten_stacked(client_params, dtype=buf_dtype)
+    out = kops.fedagg(buf, weights, gates, use_pallas=use_pallas,
+                      interpret=interpret)
+    agg_leaves, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        agg_leaves.append(
+            out[off:off + size].reshape(leaf.shape[1:]).astype(leaf.dtype))
+        off += size
+    return jax.tree.unflatten(treedef, agg_leaves)
 
 
 def aggregate_updates(global_params, client_params, weights, gates, *,
-                      use_pallas=False, server_lr=1.0):
+                      use_pallas=False, fused=True, interpret=False,
+                      server_lr=1.0):
     """Delta-form aggregation: w <- w + server_lr * agg(w_k - w).
 
     Equivalent to aggregate_clients at server_lr=1 but numerically nicer at
     scale and the natural hook for server-side optimizers (beyond-paper)."""
     deltas = jax.tree.map(lambda ck, g: ck - g[None], client_params, global_params)
-    agg = aggregate_clients(deltas, weights, gates, use_pallas=use_pallas)
+    agg = aggregate_clients(deltas, weights, gates, use_pallas=use_pallas,
+                            fused=fused, interpret=interpret)
     return jax.tree.map(lambda g, d: (g + server_lr * d.astype(g.dtype)),
                         global_params, agg)

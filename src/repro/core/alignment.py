@@ -36,30 +36,22 @@ def epsilon_at(fed, round_idx):
 
 
 def inclusion_gates(local_losses, global_loss, eps, priority_mask, *,
-                    warmup=False, participation_mask=None, selection="fedalign"):
+                    warmup=False, participation_mask=None, selection="fedalign",
+                    topk=4, sim_threshold=0.0, delta_cos=None):
     """I_{k,t} per client. local_losses: [C] F_k(w_t); global_loss: scalar
     F(w_t); priority_mask: [C] bool.
 
-    selection:
-      fedalign      — paper rule (priority always; non-priority loss-matched)
-      all           — FedAvg over everyone (baseline 2)
-      priority_only — FedAvg over priority clients (baseline 1)
+    Back-compat wrapper over the SelectionStrategy registry in fl/engine.py
+    (the single gating implementation). ``selection`` names any registered
+    strategy: fedalign | all | priority_only | topk_align | grad_sim | ...
     """
-    C = local_losses.shape[0]
-    pri = priority_mask.astype(jnp.float32)
-    if selection == "priority_only":
-        gates = pri
-    elif selection == "all":
-        gates = jnp.ones((C,), jnp.float32)
-    elif selection == "fedalign":
-        aligned = (jnp.abs(local_losses - global_loss) < eps).astype(jnp.float32)
-        non_pri = (1.0 - pri) * aligned * (0.0 if warmup else 1.0)
-        gates = pri + non_pri
-    else:
-        raise ValueError(selection)
-    if participation_mask is not None:
-        gates = gates * participation_mask.astype(jnp.float32)
-    return gates
+    from repro.fl import engine
+    ctx = engine.SelectionContext(
+        align_vals=local_losses, global_align=global_loss, eps=eps,
+        priority_mask=priority_mask, participation=participation_mask,
+        warmup=warmup, delta_cos=delta_cos, topk=topk,
+        sim_threshold=sim_threshold)
+    return engine.compute_gates(ctx, selection)
 
 
 def global_loss_from_locals(local_losses, priority_mask, weights):

@@ -1,137 +1,41 @@
-"""FedALIGN communication-round engine (vmap in-silico federation).
+"""FedALIGN communication-round engine — simulator-facing adapter.
+
+The actual round implementation (selection strategies, eps schedule,
+warm-up, participation sampling, execution backends, fused aggregation)
+lives in ``repro.fl.engine``; this module keeps the historical simulator
+entry point so ``fl/simulator.py`` and the paper benchmarks are untouched
+by engine refactors.
 
 One jitted ``round_fn`` executes a full communication round:
 
-  1. server broadcasts w_t (implicit: vmap over the client axis);
+  1. server broadcasts w_t (implicit: vmap/scan over the client axis);
   2. every client evaluates F_k(w_t) on its local data (full batch);
   3. server loss F(w_t) = sum_{k in P} p_k F_k(w_t);
-  4. gates I_{k,t} from the FedALIGN rule (core/alignment.py);
+  4. gates I_{k,t} from the configured SelectionStrategy (fl/engine.py);
   5. E local epochs of minibatch SGD (or FedProx) per client;
-  6. renormalized gated aggregation (core/aggregation.py).
+  6. renormalized gated aggregation (core/aggregation.py, fused fedagg).
 
 Works for any (loss_fn, params) pair — the paper's logreg/2NN/CNN and the
-LM-scale models alike. For pod-scale runs see fl/sharded.py, which maps the
-client axis onto the device mesh instead of vmap.
+LM-scale models alike. For pod-scale pjit runs see fl/sharded.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
 
-from repro.core.aggregation import aggregate_clients
-from repro.core.alignment import epsilon_at, global_loss_from_locals, inclusion_gates
-from repro.optim.schedules import make_schedule
-from repro.utils import tree_axpy
-
-
-def _local_solver(loss_fn, fed):
-    """Returns f(global_params, data, rng, lr) -> local params after E epochs."""
-    E = fed.local_epochs
-    prox_mu = fed.prox_mu if fed.algorithm == "fedprox" else 0.0
-
-    def solve(global_params, data, rng, lr):
-        n = data["y"].shape[0]
-        bs = min(fed.batch_size, n)
-        steps = n // bs
-
-        def epoch(params, ekey):
-            perm = jax.random.permutation(ekey, n)[:steps * bs].reshape(steps, bs)
-
-            def step(p, idx):
-                batch = jax.tree.map(lambda a: a[idx], data)
-                grads = jax.grad(lambda q: loss_fn(q, batch)[0])(p)
-                if prox_mu > 0.0:
-                    grads = jax.tree.map(lambda g, q, w0: g + prox_mu * (q - w0),
-                                         grads, p, global_params)
-                return tree_axpy(-lr, grads, p), None
-
-            params, _ = jax.lax.scan(step, params, perm)
-            return params, None
-
-        ekeys = jax.random.split(rng, E)
-        params, _ = jax.lax.scan(epoch, global_params, ekeys)
-        return params
-
-    return solve
-
-
-def make_round_fn(loss_fn: Callable, fed) -> Callable:
+def make_round_fn(loss_fn: Callable, fed, *, backend: str = None) -> Callable:
     """loss_fn(params, batch)->(loss, metrics); batch={'x','y'} (or tokens).
 
     Returns round_fn(global_params, data, priority_mask, weights, rng,
     round_idx) -> (new_global, stats). ``data`` leaves have leading client
-    axis [C, n, ...]."""
-    solver = _local_solver(loss_fn, fed)
-    sched = make_schedule(fed)
-    warmup_rounds = int(fed.warmup_frac * fed.rounds)
+    axis [C, n, ...]. ``backend`` (default fed.backend) picks vmap_spatial
+    or scan_temporal execution — identical rounds either way."""
+    from repro.fl import engine
+    return engine.make_round_fn(loss_fn, fed, backend=backend)
 
-    def round_fn(global_params, data, priority_mask, weights, rng, round_idx):
-        C = priority_mask.shape[0]
-        lr = sched(round_idx)
-        eps = epsilon_at(fed, round_idx)
 
-        # (2) local loss/accuracy of the *received* model. The paper's
-        # experiments (§3.1 "In practice...") match ACCURACIES with eps=0.2;
-        # the theory matches losses. Both are supported via fed.align_stat.
-        local_losses, local_metrics = jax.vmap(
-            lambda d: loss_fn(global_params, d))(data)
-        if fed.align_stat == "accuracy" and "acc" in local_metrics:
-            align_vals = local_metrics["acc"]
-        else:
-            align_vals = local_losses
-        # (3) global (priority) statistic F(w_t) resp. acc(w_t)
-        g_loss = global_loss_from_locals(local_losses, priority_mask, weights)
-        g_align = global_loss_from_locals(align_vals, priority_mask, weights)
-
-        # participation sampling (paper App. C.3 / A.4)
-        rng, pkey = jax.random.split(rng)
-        if fed.participation < 1.0:
-            part = jax.random.bernoulli(pkey, fed.participation, (C,))
-            # never let the priority set go empty
-            part = part | (jnp.sum(part & priority_mask) == 0) & priority_mask
-        else:
-            part = jnp.ones((C,), bool)
-        if fed.straggler_period > 0:
-            # App. A.4 arbitrary participation: straggler k joins every
-            # (2 + k % period) rounds; priority clients are never stragglers
-            cadence = 2 + jnp.arange(C) % fed.straggler_period
-            available = (round_idx % cadence) == 0
-            part = part & (available | priority_mask)
-
-        warm = round_idx < warmup_rounds
-        gates_open = inclusion_gates(align_vals, g_align, eps, priority_mask,
-                                     warmup=False, participation_mask=part,
-                                     selection=fed.selection)
-        gates_warm = inclusion_gates(align_vals, g_align, eps, priority_mask,
-                                     warmup=True, participation_mask=part,
-                                     selection=fed.selection)
-        gates = jnp.where(warm, gates_warm, gates_open)
-
-        # (5) local training for every client (masked clients train too but
-        #     are dropped at aggregation — fine at simulator scale)
-        rng, lkey = jax.random.split(rng)
-        lkeys = jax.random.split(lkey, C)
-        client_params = jax.vmap(lambda d, k: solver(global_params, d, k, lr))(data, lkeys)
-
-        # (6) renormalized gated aggregation
-        new_global = aggregate_clients(client_params, weights, gates)
-
-        npri = (1.0 - priority_mask.astype(jnp.float32))
-        included_mass = jnp.sum(npri * weights * gates)
-        stats = {
-            "round": round_idx,
-            "lr": lr,
-            "eps": eps,
-            "global_loss": g_loss,
-            "local_losses": local_losses,
-            "gates": gates,
-            "theta_round": 1.0 / (1.0 + included_mass),   # paper eq. (7) term
-            "included_nonpriority": jnp.sum(npri * gates),
-            "warmup": warm.astype(jnp.int32) if hasattr(warm, "astype") else jnp.int32(warm),
-        }
-        return new_global, stats
-
-    return round_fn
+def _local_solver(loss_fn, fed):
+    """Back-compat alias for engine.local_solver (used by the local-only
+    baseline in fl/simulator.py)."""
+    from repro.fl import engine
+    return engine.local_solver(loss_fn, fed)

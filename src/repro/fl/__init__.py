@@ -1,1 +1,4 @@
 from repro.fl.simulator import evaluate, run_federation, run_local_baseline  # noqa: F401
+from repro.fl.engine import (BACKENDS, STRATEGIES, SelectionContext,  # noqa: F401
+                             compute_gates, get_strategy, make_round_fn,
+                             register_strategy)

@@ -1,0 +1,339 @@
+"""Unified federation round engine: pluggable client selection + execution
+backends. The single implementation of FedALIGN's gating, eps schedule,
+warm-up, and participation sampling — `core/round.py` (simulator) and
+`fl/sharded.py` (pjit pod-scale rounds) are thin adapters over this module.
+
+Two orthogonal seams:
+
+* **SelectionStrategy** — who joins the aggregation this round. Decorator-
+  registered (`@register_strategy`); a strategy maps a `SelectionContext`
+  to a [C] {0,1} inclusion vector for *non-priority* clients (priority
+  clients are always in, warm-up and participation are applied uniformly
+  by `compute_gates`). Shipped strategies:
+
+    fedalign      — paper rule (§3.1): |F(w_t) - F_k(w_t)| < eps_t
+    all           — FedAvg over everyone (baseline 2)
+    priority_only — FedAvg over priority clients (baseline 1)
+    topk_align    — budgeted FedALIGN: the k best loss-matched non-priority
+                    clients inside the eps band (ties at the k-th rank all
+                    enter — deterministic, may exceed k on exact ties)
+    grad_sim      — gradient-similarity "friends" selection after Tupitsa
+                    et al. (arXiv:2402.05050): include non-priority client k
+                    iff cosine(delta_k, delta_P) >= sim_threshold, where
+                    delta_P is the priority-weighted mean update
+
+* **Execution backend** — how the client axis is executed:
+
+    vmap_spatial  — clients in parallel via vmap (clients are mesh shards
+                    at pod scale)
+    scan_temporal — clients time-multiplexed via lax.scan (models too big
+                    to replicate per client)
+
+  Both backends produce identical rounds (same PRNG fan-out, same gating,
+  same aggregation) — only the schedule over hardware differs.
+
+Aggregation routes through `core.aggregation.aggregate_clients`, which by
+default fuses the whole client-stacked pytree into one [C, M_total] buffer
+and invokes the `fedagg` kernel once per round (`FedConfig.use_pallas`
+selects the Pallas TPU kernel; `agg_dtype` casts client deltas on the wire).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import aggregate_clients, flatten_stacked
+from repro.core.alignment import epsilon_at, global_loss_from_locals
+from repro.optim.schedules import make_schedule
+from repro.utils import tree_axpy
+
+BACKENDS = ("vmap_spatial", "scan_temporal")
+
+
+# ============================================================ selection seam
+@dataclass
+class SelectionContext:
+    """Everything a SelectionStrategy may look at for one round.
+
+    align_vals/global_align are the paper's matching statistic (losses by
+    theory, accuracies in the experiments — fed.align_stat). delta_cos is
+    only populated when the strategy declares ``needs_deltas`` (it costs a
+    [C, M_total] flatten of the client updates)."""
+    align_vals: Any                    # [C] F_k(w_t) (or acc_k(w_t))
+    global_align: Any                  # scalar F(w_t)
+    eps: Any                           # scalar eps_t
+    priority_mask: Any                 # [C] bool
+    weights: Any = None                # [C] data fractions p_k
+    participation: Any = None          # [C] bool availability, or None
+    warmup: Any = False                # scalar bool: inside warm-up rounds
+    delta_cos: Any = None              # [C] cosine(delta_k, delta_P)
+    topk: int = 4                      # topk_align budget
+    sim_threshold: float = 0.0         # grad_sim cosine threshold
+
+
+STRATEGIES: dict[str, Callable] = {}
+
+
+def register_strategy(name: str, *, needs_deltas: bool = False,
+                      warmup_excludes_nonpriority: bool = True):
+    """Register ``fn(ctx: SelectionContext) -> [C] float32`` under ``name``.
+
+    The function returns the inclusion vector for NON-priority clients;
+    its values at priority positions are ignored. ``needs_deltas`` asks the
+    backend to populate ``ctx.delta_cos``. ``warmup_excludes_nonpriority``
+    controls whether warm-up rounds force priority-only aggregation (True
+    for alignment-style rules; False for the unconditional ``all``)."""
+    def deco(fn):
+        fn.strategy_name = name
+        fn.needs_deltas = needs_deltas
+        fn.warmup_excludes_nonpriority = warmup_excludes_nonpriority
+        STRATEGIES[name] = fn
+        return fn
+    return deco
+
+
+def get_strategy(name: str) -> Callable:
+    try:
+        return STRATEGIES[name]
+    except KeyError:
+        raise ValueError(f"unknown selection strategy {name!r}; "
+                         f"registered: {sorted(STRATEGIES)}") from None
+
+
+@register_strategy("fedalign")
+def _fedalign(ctx):
+    return (jnp.abs(ctx.align_vals - ctx.global_align) < ctx.eps).astype(jnp.float32)
+
+
+@register_strategy("all", warmup_excludes_nonpriority=False)
+def _all(ctx):
+    return jnp.ones(ctx.priority_mask.shape, jnp.float32)
+
+
+@register_strategy("priority_only")
+def _priority_only(ctx):
+    return jnp.zeros(ctx.priority_mask.shape, jnp.float32)
+
+
+@register_strategy("topk_align")
+def _topk_align(ctx):
+    C = ctx.align_vals.shape[0]
+    k = int(ctx.topk)
+    if k <= 0:
+        return jnp.zeros((C,), jnp.float32)
+    diff = jnp.abs(ctx.align_vals - ctx.global_align)
+    cand = ~ctx.priority_mask.astype(bool)
+    if ctx.participation is not None:
+        cand = cand & ctx.participation.astype(bool)
+    ranked = jnp.where(cand, diff, jnp.inf)
+    kth = jnp.sort(ranked)[min(k, C) - 1]
+    return ((ranked <= kth) & (ranked < ctx.eps)).astype(jnp.float32)
+
+
+@register_strategy("grad_sim", needs_deltas=True)
+def _grad_sim(ctx):
+    if ctx.delta_cos is None:
+        raise ValueError("grad_sim needs ctx.delta_cos (client-update cosine "
+                         "similarities); this backend did not provide deltas")
+    return (ctx.delta_cos >= ctx.sim_threshold).astype(jnp.float32)
+
+
+def compute_gates(ctx: SelectionContext, selection: str = "fedalign"):
+    """I_{k,t} per client — THE shared gating implementation.
+
+    Priority clients are always included; the strategy decides non-priority
+    inclusion; warm-up (strategy-dependent) and participation sampling are
+    applied on top."""
+    strat = get_strategy(selection)
+    pri = ctx.priority_mask.astype(jnp.float32)
+    gates = pri + (1.0 - pri) * strat(ctx)
+    if strat.warmup_excludes_nonpriority:
+        gates = jnp.where(jnp.asarray(ctx.warmup), pri, gates)
+    if ctx.participation is not None:
+        gates = gates * ctx.participation.astype(jnp.float32)
+    return gates
+
+
+def cosine_to_priority(flat_deltas, weights, priority_mask):
+    """[C, M] client deltas -> [C] cosine vs the priority-weighted mean delta
+    (the grad_sim statistic; f32 accumulation regardless of input dtype)."""
+    f = flat_deltas.astype(jnp.float32)
+    wp = weights.astype(jnp.float32) * priority_mask.astype(jnp.float32)
+    d_pri = jnp.einsum("c,cm->m", wp, f) / jnp.maximum(jnp.sum(wp), 1e-30)
+    dots = f @ d_pri
+    norms = jnp.sqrt(jnp.sum(f * f, axis=1)) * jnp.sqrt(jnp.sum(d_pri * d_pri))
+    return dots / jnp.maximum(norms, 1e-12)
+
+
+def participation_mask(fed, key, priority_mask, round_idx):
+    """Paper App. C.3 / A.4: Bernoulli participation sampling (priority set
+    never empty) plus straggler cadence (non-priority client k joins every
+    2 + k % period rounds)."""
+    C = priority_mask.shape[0]
+    if fed.participation < 1.0:
+        part = jax.random.bernoulli(key, fed.participation, (C,))
+        part = part | (jnp.sum(part & priority_mask) == 0) & priority_mask
+    else:
+        part = jnp.ones((C,), bool)
+    if fed.straggler_period > 0:
+        cadence = 2 + jnp.arange(C) % fed.straggler_period
+        available = (round_idx % cadence) == 0
+        part = part & (available | priority_mask)
+    return part
+
+
+# ============================================================ local training
+def local_solver(loss_fn, fed):
+    """Returns f(global_params, data, rng, lr) -> local params after E epochs
+    of minibatch SGD (or FedProx when fed.algorithm == 'fedprox')."""
+    E = fed.local_epochs
+    prox_mu = fed.prox_mu if fed.algorithm == "fedprox" else 0.0
+
+    def solve(global_params, data, rng, lr):
+        n = data["y"].shape[0]
+        bs = min(fed.batch_size, n)
+        steps = n // bs
+
+        def epoch(params, ekey):
+            perm = jax.random.permutation(ekey, n)[:steps * bs].reshape(steps, bs)
+
+            def step(p, idx):
+                batch = jax.tree.map(lambda a: a[idx], data)
+                grads = jax.grad(lambda q: loss_fn(q, batch)[0])(p)
+                if prox_mu > 0.0:
+                    grads = jax.tree.map(lambda g, q, w0: g + prox_mu * (q - w0),
+                                         grads, p, global_params)
+                return tree_axpy(-lr, grads, p), None
+
+            params, _ = jax.lax.scan(step, params, perm)
+            return params, None
+
+        ekeys = jax.random.split(rng, E)
+        params, _ = jax.lax.scan(epoch, global_params, ekeys)
+        return params
+
+    return solve
+
+
+# ============================================================ backend seam
+def _eval_vmap(loss_fn, params, data):
+    return jax.vmap(lambda d: loss_fn(params, d))(data)
+
+
+def _eval_scan(loss_fn, params, data):
+    return jax.lax.map(lambda d: loss_fn(params, d), data)
+
+
+def _train_vmap(solver, global_params, data, keys, lr):
+    return jax.vmap(lambda d, k: solver(global_params, d, k, lr))(data, keys)
+
+
+def _train_scan(solver, global_params, data, keys, lr):
+    def body(carry, inp):
+        d, k = inp
+        return carry, solver(global_params, d, k, lr)
+
+    _, stacked = jax.lax.scan(body, 0, (data, keys))
+    return stacked
+
+
+_BACKENDS = {
+    "vmap_spatial": (_eval_vmap, _train_vmap),
+    "scan_temporal": (_eval_scan, _train_scan),
+}
+
+
+# ============================================================ the round
+def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics); batch = {'x','y'} (or tokens).
+
+    Returns round_fn(global_params, data, priority_mask, weights, rng,
+    round_idx) -> (new_global, stats). ``data`` leaves have leading client
+    axis [C, n, ...]. ``backend`` defaults to ``fed.backend``; both backends
+    produce identical rounds."""
+    backend = backend or fed.backend
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")
+    eval_clients, train_clients = _BACKENDS[backend]
+    strategy = get_strategy(fed.selection)
+    solver = local_solver(loss_fn, fed)
+    sched = make_schedule(fed)
+    warmup_rounds = int(fed.warmup_frac * fed.rounds)
+    agg_kw = dict(use_pallas=fed.use_pallas, fused=fed.fused_agg)
+
+    def round_fn(global_params, data, priority_mask, weights, rng, round_idx):
+        C = priority_mask.shape[0]
+        lr = sched(round_idx)
+        eps = epsilon_at(fed, round_idx)
+
+        # (2) local loss/accuracy of the *received* model. The paper's
+        # experiments (§3.1 "In practice...") match ACCURACIES with eps=0.2;
+        # the theory matches losses. Both are supported via fed.align_stat.
+        local_losses, local_metrics = eval_clients(loss_fn, global_params, data)
+        if fed.align_stat == "accuracy" and "acc" in local_metrics:
+            align_vals = local_metrics["acc"]
+        else:
+            align_vals = local_losses
+        # (3) global (priority) statistic F(w_t) resp. acc(w_t)
+        g_loss = global_loss_from_locals(local_losses, priority_mask, weights)
+        g_align = global_loss_from_locals(align_vals, priority_mask, weights)
+
+        # participation sampling (paper App. C.3 / A.4)
+        rng, pkey = jax.random.split(rng)
+        part = participation_mask(fed, pkey, priority_mask, round_idx)
+
+        # (5) E local epochs per client (masked clients train too but are
+        #     dropped at aggregation — fine at simulator scale)
+        rng, lkey = jax.random.split(rng)
+        lkeys = jax.random.split(lkey, C)
+        client_params = train_clients(solver, global_params, data, lkeys, lr)
+
+        delta_cos = None
+        if strategy.needs_deltas:
+            deltas = jax.tree.map(lambda ck, g: ck - g[None],
+                                  client_params, global_params)
+            delta_cos = cosine_to_priority(flatten_stacked(deltas),
+                                           weights, priority_mask)
+
+        # (4) gates from the selection strategy (core/alignment rule et al.)
+        warm = round_idx < warmup_rounds
+        ctx = SelectionContext(align_vals=align_vals, global_align=g_align,
+                               eps=eps, priority_mask=priority_mask,
+                               weights=weights, participation=part,
+                               warmup=warm, delta_cos=delta_cos,
+                               topk=fed.topk, sim_threshold=fed.sim_threshold)
+        gates = compute_gates(ctx, fed.selection)
+
+        # (6) renormalized gated aggregation — one fused fedagg per round
+        if fed.agg_dtype != "float32":
+            # aggregate client DELTAS on the wire in reduced precision:
+            # w <- w + agg(cast(w_k - w)); halves the server all-reduce
+            ad = jnp.dtype(fed.agg_dtype)
+            wire = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
+                                client_params, global_params)
+            agg = aggregate_clients(wire, weights, gates, **agg_kw)
+            new_global = jax.tree.map(
+                lambda g, d: (g + d.astype(jnp.float32)).astype(g.dtype),
+                global_params, agg)
+        else:
+            new_global = aggregate_clients(client_params, weights, gates, **agg_kw)
+
+        npri = (1.0 - priority_mask.astype(jnp.float32))
+        included_mass = jnp.sum(npri * weights * gates)
+        stats = {
+            "round": round_idx,
+            "lr": lr,
+            "eps": eps,
+            "global_loss": g_loss,
+            "local_losses": local_losses,
+            "gates": gates,
+            "theta_round": 1.0 / (1.0 + included_mass),   # paper eq. (7) term
+            "included_nonpriority": jnp.sum(npri * gates),
+            "warmup": warm.astype(jnp.int32) if hasattr(warm, "astype") else jnp.int32(warm),
+        }
+        return new_global, stats
+
+    return round_fn

@@ -16,7 +16,13 @@ Two execution modes, chosen by model size (DESIGN.md §3):
 
 The server statistic F(w_t) is computed on a server-held global batch
 (paper §3.1: "the server transmits ... also its associated loss"), so the
-gate needs no second pass over clients.
+gate needs no second pass over clients. Gating itself comes from the
+SelectionStrategy registry in fl/engine.py — the SAME implementation the
+in-silico simulator uses. The temporal mode runs a cheap eval pre-pass
+over the cohort (one forward per client, negligible next to E local
+steps) so rank-based strategies (topk_align) see every client's loss
+before any gate is fixed; delta-based strategies (grad_sim) need client
+updates resident and are spatial-only.
 """
 from __future__ import annotations
 
@@ -26,7 +32,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import aggregate_clients
+from repro.core.aggregation import aggregate_clients, flatten_stacked
+from repro.core.alignment import epsilon_at
+from repro.fl import engine
 from repro.utils import tree_axpy, tree_cast
 
 FSDP_ARCHS = {"jamba-1.5-large-398b", "llava-next-34b"}
@@ -36,23 +44,31 @@ def needs_fsdp(cfg) -> bool:
     return cfg.name in FSDP_ARCHS
 
 
-def _local_steps(model, params, batch, lr, n_steps):
-    """E local SGD steps on one client's batch. Returns (params', F_k(w_t))."""
-    loss0, _ = model.loss_fn(params, batch)
-
+def _train_steps(model, params, batch, lr, n_steps):
+    """E local SGD steps on one client's batch."""
     def step(p, _):
         loss, grads = jax.value_and_grad(
             lambda q: model.loss_fn(q, batch)[0])(p)
         return tree_axpy(-lr, grads, p), loss
 
     params, _ = jax.lax.scan(step, params, None, length=n_steps)
-    return params, loss0
+    return params
 
 
-def _gates(local_losses, server_loss, eps, priority_mask):
-    pri = priority_mask.astype(jnp.float32)
-    aligned = (jnp.abs(local_losses - server_loss) < eps).astype(jnp.float32)
-    return pri + (1.0 - pri) * aligned
+def _local_steps(model, params, batch, lr, n_steps):
+    """Local training plus F_k(w_t) of the *received* model (the paper's
+    matching statistic). Returns (params', loss0)."""
+    loss0, _ = model.loss_fn(params, batch)
+    return _train_steps(model, params, batch, lr, n_steps), loss0
+
+
+def _gate_ctx(fed, local_losses, server_loss, pm, w, delta_cos=None):
+    """SelectionContext for one pod-scale round. The sharded round_step has
+    no round index, so eps_t is the schedule at t=0 (== fed.epsilon)."""
+    return engine.SelectionContext(
+        align_vals=local_losses, global_align=server_loss,
+        eps=epsilon_at(fed, 0), priority_mask=pm, weights=w,
+        delta_cos=delta_cos, topk=fed.topk, sim_threshold=fed.sim_threshold)
 
 
 def make_spatial_round(model, fed, num_clients: int):
@@ -63,6 +79,8 @@ def make_spatial_round(model, fed, num_clients: int):
     """
     E = fed.local_epochs
     lr = fed.lr
+    strategy = engine.get_strategy(fed.selection)
+    agg_kw = dict(use_pallas=fed.use_pallas, fused=fed.fused_agg)
 
     def round_step(params, batch):
         client_batch = batch["clients"]
@@ -74,19 +92,28 @@ def make_spatial_round(model, fed, num_clients: int):
         client_params, local_losses = jax.vmap(
             lambda cb: _local_steps(model, params, cb, lr, E))(client_batch)
 
-        gates = _gates(local_losses, server_loss, jnp.float32(fed.epsilon), pm)
+        delta_cos = None
+        if strategy.needs_deltas:
+            deltas = jax.tree.map(lambda ck, g: ck - g[None],
+                                  client_params, params)
+            delta_cos = engine.cosine_to_priority(flatten_stacked(deltas),
+                                                  w, pm)
+
+        gates = engine.compute_gates(
+            _gate_ctx(fed, local_losses, server_loss, pm, w, delta_cos),
+            fed.selection)
         if fed.agg_dtype != "float32":
             # aggregate client DELTAS on the wire in reduced precision:
             # w <- w + agg(cast(w_k - w)); halves FedALIGN's server all-reduce
             ad = jnp.dtype(fed.agg_dtype)
             deltas = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
                                   client_params, params)
-            agg = aggregate_clients(deltas, w, gates)
+            agg = aggregate_clients(deltas, w, gates, **agg_kw)
             new_params = jax.tree.map(
                 lambda g, d: (g + d.astype(jnp.float32)).astype(g.dtype),
                 params, agg)
         else:
-            new_params = aggregate_clients(client_params, w, gates)
+            new_params = aggregate_clients(client_params, w, gates, **agg_kw)
             new_params = jax.tree.map(lambda n, p: n.astype(p.dtype),
                                       new_params, params)
         stats = {
@@ -108,32 +135,44 @@ def make_temporal_round(model, fed, cohort: int):
     """
     E = fed.local_epochs
     lr = fed.lr
+    strategy = engine.get_strategy(fed.selection)
+    if strategy.needs_deltas:
+        raise NotImplementedError(
+            f"selection {fed.selection!r} needs client deltas resident in "
+            "memory; the temporal (FSDP) round streams clients one at a "
+            "time — use the spatial round or the engine's vmap_spatial "
+            "backend")
 
     def round_step(params, batch):
         pm = batch["priority_mask"]
         w = batch["weights"]
         server_loss, _ = model.loss_fn(params, batch["server"])
 
+        # eval pre-pass: F_k(w_t) for the whole cohort before any gate is
+        # fixed (rank-based strategies need the full loss vector)
+        local_losses = jax.lax.map(
+            lambda cb: model.loss_fn(params, cb)[0], batch["clients"])
+        gates = engine.compute_gates(
+            _gate_ctx(fed, local_losses, server_loss, pm, w), fed.selection)
+
         def per_client(carry, inp):
             acc_num, acc_den = carry
-            cbatch, pm_k, w_k = inp
-            p_k, loss0 = _local_steps(model, params, cbatch, lr, E)
-            gate = _gates(loss0[None], server_loss, jnp.float32(fed.epsilon),
-                          pm_k[None])[0]
+            cbatch, w_k, gate = inp
+            p_k = _train_steps(model, params, cbatch, lr, E)
             wg = w_k * gate
             acc_num = jax.tree.map(
                 lambda a, pk: a + wg * pk.astype(jnp.float32), acc_num, p_k)
-            return (acc_num, acc_den + wg), (loss0, gate)
+            return (acc_num, acc_den + wg), None
 
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (num, den), (losses, gates) = jax.lax.scan(
+        (num, den), _ = jax.lax.scan(
             per_client, (zeros, jnp.float32(0)),
-            (batch["clients"], pm, w))
+            (batch["clients"], w, gates))
         new_params = jax.tree.map(
             lambda n, p: (n / jnp.maximum(den, 1e-30)).astype(p.dtype), num, params)
         stats = {
             "server_loss": server_loss,
-            "local_losses": losses,
+            "local_losses": local_losses,
             "gates": gates,
             "theta_round": 1.0 / (1.0 + jnp.sum((1 - pm.astype(jnp.float32)) * w * gates)),
         }

@@ -123,11 +123,17 @@ def _fedagg_jnp(updates, weights, gates):
     return (num / den).astype(updates.dtype)
 
 
-def fedagg(updates, weights, gates, *, use_pallas=False, interpret=False):
-    """Gated weighted client aggregation: [C,M],[C],[C] -> [M]."""
+def fedagg(updates, weights, gates, *, use_pallas=False, interpret=False,
+           block_m=2048):
+    """Gated weighted client aggregation: [C,M],[C],[C] -> [M].
+
+    The fused aggregation path (core/aggregation.py) calls this ONCE per
+    round on the whole-model [C, M_total] flattening, so M may be the full
+    parameter count; the Pallas kernel tiles M in block_m columns."""
     if use_pallas:
         from repro.kernels.fedagg import fedagg_pallas
-        return fedagg_pallas(updates, weights, gates, interpret=interpret)
+        return fedagg_pallas(updates, weights, gates, block_m=block_m,
+                             interpret=interpret)
     return _fedagg_jnp(updates, weights, gates)
 
 

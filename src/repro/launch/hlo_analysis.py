@@ -50,6 +50,34 @@ def _dims_of(blob: str):
     return [int(d) for d in m.group(2).split(",") if d] if m else None
 
 
+def _split_operands(blob: str) -> list[str]:
+    """Split an operand list at top-level commas only. Operand entries may
+    carry inline shapes (``f32[32,48]{1,0} %arg``) whose dims/layout contain
+    commas, so a naive ``split(",")`` truncates them."""
+    parts, cur, depth = [], [], 0
+    for ch in blob:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return parts
+
+
+def _operand_dims(operand: str, shapes: dict):
+    """Dims of one operand: inline shape if present, else symbol table."""
+    if "[" in operand:
+        return _dims_of(operand)
+    name = operand.split(" ")[-1].lstrip("%")
+    return shapes[name][1] if name in shapes else None
+
+
 def _result_bytes(blob: str) -> int:
     """Bytes of the result shape(s) — the text before the op kind."""
     total = 0
@@ -126,13 +154,9 @@ def parse_hlo(text: str) -> tuple[dict, str]:
                 opm = _OPERANDS.search(rest)
                 lhs_dims = None
                 if opm:
-                    first = opm.group(1).split(",")[0].strip()
-                    if "[" in first:
-                        lhs_dims = _dims_of(first)
-                    else:
-                        lhs_name = first.lstrip("%")
-                        if lhs_name in shapes:
-                            lhs_dims = shapes[lhs_name][1]
+                    operands = _split_operands(opm.group(1))
+                    if operands:
+                        lhs_dims = _operand_dims(operands[0], shapes)
                 cm = _LHS_CONTRACT.search(rest)
                 contract = [int(i) for i in cm.group(1).split(",") if i] if cm else []
                 if lhs_dims is not None:
@@ -149,11 +173,9 @@ def parse_hlo(text: str) -> tuple[dict, str]:
                 opm = _OPERANDS.search(rest)
                 kern_dims = None
                 if opm:
-                    parts = [p.strip() for p in opm.group(1).split(",")]
+                    parts = _split_operands(opm.group(1))
                     if len(parts) >= 2:
-                        kn = parts[1].lstrip("%").split(" ")[-1].lstrip("%")
-                        if kn in shapes:
-                            kern_dims = shapes[kn][1]
+                        kern_dims = _operand_dims(parts[1], shapes)
                 if kern_dims and res_dims:
                     out = 1
                     for d in res_dims:

@@ -1,33 +1,35 @@
-"""Property-based tests (hypothesis) for FedALIGN's selection rule and
-renormalized aggregation — the paper's system invariants."""
+"""Property-style tests for FedALIGN's selection rule and renormalized
+aggregation — the paper's system invariants, checked over seeded random
+draws (dependency-free: no hypothesis, tier-1 stays stdlib+jax+pytest)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.aggregation import aggregate_clients
 from repro.core.alignment import (epsilon_at, global_loss_from_locals,
                                   inclusion_gates)
 from repro.configs.base import FedConfig
 
-finite = st.floats(min_value=0.0, max_value=10.0, allow_nan=False)
+SEEDS = list(range(12))
 
 
-@st.composite
-def client_setup(draw):
-    C = draw(st.integers(2, 16))
-    losses = np.array(draw(st.lists(finite, min_size=C, max_size=C)), np.float32)
-    npri = draw(st.integers(1, C - 1))
+def client_setup(seed):
+    """Random federation slice: losses in [0, 10], >=1 priority, >=1 free."""
+    rng = np.random.default_rng(seed)
+    C = int(rng.integers(2, 17))
+    losses = rng.uniform(0.0, 10.0, C).astype(np.float32)
+    npri = int(rng.integers(1, C))
     pm = np.zeros(C, bool)
     pm[:npri] = True
     w = np.full(C, 1.0 / npri, np.float32)
     return jnp.asarray(losses), jnp.asarray(pm), jnp.asarray(w)
 
 
-@given(client_setup(), st.floats(0.0, 5.0, allow_nan=False))
-@settings(max_examples=60, deadline=None)
-def test_gates_binary_and_priority_always_in(setup, eps):
-    losses, pm, w = setup
+@pytest.mark.parametrize("seed", SEEDS)
+def test_gates_binary_and_priority_always_in(seed):
+    losses, pm, w = client_setup(seed)
+    eps = np.random.default_rng(seed + 1000).uniform(0.0, 5.0)
     g_loss = global_loss_from_locals(losses, pm, w)
     gates = inclusion_gates(losses, g_loss, jnp.float32(eps), pm)
     gates = np.asarray(gates)
@@ -35,31 +37,28 @@ def test_gates_binary_and_priority_always_in(setup, eps):
     assert np.all(gates[np.asarray(pm)] == 1.0)            # priority always in
 
 
-@given(client_setup())
-@settings(max_examples=40, deadline=None)
-def test_eps_zero_is_priority_only(setup):
+@pytest.mark.parametrize("seed", SEEDS)
+def test_eps_zero_is_priority_only(seed):
     """Paper §3.2: eps_t = 0 => theta_T = 1, rho_T = 0 => FedAvg-on-priority."""
-    losses, pm, w = setup
+    losses, pm, w = client_setup(seed)
     g_loss = global_loss_from_locals(losses, pm, w)
     gates = inclusion_gates(losses, g_loss, jnp.float32(0.0), pm)
     np.testing.assert_array_equal(np.asarray(gates), np.asarray(pm, np.float32))
 
 
-@given(client_setup())
-@settings(max_examples=40, deadline=None)
-def test_eps_inf_includes_everyone(setup):
-    losses, pm, w = setup
+@pytest.mark.parametrize("seed", SEEDS)
+def test_eps_inf_includes_everyone(seed):
+    losses, pm, w = client_setup(seed)
     g_loss = global_loss_from_locals(losses, pm, w)
     gates = inclusion_gates(losses, g_loss, jnp.float32(1e9), pm)
     assert np.all(np.asarray(gates) == 1.0)
 
 
-@given(client_setup(), st.floats(0.0, 4.0, allow_nan=False),
-       st.floats(0.0, 4.0, allow_nan=False))
-@settings(max_examples=60, deadline=None)
-def test_gates_monotone_in_eps(setup, e1, e2):
+@pytest.mark.parametrize("seed", SEEDS)
+def test_gates_monotone_in_eps(seed):
     """A larger eps can only ADD clients (inclusion is monotone)."""
-    losses, pm, w = setup
+    losses, pm, w = client_setup(seed)
+    e1, e2 = np.random.default_rng(seed + 2000).uniform(0.0, 4.0, 2)
     lo, hi = min(e1, e2), max(e1, e2)
     g_loss = global_loss_from_locals(losses, pm, w)
     g_lo = np.asarray(inclusion_gates(losses, g_loss, jnp.float32(lo), pm))
@@ -67,11 +66,10 @@ def test_gates_monotone_in_eps(setup, e1, e2):
     assert np.all(g_hi >= g_lo)
 
 
-@given(client_setup())
-@settings(max_examples=40, deadline=None)
-def test_theta_round_bounds(setup):
+@pytest.mark.parametrize("seed", SEEDS)
+def test_theta_round_bounds(seed):
     """1/(1 + sum p_k I_k) in (0, 1] — paper eq. (7) per-round term."""
-    losses, pm, w = setup
+    losses, pm, w = client_setup(seed)
     g_loss = global_loss_from_locals(losses, pm, w)
     for eps in (0.0, 0.5, 1e9):
         gates = inclusion_gates(losses, g_loss, jnp.float32(eps), pm)
@@ -83,19 +81,17 @@ def test_theta_round_bounds(setup):
 
 
 # ------------------------------------------------------ aggregation invariants
-@st.composite
-def stacked_params(draw):
-    C = draw(st.integers(2, 8))
-    dim = draw(st.integers(1, 16))
-    vals = draw(st.lists(st.floats(-5, 5, allow_nan=False, width=32),
-                         min_size=C * dim, max_size=C * dim))
-    return jnp.asarray(np.array(vals, np.float32).reshape(C, dim))
+def stacked_params(seed):
+    rng = np.random.default_rng(seed + 3000)
+    C = int(rng.integers(2, 9))
+    dim = int(rng.integers(1, 17))
+    return jnp.asarray(rng.uniform(-5, 5, (C, dim)).astype(np.float32))
 
 
-@given(stacked_params())
-@settings(max_examples=40, deadline=None)
-def test_aggregate_is_convex_combination(leaf):
+@pytest.mark.parametrize("seed", SEEDS)
+def test_aggregate_is_convex_combination(seed):
     """Output lies inside the per-coordinate hull of included clients."""
+    leaf = stacked_params(seed)
     C = leaf.shape[0]
     w = jnp.ones((C,)) / C
     g = jnp.ones((C,)).at[0].set(1.0)
@@ -105,9 +101,9 @@ def test_aggregate_is_convex_combination(leaf):
     assert np.all(np.asarray(out) >= np.asarray(leaf.min(0)) - 1e-5)
 
 
-@given(stacked_params())
-@settings(max_examples=40, deadline=None)
-def test_aggregate_identical_clients_identity(leaf):
+@pytest.mark.parametrize("seed", SEEDS)
+def test_aggregate_identical_clients_identity(seed):
+    leaf = stacked_params(seed)
     C = leaf.shape[0]
     same = jnp.broadcast_to(leaf[0], leaf.shape)
     w = jax.random.uniform(jax.random.PRNGKey(0), (C,)) + 0.1

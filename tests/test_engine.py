@@ -1,0 +1,337 @@
+"""Unified federation engine: fused multi-leaf aggregation parity, backend
+equivalence across selection strategies, strategy semantics, and gate
+regressions (warm-up / partial participation / straggler cadence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core.aggregation import aggregate_clients, flatten_stacked
+from repro.data.synth import make_synth_federation
+from repro.fl import engine
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+INIT, APPLY = SMALL_MODELS["synth_logreg"]
+LOSS = make_loss_fn(APPLY)
+FEDN = make_synth_federation(seed=7, n_priority=3, n_nonpriority=5,
+                             samples_per_client=64)
+DATA = {"x": jnp.asarray(FEDN.x), "y": jnp.asarray(FEDN.y)}
+PM = jnp.asarray(FEDN.priority_mask)
+W = jnp.asarray(FEDN.weights)
+C = int(PM.shape[0])
+
+STRATEGIES = ["fedalign", "all", "priority_only", "topk_align", "grad_sim"]
+
+
+def _tree(C=6, dtype=jnp.float32, seed=0):
+    """Client-stacked pytree with non-divisible leaf sizes (incl. a [C]
+    scalar-per-client leaf) — the fused path must split it back exactly."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    return {
+        "w1": jax.random.normal(ks[0], (C, 7, 13)).astype(dtype),
+        "b1": jax.random.normal(ks[1], (C, 13)).astype(dtype),
+        "w2": jax.random.normal(ks[2], (C, 13, 3)).astype(dtype),
+        "scale": jax.random.normal(ks[3], (C,)).astype(dtype),
+    }
+
+
+def _wg(C=6, seed=1):
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.uniform(k, (C,)) + 0.1
+    g = (jax.random.uniform(jax.random.fold_in(k, 1), (C,)) > 0.4).astype(jnp.float32)
+    g = g.at[0].set(1.0)                     # never all-zero
+    return w, g
+
+
+# ===================================================== fused multi-leaf parity
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_matches_per_leaf_reference(dtype):
+    tree = _tree(dtype=dtype)
+    w, g = _wg()
+    fused = aggregate_clients(tree, w, g, fused=True)
+    per_leaf = aggregate_clients(tree, w, g, fused=False)
+    for a, b in zip(jax.tree.leaves(fused), jax.tree.leaves(per_leaf)):
+        assert a.dtype == b.dtype == dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_pallas_interpret_matches_jnp(dtype):
+    """interpret=True runs the actual Pallas kernel grid on CPU; M_total is
+    not a multiple of the block so the pad/slice path is exercised too."""
+    tree = _tree(dtype=dtype)
+    w, g = _wg()
+    ref = aggregate_clients(tree, w, g, fused=False)
+    pal = aggregate_clients(tree, w, g, fused=True, use_pallas=True,
+                            interpret=True)
+    for a, b in zip(jax.tree.leaves(pal), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_fused_kernel_called_once_per_round():
+    """The fused path must lower to a single [C, M_total] contraction: its
+    HLO contains exactly one dot over the client axis (vs one per leaf)."""
+    tree = _tree()
+    w, g = _wg()
+    text = jax.jit(
+        lambda t, w, g: aggregate_clients(t, w, g, fused=True)
+    ).lower(tree, w, g).compile().as_text()
+    assert text.count(" dot(") == 1
+    text_pl = jax.jit(
+        lambda t, w, g: aggregate_clients(t, w, g, fused=False)
+    ).lower(tree, w, g).compile().as_text()
+    assert text_pl.count(" dot(") == len(jax.tree.leaves(tree))
+
+
+def test_flatten_stacked_shape_and_order():
+    tree = _tree()
+    buf = flatten_stacked(tree)
+    M = sum(leaf.size // 6 for leaf in jax.tree.leaves(tree))
+    assert buf.shape == (6, M) and buf.dtype == jnp.float32
+
+
+# ===================================================== backend equivalence
+def _round_pair(fed, seed=0, r=1):
+    params = INIT(jax.random.PRNGKey(0))
+    outs = []
+    for backend in engine.BACKENDS:
+        fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
+        outs.append(fn(params, DATA, PM, W, jax.random.PRNGKey(seed),
+                       jnp.int32(r)))
+    return outs
+
+
+@pytest.mark.parametrize("selection", STRATEGIES)
+def test_backends_identical_per_strategy(selection):
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
+                    epsilon=0.5, warmup_frac=0.0, align_stat="loss",
+                    selection=selection, topk=2, sim_threshold=0.0)
+    (pv, sv), (pt, st) = _round_pair(fed)
+    np.testing.assert_array_equal(np.asarray(sv["gates"]),
+                                  np.asarray(st["gates"]))
+    np.testing.assert_allclose(np.asarray(sv["local_losses"]),
+                               np.asarray(st["local_losses"]), atol=1e-6)
+    for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pt)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_backends_identical_under_participation_and_stragglers():
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                    epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                    participation=0.6, straggler_period=3)
+    for seed in range(3):
+        (pv, sv), (pt, st) = _round_pair(fed, seed=seed, r=seed)
+        np.testing.assert_array_equal(np.asarray(sv["gates"]),
+                                      np.asarray(st["gates"]))
+        for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pt)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_unknown_backend_and_strategy_raise():
+    fed = FedConfig()
+    with pytest.raises(ValueError, match="backend"):
+        engine.make_round_fn(LOSS, fed, backend="nope")
+    with pytest.raises(ValueError, match="strategy"):
+        engine.make_round_fn(LOSS, fed.replace(selection="nope"))
+
+
+# ===================================================== strategy semantics
+def _ctx(losses, pm, **kw):
+    pm = jnp.asarray(pm, bool)
+    losses = jnp.asarray(losses, jnp.float32)
+    defaults = dict(align_vals=losses, global_align=jnp.float32(0.0),
+                    eps=jnp.float32(1.0), priority_mask=pm)
+    defaults.update(kw)
+    return engine.SelectionContext(**defaults)
+
+
+def test_topk_align_budgets_inclusion():
+    # non-priority diffs: 0.1, 0.2, 0.3, 0.9 — eps=1.0 admits all four,
+    # topk=2 must keep only the two best-matched
+    losses = [0.0, 0.1, 0.2, 0.3, 0.9]
+    pm = [1, 0, 0, 0, 0]
+    gates = engine.compute_gates(_ctx(losses, pm, topk=2), "topk_align")
+    np.testing.assert_array_equal(np.asarray(gates), [1, 1, 1, 0, 0])
+    # a big enough budget degenerates to plain fedalign
+    g_all = engine.compute_gates(_ctx(losses, pm, topk=10), "topk_align")
+    g_fa = engine.compute_gates(_ctx(losses, pm), "fedalign")
+    np.testing.assert_array_equal(np.asarray(g_all), np.asarray(g_fa))
+    # eps still bounds the band: nothing outside it enters even with budget
+    g_eps = engine.compute_gates(_ctx(losses, pm, topk=10,
+                                      eps=jnp.float32(0.25)), "topk_align")
+    np.testing.assert_array_equal(np.asarray(g_eps), [1, 1, 1, 0, 0])
+
+
+def test_topk_align_zero_budget_is_priority_only():
+    losses = [0.0, 0.1, 0.2]
+    pm = [1, 0, 0]
+    gates = engine.compute_gates(_ctx(losses, pm, topk=0), "topk_align")
+    np.testing.assert_array_equal(np.asarray(gates), [1, 0, 0])
+
+
+def test_grad_sim_thresholds_cosine():
+    losses = [0.0, 0.0, 0.0, 0.0]
+    pm = [1, 0, 0, 0]
+    cos = jnp.asarray([1.0, 0.9, 0.1, -0.5])
+    gates = engine.compute_gates(
+        _ctx(losses, pm, delta_cos=cos, sim_threshold=0.5), "grad_sim")
+    np.testing.assert_array_equal(np.asarray(gates), [1, 1, 0, 0])
+    # priority in even when its own cosine is low (always included)
+    gates = engine.compute_gates(
+        _ctx(losses, [0, 1, 0, 1], delta_cos=cos, sim_threshold=0.5),
+        "grad_sim")
+    np.testing.assert_array_equal(np.asarray(gates), [1, 1, 0, 1])
+
+
+def test_grad_sim_without_deltas_raises():
+    with pytest.raises(ValueError, match="delta_cos"):
+        engine.compute_gates(_ctx([0.0, 0.0], [1, 0]), "grad_sim")
+
+
+def test_cosine_to_priority_geometry():
+    # client 0 (priority) defines the direction; client 1 aligned, client 2
+    # orthogonal, client 3 opposed
+    deltas = jnp.asarray([[1.0, 0.0], [2.0, 0.0], [0.0, 3.0], [-1.0, 0.0]])
+    w = jnp.ones((4,)) * 0.25
+    pm = jnp.asarray([1, 0, 0, 0], jnp.float32)
+    cos = np.asarray(engine.cosine_to_priority(deltas, w, pm))
+    np.testing.assert_allclose(cos, [1.0, 1.0, 0.0, -1.0], atol=1e-6)
+
+
+def test_register_strategy_decorator_roundtrip():
+    @engine.register_strategy("_test_even_clients")
+    def even_only(ctx):
+        C = ctx.priority_mask.shape[0]
+        return (jnp.arange(C) % 2 == 0).astype(jnp.float32)
+
+    try:
+        gates = engine.compute_gates(_ctx([0.0] * 4, [1, 0, 0, 0]),
+                                     "_test_even_clients")
+        np.testing.assert_array_equal(np.asarray(gates), [1, 0, 1, 0])
+        # and it is reachable end-to-end through FedConfig.selection
+        fed = FedConfig(num_clients=C, num_priority=3, rounds=4,
+                        local_epochs=1, warmup_frac=0.0, align_stat="loss",
+                        selection="_test_even_clients")
+        fn = jax.jit(engine.make_round_fn(LOSS, fed))
+        _, stats = fn(INIT(jax.random.PRNGKey(0)), DATA, PM, W,
+                      jax.random.PRNGKey(0), jnp.int32(0))
+        got = np.asarray(stats["gates"])
+        want = np.maximum(np.asarray(PM, np.float32),
+                          (np.arange(C) % 2 == 0).astype(np.float32))
+        np.testing.assert_array_equal(got, want)
+    finally:
+        engine.STRATEGIES.pop("_test_even_clients", None)
+
+
+# ===================================================== gate regressions
+def _run_round(fed, r=0, seed=0, backend="vmap_spatial"):
+    fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
+    return fn(INIT(jax.random.PRNGKey(0)), DATA, PM, W,
+              jax.random.PRNGKey(seed), jnp.int32(r))
+
+
+@pytest.mark.parametrize("selection", ["fedalign", "topk_align", "grad_sim"])
+def test_warmup_is_priority_only_for_alignment_strategies(selection):
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, warmup_frac=0.5,
+                    epsilon=1e9, local_epochs=1, align_stat="loss",
+                    selection=selection, topk=C, sim_threshold=-1.0)
+    _, stats = _run_round(fed, r=0)          # warm-up round
+    np.testing.assert_array_equal(np.asarray(stats["gates"]),
+                                  np.asarray(PM, np.float32))
+    assert int(stats["warmup"]) == 1
+    _, stats = _run_round(fed, r=6)          # post warm-up
+    assert np.asarray(stats["gates"]).sum() > np.asarray(PM).sum()
+    assert int(stats["warmup"]) == 0
+
+
+def test_warmup_does_not_gate_select_all():
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, warmup_frac=0.5,
+                    epsilon=1e9, local_epochs=1, align_stat="loss",
+                    selection="all")
+    _, stats = _run_round(fed, r=0)
+    assert np.all(np.asarray(stats["gates"]) == 1.0)
+
+
+def test_partial_participation_masks_gates_and_protects_priority():
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, warmup_frac=0.0,
+                    epsilon=1e9, local_epochs=1, participation=0.4,
+                    align_stat="loss")
+    seen_excluded = False
+    for seed in range(6):
+        _, stats = _run_round(fed, seed=seed)
+        gates = np.asarray(stats["gates"])
+        assert gates[np.asarray(PM)].sum() >= 1      # priority never empty
+        assert set(np.unique(gates)).issubset({0.0, 1.0})
+        if gates.sum() < C:
+            seen_excluded = True
+    assert seen_excluded
+
+
+def test_straggler_cadence_pinned():
+    """Non-priority client k joins every 2 + k % period rounds; priority
+    clients are never stragglers. (App. A.4 arbitrary participation.)"""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=20, warmup_frac=0.0,
+                    epsilon=1e9, local_epochs=1, straggler_period=3,
+                    align_stat="loss")
+    seen = np.stack([np.asarray(_run_round(fed, r=r)[1]["gates"])
+                     for r in range(6)])
+    assert np.all(seen[:, :3] == 1.0)                # priority every round
+    for k in range(3, C):
+        cadence = 2 + k % 3
+        for r in range(6):
+            assert seen[r, k] == (1.0 if r % cadence == 0 else 0.0), (r, k)
+
+
+def test_agg_dtype_bf16_round_close_to_f32():
+    """agg_dtype plumbs through the engine: bf16 wire deltas stay close to
+    the exact f32 aggregation after one round."""
+    fed32 = FedConfig(num_clients=C, num_priority=3, rounds=4, local_epochs=2,
+                      epsilon=1e9, warmup_frac=0.0, align_stat="loss")
+    fed16 = fed32.replace(agg_dtype="bfloat16")
+    p32, _ = _run_round(fed32)
+    p16, _ = _run_round(fed16)
+    num = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in
+              zip(jax.tree.leaves(p32), jax.tree.leaves(p16)))
+    den = sum(float(jnp.sum(jnp.abs(a))) for a in jax.tree.leaves(p32))
+    assert num < 0.02 * max(den, 1e-9), (num, den)
+
+
+# ===================================================== sharded integration
+def test_sharded_uses_engine_gating():
+    """fl/sharded.py must not re-implement gating privately."""
+    import inspect
+    from repro.fl import sharded
+    src = inspect.getsource(sharded)
+    assert "_gates" not in src.replace("compute_gates", "")
+    assert "engine.compute_gates" in src
+
+
+@pytest.mark.parametrize("selection", ["topk_align", "grad_sim"])
+def test_sharded_spatial_new_strategies_smoke(selection):
+    from repro.fl import sharded
+    from tests.test_sharded import MODEL, _batch
+    fed = FedConfig(local_epochs=1, epsilon=1e9, lr=0.05, selection=selection,
+                    topk=1, sim_threshold=-1.0)
+    step = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))
+    params = MODEL.init(jax.random.PRNGKey(0))
+    _, stats = step(params, _batch())
+    gates = np.asarray(stats["gates"])
+    assert set(np.unique(gates)).issubset({0.0, 1.0})
+    assert np.all(gates[:2] == 1.0)                  # priority always in
+    if selection == "topk_align":
+        assert gates[2:].sum() <= 1                  # budget respected
+
+
+def test_sharded_temporal_rejects_delta_strategies():
+    from repro.configs import get_smoke
+    from repro.fl import sharded
+    from repro.models import get_model
+    cfg = get_smoke("qwen1_5_0_5b").replace(remat=False)
+    model = get_model(cfg)
+    fed = FedConfig(local_epochs=1, epsilon=1e9, selection="grad_sim")
+    with pytest.raises(NotImplementedError, match="grad_sim"):
+        sharded.make_temporal_round(model, fed, 4)

@@ -10,8 +10,8 @@ from repro.models import get_model
 from repro.sharding.specs import (auto_batch_specs, auto_param_specs,
                                   auto_tree_specs, dp_axes)
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def _check_divisible(shapes, specs, mesh):
