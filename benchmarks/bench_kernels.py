@@ -15,8 +15,9 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # single warm-up dispatch (block_until_ready walks pytrees, so the
+    # return type never needs probing with a second — compiling — call)
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

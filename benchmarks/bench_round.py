@@ -1,0 +1,113 @@
+"""Round-pipeline benchmark: dense train-everyone vs gate-before-train
+cohort execution (``FedConfig.max_cohort``).
+
+Times full engine rounds at C=64 clients on a small MLP across inclusion
+rates, reporting rounds/sec and the wasted-local-epoch fraction (clients
+that paid E local epochs but were dropped at aggregation). Every timing
+pair is also a correctness pair: the cohort round must reproduce the dense
+round exactly before its timing row is emitted.
+
+    PYTHONPATH=src python benchmarks/bench_round.py [--full] [--out PATH]
+
+emits ``BENCH_round.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.data.synth import make_synth_federation
+from repro.fl import engine
+from repro.models.small import init_mlp2, make_loss_fn, mlp2_apply
+
+CLIENTS = 64
+N_PRIORITY = 2
+
+
+def _time_round(fn, params, data, pm, w, iters):
+    key = jax.random.PRNGKey(0)
+    out = fn(params, data, pm, w, key, jnp.int32(1))
+    jax.block_until_ready(out)                       # compile + warm-up
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(params, data, pm, w, key, jnp.int32(1))
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def run(fast=True):
+    samples = 64 if fast else 256
+    iters = 3 if fast else 8
+    fedn = make_synth_federation(seed=0, n_priority=N_PRIORITY,
+                                 n_nonpriority=CLIENTS - N_PRIORITY,
+                                 samples_per_client=samples)
+    data = {"x": jnp.asarray(fedn.x), "y": jnp.asarray(fedn.y)}
+    pm = jnp.asarray(fedn.priority_mask)
+    w = jnp.asarray(fedn.weights)
+    init_fn = lambda key: init_mlp2(key, in_dim=60, hidden=256, num_classes=10)
+    loss_fn = make_loss_fn(mlp2_apply)
+    params = init_fn(jax.random.PRNGKey(42))
+
+    rows = []
+    for rate in (0.25, 0.5, 1.0):
+        k = round(CLIENTS * rate)
+        # topk_align with a huge eps band pins inclusion to exactly k
+        # (priority + the k - P best-matched non-priority clients)
+        base = FedConfig(num_clients=CLIENTS, num_priority=N_PRIORITY,
+                         rounds=100, local_epochs=5, epsilon=1e9,
+                         warmup_frac=0.0, align_stat="loss",
+                         selection="topk_align", topk=k - N_PRIORITY,
+                         batch_size=32, seed=0)
+        dense_fn = jax.jit(engine.make_round_fn(loss_fn, base))
+        cohort_fn = jax.jit(engine.make_round_fn(loss_fn,
+                                                 base.replace(max_cohort=k)))
+        sec_d, (pd, sd) = _time_round(dense_fn, params, data, pm, w, iters)
+        sec_c, (pc, sc) = _time_round(cohort_fn, params, data, pm, w, iters)
+
+        # correctness before timing is reported: identical gates + params
+        np.testing.assert_array_equal(np.asarray(sd["gates"]),
+                                      np.asarray(sc["gates"]))
+        for a, b in zip(jax.tree.leaves(pd), jax.tree.leaves(pc)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+        included = float(np.asarray(sd["gates"]).sum())
+        for path, sec, trained in (("dense", sec_d, CLIENTS),
+                                   ("cohort", sec_c, k)):
+            rows.append({
+                "path": path,
+                "clients": CLIENTS,
+                "max_cohort": 0 if path == "dense" else k,
+                "target_inclusion_rate": rate,
+                "measured_inclusion_rate": round(included / CLIENTS, 4),
+                "clients_trained": trained,
+                "wasted_local_epoch_frac": round((trained - included)
+                                                 / trained, 4),
+                "sec_per_round": round(sec, 5),
+                "rounds_per_sec": round(1.0 / sec, 2),
+                "speedup_vs_dense": round(sec_d / sec, 2),
+            })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_round.json")
+    args = ap.parse_args()
+    rows = run(fast=not args.full)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    for r in rows:
+        print(r)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ SUITES = [
     ("thm1_theory", "benchmarks.bench_theory"),
     ("ablations", "benchmarks.bench_ablations"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("round_pipeline", "benchmarks.bench_round"),
     ("roofline_single_pod", "benchmarks.roofline"),
 ]
 
@@ -50,6 +51,10 @@ def derived_summary(name: str, rows) -> str:
         if name == "kernels":
             worst = max(r["max_err_vs_oracle"] for r in rows)
             return f"max_oracle_err={worst:.2e}"
+        if name == "round_pipeline":
+            best = max(r["speedup_vs_dense"] for r in rows
+                       if r["path"] == "cohort")
+            return f"best_cohort_speedup={best:.2f}x"
         if name.startswith("roofline"):
             ok = [r for r in rows if r.get("status") == "ok"]
             if not ok:

@@ -198,6 +198,21 @@ class FedConfig:
     backend: str = "vmap_spatial"     # engine execution backend:
                                       # vmap_spatial (clients in parallel) |
                                       # scan_temporal (time-multiplexed)
+    max_cohort: int = 0               # static training-cohort budget K for
+                                      # gate-before-train strategies (those
+                                      # not needing client deltas): gates are
+                                      # computed from the cheap eval pre-pass,
+                                      # the K included clients are gathered
+                                      # into a dense [K, ...] buffer, and only
+                                      # they run E local epochs. 0 disables
+                                      # the gather (train everyone; gated-out
+                                      # updates dropped at aggregation).
+                                      # Overflow policy: if more than K
+                                      # clients gate in, priority clients are
+                                      # kept first, then the best loss-matched
+                                      # non-priority clients; the worst-
+                                      # matched overflow is dropped for the
+                                      # round (deterministic, stable order)
     align_stat: str = "accuracy"      # accuracy (paper experiments) | loss (theory)
     server_opt: str = "none"          # none | momentum (beyond-paper server optimizer)
     server_lr: float = 1.0

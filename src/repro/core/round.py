@@ -12,7 +12,10 @@ One jitted ``round_fn`` executes a full communication round:
   2. every client evaluates F_k(w_t) on its local data (full batch);
   3. server loss F(w_t) = sum_{k in P} p_k F_k(w_t);
   4. gates I_{k,t} from the configured SelectionStrategy (fl/engine.py);
-  5. E local epochs of minibatch SGD (or FedProx) per client;
+  5. E local epochs of minibatch SGD (or FedProx) — gate-before-train:
+     for strategies gated by the eval pre-pass alone, only included
+     clients train (scan cond-skip; dense [K, ...] cohort gather when
+     ``fed.max_cohort > 0``). Delta-based strategies run 5 before 4;
   6. renormalized gated aggregation (core/aggregation.py, fused fedagg).
 
 Works for any (loss_fn, params) pair — the paper's logreg/2NN/CNN and the

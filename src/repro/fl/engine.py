@@ -168,6 +168,52 @@ def cosine_to_priority(flat_deltas, weights, priority_mask):
     return dots / jnp.maximum(norms, 1e-12)
 
 
+def cohort_select(gates, align_vals, global_align, priority_mask, k: int):
+    """Deterministic gather order for the gate-before-train cohort.
+
+    Returns (cohort_idx [K], cohort_gates [K], effective_gates [C]).
+
+    Slots are filled included-first: priority clients, then included
+    non-priority clients ranked by alignment match |F_k - F|, then excluded
+    clients as zero-gate padding (their slot trains but is dropped by the
+    aggregation's gate weighting). Overflow policy — more than K clients
+    gate in — drops the WORST-matched non-priority clients this round
+    (stable sort: ties break by client index, so the order is
+    deterministic). ``effective_gates`` is the [C] inclusion vector the
+    aggregation actually honours (== ``gates`` when nothing overflowed)."""
+    pri = priority_mask.astype(bool)
+    diff = jnp.abs(align_vals - global_align).astype(jnp.float32)
+    rank = jnp.where(pri, -1.0, jnp.minimum(diff, 1e30))
+    order = jnp.argsort(jnp.where(gates > 0, rank, jnp.inf), stable=True)
+    cohort_idx = order[:k]
+    cohort_gates = gates[cohort_idx]
+    eff_gates = jnp.zeros_like(gates).at[cohort_idx].set(cohort_gates)
+    return cohort_idx, cohort_gates, eff_gates
+
+
+def gated_server_update(fed, global_params, client_params, weights, gates):
+    """(6) renormalized gated aggregation into the global params — one fused
+    fedagg per round, honouring ``fed.agg_dtype``'s reduced-precision delta
+    wire format (w <- w + agg(cast(w_k - w)) halves the server all-reduce).
+    ``client_params``/``weights``/``gates`` may live in cohort space
+    [K, ...]: zero gates drop padding slots, so the result matches the
+    dense [C, ...] aggregation whenever every included client made the
+    cohort. THE aggregation-routing implementation — the sharded pod
+    rounds call it too."""
+    agg_kw = dict(use_pallas=fed.use_pallas, fused=fed.fused_agg)
+    if fed.agg_dtype != "float32":
+        ad = jnp.dtype(fed.agg_dtype)
+        wire = jax.tree.map(lambda ck, gp: (ck - gp[None]).astype(ad),
+                            client_params, global_params)
+        agg = aggregate_clients(wire, weights, gates, **agg_kw)
+        return jax.tree.map(
+            lambda gp, d: (gp + d.astype(jnp.float32)).astype(gp.dtype),
+            global_params, agg)
+    new_global = aggregate_clients(client_params, weights, gates, **agg_kw)
+    return jax.tree.map(lambda n, p: n.astype(p.dtype),
+                        new_global, global_params)
+
+
 def participation_mask(fed, key, priority_mask, round_idx):
     """Paper App. C.3 / A.4: Bernoulli participation sampling (priority set
     never empty) plus straggler cadence (non-priority client k joins every
@@ -227,16 +273,29 @@ def _eval_scan(loss_fn, params, data):
     return jax.lax.map(lambda d: loss_fn(params, d), data)
 
 
-def _train_vmap(solver, global_params, data, keys, lr):
+def _train_vmap(solver, global_params, data, keys, lr, gates=None):
+    # vmap lowers lax.cond to a select (both branches execute), so a gate
+    # cannot skip work here — the cohort gather is the vmap-side saving.
     return jax.vmap(lambda d, k: solver(global_params, d, k, lr))(data, keys)
 
 
-def _train_scan(solver, global_params, data, keys, lr):
+def _train_scan(solver, global_params, data, keys, lr, gates=None):
+    """Time-multiplexed local training. When ``gates`` is given (known
+    before training — gate-before-train strategies), gated-out clients
+    skip their E local epochs entirely via lax.cond; their slot returns
+    the unmodified global params, which the aggregation drops at gate 0."""
     def body(carry, inp):
-        d, k = inp
-        return carry, solver(global_params, d, k, lr)
+        if gates is None:
+            d, k = inp
+            return carry, solver(global_params, d, k, lr)
+        d, k, g = inp
+        p = jax.lax.cond(g > 0,
+                         lambda: solver(global_params, d, k, lr),
+                         lambda: global_params)
+        return carry, p
 
-    _, stacked = jax.lax.scan(body, 0, (data, keys))
+    xs = (data, keys) if gates is None else (data, keys, gates)
+    _, stacked = jax.lax.scan(body, 0, xs)
     return stacked
 
 
@@ -253,7 +312,15 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
     Returns round_fn(global_params, data, priority_mask, weights, rng,
     round_idx) -> (new_global, stats). ``data`` leaves have leading client
     axis [C, n, ...]. ``backend`` defaults to ``fed.backend``; both backends
-    produce identical rounds."""
+    produce identical rounds.
+
+    Round order depends on the strategy. Strategies that gate from the eval
+    pre-pass alone (``not needs_deltas``) run **eval -> gates -> train**:
+    gates are fixed before any local epoch, so the scan backend cond-skips
+    gated-out clients and, when ``fed.max_cohort > 0``, only the K gathered
+    included clients train at all (see ``cohort_select`` for the overflow
+    policy). Delta-based strategies (grad_sim) keep the train-first order —
+    their statistic needs the client updates."""
     backend = backend or fed.backend
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")
@@ -262,7 +329,7 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
     solver = local_solver(loss_fn, fed)
     sched = make_schedule(fed)
     warmup_rounds = int(fed.warmup_frac * fed.rounds)
-    agg_kw = dict(use_pallas=fed.use_pallas, fused=fed.fused_agg)
+    gate_before_train = not strategy.needs_deltas
 
     def round_fn(global_params, data, priority_mask, weights, rng, round_idx):
         C = priority_mask.shape[0]
@@ -284,42 +351,54 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
         # participation sampling (paper App. C.3 / A.4)
         rng, pkey = jax.random.split(rng)
         part = participation_mask(fed, pkey, priority_mask, round_idx)
+        warm = round_idx < warmup_rounds
 
-        # (5) E local epochs per client (masked clients train too but are
-        #     dropped at aggregation — fine at simulator scale)
+        # per-client PRNG fan-out is by client IDENTITY (index in [C]), so
+        # gathered cohorts train with exactly the keys the dense round uses
         rng, lkey = jax.random.split(rng)
         lkeys = jax.random.split(lkey, C)
-        client_params = train_clients(solver, global_params, data, lkeys, lr)
 
-        delta_cos = None
-        if strategy.needs_deltas:
+        def make_ctx(delta_cos=None):
+            return SelectionContext(
+                align_vals=align_vals, global_align=g_align, eps=eps,
+                priority_mask=priority_mask, weights=weights,
+                participation=part, warmup=warm, delta_cos=delta_cos,
+                topk=fed.topk, sim_threshold=fed.sim_threshold)
+
+        if gate_before_train:
+            # (4) gates first — they only need the eval pre-pass
+            gates = compute_gates(make_ctx(), fed.selection)
+            k = min(int(fed.max_cohort), C) if fed.max_cohort > 0 else 0
+            if k > 0:
+                # (5) gather-train-scatter: only K cohort slots run E epochs
+                cohort_idx, cohort_gates, gates = cohort_select(
+                    gates, align_vals, g_align, priority_mask, k)
+                cohort_params = train_clients(
+                    solver, global_params,
+                    jax.tree.map(lambda a: a[cohort_idx], data),
+                    lkeys[cohort_idx], lr, gates=cohort_gates)
+                new_global = gated_server_update(fed, global_params,
+                                                 cohort_params,
+                                                 weights[cohort_idx],
+                                                 cohort_gates)
+            else:
+                # (5) dense: everyone trains, but the scan backend still
+                # cond-skips gated-out clients (no epochs for gate 0)
+                client_params = train_clients(solver, global_params, data,
+                                              lkeys, lr, gates=gates)
+                new_global = gated_server_update(fed, global_params,
+                                                 client_params, weights, gates)
+        else:
+            # (5) train-first: the statistic needs the client updates
+            client_params = train_clients(solver, global_params, data, lkeys, lr)
             deltas = jax.tree.map(lambda ck, g: ck - g[None],
                                   client_params, global_params)
             delta_cos = cosine_to_priority(flatten_stacked(deltas),
                                            weights, priority_mask)
-
-        # (4) gates from the selection strategy (core/alignment rule et al.)
-        warm = round_idx < warmup_rounds
-        ctx = SelectionContext(align_vals=align_vals, global_align=g_align,
-                               eps=eps, priority_mask=priority_mask,
-                               weights=weights, participation=part,
-                               warmup=warm, delta_cos=delta_cos,
-                               topk=fed.topk, sim_threshold=fed.sim_threshold)
-        gates = compute_gates(ctx, fed.selection)
-
-        # (6) renormalized gated aggregation — one fused fedagg per round
-        if fed.agg_dtype != "float32":
-            # aggregate client DELTAS on the wire in reduced precision:
-            # w <- w + agg(cast(w_k - w)); halves the server all-reduce
-            ad = jnp.dtype(fed.agg_dtype)
-            wire = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
-                                client_params, global_params)
-            agg = aggregate_clients(wire, weights, gates, **agg_kw)
-            new_global = jax.tree.map(
-                lambda g, d: (g + d.astype(jnp.float32)).astype(g.dtype),
-                global_params, agg)
-        else:
-            new_global = aggregate_clients(client_params, weights, gates, **agg_kw)
+            # (4) gates from the selection strategy (core/alignment rule et al.)
+            gates = compute_gates(make_ctx(delta_cos), fed.selection)
+            new_global = gated_server_update(fed, global_params, client_params,
+                                             weights, gates)
 
         npri = (1.0 - priority_mask.astype(jnp.float32))
         included_mass = jnp.sum(npri * weights * gates)

@@ -18,11 +18,16 @@ The server statistic F(w_t) is computed on a server-held global batch
 (paper §3.1: "the server transmits ... also its associated loss"), so the
 gate needs no second pass over clients. Gating itself comes from the
 SelectionStrategy registry in fl/engine.py — the SAME implementation the
-in-silico simulator uses. The temporal mode runs a cheap eval pre-pass
-over the cohort (one forward per client, negligible next to E local
-steps) so rank-based strategies (topk_align) see every client's loss
-before any gate is fixed; delta-based strategies (grad_sim) need client
-updates resident and are spatial-only.
+in-silico simulator uses. Both modes gate BEFORE training wherever the
+strategy allows it (``not needs_deltas``): the temporal scan fixes gates
+from a cheap eval pre-pass (one forward per client, negligible next to E
+local steps) and wraps each streamed client's training in
+``lax.cond(gate > 0, ...)`` so gated-out FSDP clients skip their E local
+steps entirely; the spatial round, when ``fed.max_cohort > 0``, gathers
+the included clients into a dense [K, ...] cohort and trains only those
+(``engine.cohort_select`` documents the overflow policy). Delta-based
+strategies (grad_sim) need client updates resident, keep the train-first
+order, and are spatial-only.
 """
 from __future__ import annotations
 
@@ -32,10 +37,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import aggregate_clients, flatten_stacked
+from repro.core.aggregation import flatten_stacked
 from repro.core.alignment import epsilon_at
 from repro.fl import engine
-from repro.utils import tree_axpy, tree_cast
+from repro.utils import tree_axpy
 
 FSDP_ARCHS = {"jamba-1.5-large-398b", "llava-next-34b"}
 
@@ -62,60 +67,75 @@ def _local_steps(model, params, batch, lr, n_steps):
     return _train_steps(model, params, batch, lr, n_steps), loss0
 
 
-def _gate_ctx(fed, local_losses, server_loss, pm, w, delta_cos=None):
-    """SelectionContext for one pod-scale round. The sharded round_step has
-    no round index, so eps_t is the schedule at t=0 (== fed.epsilon)."""
+def _gate_ctx(fed, local_losses, server_loss, pm, w, delta_cos=None,
+              round_idx=0):
+    """SelectionContext for one pod-scale round. ``round_idx`` threads the
+    driver's round counter into the eps schedule (eps_t via ``epsilon_at``);
+    drivers that never pass it keep the t=0 value (== fed.epsilon)."""
     return engine.SelectionContext(
         align_vals=local_losses, global_align=server_loss,
-        eps=epsilon_at(fed, 0), priority_mask=pm, weights=w,
+        eps=epsilon_at(fed, round_idx), priority_mask=pm, weights=w,
         delta_cos=delta_cos, topk=fed.topk, sim_threshold=fed.sim_threshold)
 
 
+# the aggregation routing (f32 and reduced-precision delta wire formats,
+# dense [C, ...] or cohort [K, ...] stacks) is THE engine implementation
+_apply_agg = engine.gated_server_update
+
+
 def make_spatial_round(model, fed, num_clients: int):
-    """Returns round_step(params, batch) -> (params', stats).
+    """Returns round_step(params, batch, round_idx=0) -> (params', stats).
 
     batch: client-stacked arrays [C, b, ...] + server_* arrays (global data).
     priority_mask/weights [C] ride inside batch so everything is one pytree.
+
+    Gate-before-train: for strategies that gate from losses of the received
+    model alone (``not needs_deltas``) and ``fed.max_cohort > 0``, an eval
+    pre-pass fixes the gates, the K included clients are gathered into a
+    dense [K, ...] cohort, and only they run their E local steps — round
+    cost O(K*E) instead of O(C*E). grad_sim keeps the train-first order.
     """
     E = fed.local_epochs
     lr = fed.lr
     strategy = engine.get_strategy(fed.selection)
-    agg_kw = dict(use_pallas=fed.use_pallas, fused=fed.fused_agg)
+    use_cohort = fed.max_cohort > 0 and not strategy.needs_deltas
 
-    def round_step(params, batch):
+    def round_step(params, batch, round_idx=0):
         client_batch = batch["clients"]
         pm = batch["priority_mask"]
         w = batch["weights"]
+        C = pm.shape[0]
 
         server_loss, _ = model.loss_fn(params, batch["server"])
 
-        client_params, local_losses = jax.vmap(
-            lambda cb: _local_steps(model, params, cb, lr, E))(client_batch)
-
-        delta_cos = None
-        if strategy.needs_deltas:
-            deltas = jax.tree.map(lambda ck, g: ck - g[None],
-                                  client_params, params)
-            delta_cos = engine.cosine_to_priority(flatten_stacked(deltas),
-                                                  w, pm)
-
-        gates = engine.compute_gates(
-            _gate_ctx(fed, local_losses, server_loss, pm, w, delta_cos),
-            fed.selection)
-        if fed.agg_dtype != "float32":
-            # aggregate client DELTAS on the wire in reduced precision:
-            # w <- w + agg(cast(w_k - w)); halves FedALIGN's server all-reduce
-            ad = jnp.dtype(fed.agg_dtype)
-            deltas = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
-                                  client_params, params)
-            agg = aggregate_clients(deltas, w, gates, **agg_kw)
-            new_params = jax.tree.map(
-                lambda g, d: (g + d.astype(jnp.float32)).astype(g.dtype),
-                params, agg)
+        if use_cohort:
+            # eval -> gates -> gather-train: only K cohort slots pay E steps
+            local_losses = jax.vmap(
+                lambda cb: model.loss_fn(params, cb)[0])(client_batch)
+            gates = engine.compute_gates(
+                _gate_ctx(fed, local_losses, server_loss, pm, w,
+                          round_idx=round_idx), fed.selection)
+            idx, cg, gates = engine.cohort_select(
+                gates, local_losses, server_loss, pm, min(fed.max_cohort, C))
+            cohort_params = jax.vmap(
+                lambda cb: _train_steps(model, params, cb, lr, E))(
+                jax.tree.map(lambda a: a[idx], client_batch))
+            new_params = _apply_agg(fed, params, cohort_params, w[idx], cg)
         else:
-            new_params = aggregate_clients(client_params, w, gates, **agg_kw)
-            new_params = jax.tree.map(lambda n, p: n.astype(p.dtype),
-                                      new_params, params)
+            client_params, local_losses = jax.vmap(
+                lambda cb: _local_steps(model, params, cb, lr, E))(client_batch)
+
+            delta_cos = None
+            if strategy.needs_deltas:
+                deltas = jax.tree.map(lambda ck, g: ck - g[None],
+                                      client_params, params)
+                delta_cos = engine.cosine_to_priority(flatten_stacked(deltas),
+                                                      w, pm)
+
+            gates = engine.compute_gates(
+                _gate_ctx(fed, local_losses, server_loss, pm, w, delta_cos,
+                          round_idx=round_idx), fed.selection)
+            new_params = _apply_agg(fed, params, client_params, w, gates)
         stats = {
             "server_loss": server_loss,
             "local_losses": local_losses,
@@ -143,7 +163,7 @@ def make_temporal_round(model, fed, cohort: int):
             "time — use the spatial round or the engine's vmap_spatial "
             "backend")
 
-    def round_step(params, batch):
+    def round_step(params, batch, round_idx=0):
         pm = batch["priority_mask"]
         w = batch["weights"]
         server_loss, _ = model.loss_fn(params, batch["server"])
@@ -153,12 +173,19 @@ def make_temporal_round(model, fed, cohort: int):
         local_losses = jax.lax.map(
             lambda cb: model.loss_fn(params, cb)[0], batch["clients"])
         gates = engine.compute_gates(
-            _gate_ctx(fed, local_losses, server_loss, pm, w), fed.selection)
+            _gate_ctx(fed, local_losses, server_loss, pm, w,
+                      round_idx=round_idx), fed.selection)
 
         def per_client(carry, inp):
             acc_num, acc_den = carry
             cbatch, w_k, gate = inp
-            p_k = _train_steps(model, params, cbatch, lr, E)
+            # gates are fixed before the scan, so gated-out streamed clients
+            # skip their E local steps entirely (cond, not select: scan
+            # bodies are traced once and branch at run time)
+            p_k = jax.lax.cond(
+                gate > 0,
+                lambda b: _train_steps(model, params, b, lr, E),
+                lambda b: params, cbatch)
             wg = w_k * gate
             acc_num = jax.tree.map(
                 lambda a, pk: a + wg * pk.astype(jnp.float32), acc_num, p_k)

@@ -1,6 +1,12 @@
-"""In-silico federation driver: jitted FedALIGN rounds in a python loop,
+"""In-silico federation driver: whole-run scanned FedALIGN rounds,
 evaluation + history logging. This is the engine behind every paper
 experiment (benchmarks/bench_*.py).
+
+The driver is NOT a per-round python loop: rounds are executed as
+``lax.scan`` chunks of ``eval_every`` rounds inside one jitted program with
+donated param/momentum buffers, so the host dispatches (and syncs) once per
+eval point instead of once per round. Per-round stats come back as stacked
+device arrays and cross to the host in one transfer per chunk.
 """
 from __future__ import annotations
 
@@ -17,30 +23,55 @@ from repro.data.synth import Federation
 from repro.utils import tree_axpy
 
 
+@functools.partial(jax.jit, static_argnames=("loss_fn",))
+def _eval_batches(loss_fn, params, xb, yb):
+    """[m, batch, ...] test shards -> (sum of per-batch mean losses, accs)."""
+    def body(carry, b):
+        loss, m = loss_fn(params, b)
+        return carry, (loss, m["acc"])
+
+    _, (losses, accs) = jax.lax.scan(body, 0, {"x": xb, "y": yb})
+    return jnp.sum(losses), jnp.sum(accs)
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn",))
+def _eval_one(loss_fn, params, b):
+    loss, m = loss_fn(params, b)
+    return loss, m["acc"]
+
+
 def evaluate(loss_fn, params, x, y, batch=4096):
-    """Mean loss and accuracy over a test set (jitted: eager CNN eval on a
-    1-core host was the dominant cost of whole benchmark suites)."""
-    jitted = jax.jit(loss_fn)   # jax caches by fn identity across calls
+    """Mean loss and accuracy over a test set: one jitted scan over the
+    full-size batches (plus one call for the remainder) and a SINGLE
+    device->host transfer, instead of a ``float()`` sync per batch."""
+    x, y = jnp.asarray(x), jnp.asarray(y)
     n = y.shape[0]
-    losses, accs, cnt = [], [], 0
-    for i in range(0, n, batch):
-        b = {"x": jnp.asarray(x[i:i + batch]), "y": jnp.asarray(y[i:i + batch])}
-        loss, m = jitted(params, b)
-        w = b["y"].shape[0]
-        losses.append(float(loss) * w)
-        accs.append(float(m["acc"]) * w)
-        cnt += w
-    return sum(losses) / cnt, sum(accs) / cnt
+    bs = min(batch, n)
+    m, rem = divmod(n, bs)
+    loss_tot = acc_tot = jnp.float32(0.0)
+    if m:
+        ls, as_ = _eval_batches(loss_fn, params,
+                                x[:m * bs].reshape(m, bs, *x.shape[1:]),
+                                y[:m * bs].reshape(m, bs, *y.shape[1:]))
+        loss_tot, acc_tot = ls * bs, as_ * bs
+    if rem:
+        lr_, ar_ = _eval_one(loss_fn, params,
+                             {"x": x[m * bs:], "y": y[m * bs:]})
+        loss_tot, acc_tot = loss_tot + lr_ * rem, acc_tot + ar_ * rem
+    out = np.asarray(jnp.stack([loss_tot, acc_tot])) / n
+    return float(out[0]), float(out[1])
 
 
 def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
                    *, eval_every: int = 1, verbose: bool = False) -> History:
     """Run ``fed.rounds`` FedALIGN communication rounds."""
-    round_fn = jax.jit(make_round_fn(loss_fn, fed))
+    round_fn = make_round_fn(loss_fn, fed)
     data = {"x": jnp.asarray(federation.x), "y": jnp.asarray(federation.y)}
     pm = jnp.asarray(federation.priority_mask)
     w = jnp.asarray(federation.weights)
-    params = init_params
+    # private copy: chunk buffers are donated, and the caller keeps ownership
+    # of whatever it passed in
+    params = jax.tree.map(lambda a: jnp.array(a, copy=True), init_params)
     rng = jax.random.PRNGKey(fed.seed)
     hist = History()
 
@@ -48,28 +79,49 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
     use_server_m = fed.server_opt == "momentum"
     server_m = jax.tree.map(jnp.zeros_like, params) if use_server_m else None
 
-    @jax.jit
-    def apply_server_momentum(old, new, m):
-        delta = jax.tree.map(jnp.subtract, new, old)
-        m = jax.tree.map(lambda mi, d: fed.server_momentum * mi + d, m, delta)
-        upd = jax.tree.map(lambda o, mi: o + fed.server_lr * mi, old, m)
-        return upd, m
+    @functools.partial(jax.jit, static_argnames=("n",),
+                       donate_argnums=(0, 1, 2))
+    def run_chunk(params, server_m, rng, r0, *, n):
+        """n rounds as one scanned program; stats leaves come back [n, ...]."""
+        def body(carry, i):
+            params, server_m, rng = carry
+            rng, rkey = jax.random.split(rng)
+            new_params, stats = round_fn(params, data, pm, w, rkey, r0 + i)
+            if use_server_m:
+                delta = jax.tree.map(jnp.subtract, new_params, params)
+                sm = jax.tree.map(lambda mi, d: fed.server_momentum * mi + d,
+                                  server_m, delta)
+                params = jax.tree.map(lambda o, mi: o + fed.server_lr * mi,
+                                      params, sm)
+                return (params, sm, rng), stats
+            return (new_params, server_m, rng), stats
 
-    for r in range(fed.rounds):
-        rng, rkey = jax.random.split(rng)
-        new_params, stats = round_fn(params, data, pm, w, rkey, jnp.int32(r))
-        if use_server_m:
-            params, server_m = apply_server_momentum(params, new_params, server_m)
-        else:
-            params = new_params
-        if r % eval_every == 0 or r == fed.rounds - 1:
-            tl, ta = evaluate(loss_fn, params, federation.test_x, federation.test_y)
-            hist.log(stats, test_acc=ta, test_loss=tl)
-            if verbose:
-                print(f"  round {r:4d} loss={float(stats['global_loss']):.4f} "
-                      f"test_acc={ta:.4f} inc={float(stats['included_nonpriority']):.1f}")
-        else:
-            hist.log(stats)
+        (params, server_m, rng), stats = jax.lax.scan(
+            body, (params, server_m, rng), jnp.arange(n, dtype=jnp.int32))
+        return params, server_m, rng, stats
+
+    # chunk boundaries = the eval rounds of the old per-round loop
+    # (r % eval_every == 0, plus the final round), so logging cadence and
+    # History contents are unchanged — only the dispatch granularity is.
+    bounds = sorted(set(range(0, fed.rounds, eval_every)) | {fed.rounds - 1})
+    start = 0
+    for b in bounds:
+        n = b - start + 1
+        params, server_m, rng, stats = run_chunk(params, server_m, rng,
+                                                 jnp.int32(start), n=n)
+        stats_np = jax.tree.map(np.asarray, stats)   # one transfer per chunk
+        tl, ta = evaluate(loss_fn, params, federation.test_x, federation.test_y)
+        for i in range(n):
+            s = {k: v[i] for k, v in stats_np.items()}
+            if i == n - 1:
+                hist.log(s, test_acc=ta, test_loss=tl)
+                if verbose:
+                    print(f"  round {b:4d} loss={float(s['global_loss']):.4f} "
+                          f"test_acc={ta:.4f} "
+                          f"inc={float(s['included_nonpriority']):.1f}")
+            else:
+                hist.log(s)
+        start = b + 1
     hist.params = params
     return hist
 

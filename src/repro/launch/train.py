@@ -73,7 +73,7 @@ def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
         batch = build_batches(cfg, fed_data, clients=clients,
                               per_client=per_client, seq=seq, rng=rng)
         t0 = time.time()
-        params, stats = round_step(params, batch)
+        params, stats = round_step(params, batch, jnp.int32(r))
         dt = time.time() - t0
         rec = {"round": r,
                "server_loss": float(stats["server_loss"]),

@@ -1,0 +1,151 @@
+"""Gate-before-train cohort execution: gather-train-scatter (max_cohort)
+and cond-skip rounds must be bit-equal (to dtype tolerance) to the dense
+train-everyone round for every registered strategy on both backends, the
+overflow policy must be deterministic, and the sharded adapters must agree
+with their dense counterparts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.data.synth import make_synth_federation
+from repro.fl import engine
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+INIT, APPLY = SMALL_MODELS["synth_logreg"]
+LOSS = make_loss_fn(APPLY)
+FEDN = make_synth_federation(seed=11, n_priority=3, n_nonpriority=5,
+                             samples_per_client=64)
+DATA = {"x": jnp.asarray(FEDN.x), "y": jnp.asarray(FEDN.y)}
+PM = jnp.asarray(FEDN.priority_mask)
+W = jnp.asarray(FEDN.weights)
+C = int(PM.shape[0])
+PARAMS = INIT(jax.random.PRNGKey(0))
+
+STRATEGIES = sorted(engine.STRATEGIES)
+
+
+def _run(fed, backend, r=2, seed=1, params=None):
+    fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
+    return fn(params if params is not None else PARAMS, DATA, PM, W,
+              jax.random.PRNGKey(seed), jnp.int32(r))
+
+
+def _assert_rounds_equal(a, b, atol=1e-6):
+    (pa, sa), (pb, sb) = a, b
+    np.testing.assert_array_equal(np.asarray(sa["gates"]),
+                                  np.asarray(sb["gates"]))
+    for la, lb in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+# =================================================== cohort == dense parity
+@pytest.mark.parametrize("backend", engine.BACKENDS)
+@pytest.mark.parametrize("selection", STRATEGIES)
+def test_cohort_round_equals_dense_round(selection, backend):
+    """K >= #included: the gathered cohort round reproduces the dense round
+    exactly (same per-client PRNG keys, same gates, same aggregation)."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
+                    epsilon=0.5, warmup_frac=0.0, align_stat="loss",
+                    selection=selection, topk=2, sim_threshold=0.0)
+    dense = _run(fed, backend)
+    cohort = _run(fed.replace(max_cohort=C), backend)
+    _assert_rounds_equal(dense, cohort)
+
+
+@pytest.mark.parametrize("backend", engine.BACKENDS)
+@pytest.mark.parametrize("selection", ["fedalign", "topk_align", "all"])
+def test_cohort_parity_under_participation_and_stragglers(selection, backend):
+    """Partial participation + straggler cadence shrink the included set;
+    the cohort gather must still agree with train-everyone."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                    epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                    selection=selection, topk=3, participation=0.6,
+                    straggler_period=3)
+    for seed in range(3):
+        dense = _run(fed, backend, r=seed, seed=seed)
+        cohort = _run(fed.replace(max_cohort=C), backend, r=seed, seed=seed)
+        _assert_rounds_equal(dense, cohort)
+
+
+@pytest.mark.parametrize("backend", engine.BACKENDS)
+def test_cohort_parity_during_warmup(backend):
+    """Warm-up rounds are priority-only; a tight cohort (K = #priority)
+    still matches the dense warm-up round."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, warmup_frac=0.5,
+                    epsilon=1e9, local_epochs=1, align_stat="loss")
+    dense = _run(fed, backend, r=0)
+    cohort = _run(fed.replace(max_cohort=3), backend, r=0)
+    _assert_rounds_equal(dense, cohort)
+
+
+def test_cohort_parity_bf16_wire():
+    """agg_dtype != float32 exercises the delta wire format in cohort space."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
+                    epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                    agg_dtype="bfloat16")
+    dense = _run(fed, "vmap_spatial")
+    cohort = _run(fed.replace(max_cohort=C), "vmap_spatial")
+    _assert_rounds_equal(dense, cohort)
+
+
+def test_grad_sim_ignores_max_cohort():
+    """Delta-based strategies keep the train-first order: max_cohort must
+    not change their round at all."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
+                    epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                    selection="grad_sim", sim_threshold=0.0)
+    _assert_rounds_equal(_run(fed, "vmap_spatial"),
+                         _run(fed.replace(max_cohort=2), "vmap_spatial"))
+
+
+# =================================================== overflow policy
+def test_cohort_overflow_drops_worst_matched():
+    """More included clients than slots: priority always kept, then the
+    best loss-matched non-priority; stats report the EFFECTIVE gates."""
+    gates = jnp.ones((6,), jnp.float32)
+    align = jnp.asarray([0.0, 0.0, 0.9, 0.1, 0.5, 0.3])
+    pm = jnp.asarray([1, 1, 0, 0, 0, 0], jnp.float32)
+    idx, cg, eff = engine.cohort_select(gates, align, jnp.float32(0.0), pm, 4)
+    # slots: priority 0,1 first, then non-priority by |align| = 0.1 (3), 0.3 (5)
+    np.testing.assert_array_equal(np.asarray(idx), [0, 1, 3, 5])
+    np.testing.assert_array_equal(np.asarray(cg), [1, 1, 1, 1])
+    np.testing.assert_array_equal(np.asarray(eff), [1, 1, 0, 1, 0, 1])
+
+
+def test_cohort_padding_slots_carry_zero_gates():
+    """Fewer included than K: padding slots hold excluded clients with gate
+    0 so they cannot contribute to the aggregation."""
+    gates = jnp.asarray([1, 0, 1, 0], jnp.float32)
+    align = jnp.asarray([0.0, 0.1, 0.2, 0.3])
+    pm = jnp.asarray([1, 0, 0, 0], jnp.float32)
+    idx, cg, eff = engine.cohort_select(gates, align, jnp.float32(0.0), pm, 4)
+    np.testing.assert_array_equal(np.asarray(cg[:2]), [1, 1])
+    assert float(jnp.sum(cg)) == 2.0
+    np.testing.assert_array_equal(np.asarray(eff), np.asarray(gates))
+
+
+def test_cohort_overflow_round_reports_effective_gates():
+    """End-to-end: K smaller than the included set caps the aggregation and
+    the reported inclusion stats."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                    epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                    max_cohort=4)
+    _, stats = _run(fed, "vmap_spatial")
+    gates = np.asarray(stats["gates"])
+    assert gates.sum() == 4.0
+    assert np.all(gates[np.asarray(PM)] == 1.0)          # priority kept
+    assert float(stats["included_nonpriority"]) == 1.0   # 4 slots - 3 priority
+
+
+# =================================================== scan cond-skip
+def test_scan_backend_skips_gated_out_clients():
+    """The temporal backend must branch (lax.cond), not select: its HLO
+    contains a conditional whose true branch holds the local epochs."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                    epsilon=0.0, warmup_frac=0.0, align_stat="loss")
+    fn = engine.make_round_fn(LOSS, fed, backend="scan_temporal")
+    text = jax.jit(fn).lower(PARAMS, DATA, PM, W, jax.random.PRNGKey(0),
+                             jnp.int32(0)).as_text()
+    assert "stablehlo.if" in text or "stablehlo.case" in text

@@ -71,6 +71,68 @@ def test_gating_excludes_misaligned():
     assert excluded, np.asarray(stats["local_losses"])
 
 
+def test_round_idx_drives_eps_schedule():
+    """The sharded rounds follow the eps schedule instead of freezing it at
+    t=0: a decaying eps admits everyone early and gates non-priority
+    clients out in late rounds — on BOTH execution modes."""
+    fed = FedConfig(local_epochs=1, epsilon=0.5, lr=0.05,
+                    epsilon_schedule="exp", epsilon_decay=0.9)
+    batch = _batch()
+    params = MODEL.init(jax.random.PRNGKey(0))
+    for make in (sharded.make_spatial_round, sharded.make_temporal_round):
+        step = jax.jit(make(MODEL, fed, 4))
+        _, s0 = step(params, batch, jnp.int32(0))
+        _, s9 = step(params, batch, jnp.int32(9))
+        assert np.asarray(s0["gates"]).sum() == 4.0          # eps_0 = 0.5
+        late = np.asarray(s9["gates"])                        # eps_9 ~ 2e-10
+        assert np.all(late[:2] == 1.0)                        # priority kept
+        assert late[2:].sum() == 0.0, late
+
+
+def test_spatial_cohort_matches_dense_and_temporal():
+    """Gather-train (max_cohort) spatial round and cond-skip temporal round
+    both reproduce the dense spatial round, including when the eps schedule
+    has gated clients out (cohort padding slots / skipped scan iterations)."""
+    fed = FedConfig(local_epochs=2, epsilon=0.5, lr=0.05,
+                    epsilon_schedule="exp", epsilon_decay=0.5)
+    batch = _batch()
+    params = MODEL.init(jax.random.PRNGKey(0))
+    for r in (0, 6):
+        pd, sd = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))(
+            params, batch, jnp.int32(r))
+        pc, sc = jax.jit(sharded.make_spatial_round(
+            MODEL, fed.replace(max_cohort=4), 4))(params, batch, jnp.int32(r))
+        pt, st = jax.jit(sharded.make_temporal_round(MODEL, fed, 4))(
+            params, batch, jnp.int32(r))
+        np.testing.assert_array_equal(np.asarray(sd["gates"]),
+                                      np.asarray(sc["gates"]))
+        np.testing.assert_array_equal(np.asarray(sd["gates"]),
+                                      np.asarray(st["gates"]))
+        for a, b in zip(jax.tree.leaves(pd), jax.tree.leaves(pc)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5, rtol=5e-5)
+        for a, b in zip(jax.tree.leaves(pd), jax.tree.leaves(pt)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5, rtol=5e-5)
+
+
+def test_spatial_cohort_overflow_keeps_best_matched():
+    """K < #included: the spatial gather drops the worst loss-matched
+    non-priority clients and reports the effective gates."""
+    fed = FedConfig(local_epochs=1, epsilon=1e9, lr=0.05, max_cohort=3)
+    step = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))
+    params = MODEL.init(jax.random.PRNGKey(0))
+    _, stats = step(params, _batch())
+    gates = np.asarray(stats["gates"])
+    assert gates.sum() == 3.0
+    assert np.all(gates[:2] == 1.0)                           # priority kept
+    # the surviving non-priority client is the better loss-matched one
+    losses = np.asarray(stats["local_losses"])
+    server = float(stats["server_loss"])
+    kept, dropped = (2, 3) if gates[2] == 1.0 else (3, 2)
+    assert abs(losses[kept] - server) <= abs(losses[dropped] - server)
+
+
 def test_train_driver_end_to_end():
     params, hist = train_run(arch="qwen1.5-0.5b", smoke=True, rounds=3,
                              clients=4, n_priority=2, per_client=2, seq=32,
