@@ -1,15 +1,19 @@
 """Round-pipeline benchmark: dense train-everyone vs gate-before-train
-cohort execution (``FedConfig.max_cohort``).
+cohort execution (``FedConfig.max_cohort``), plus the server-optimizer
+ablation (sgd vs momentum/adam/yogi on the aggregated delta) and the
+FederationState threading overhead of the scanned driver.
 
 Times full engine rounds at C=64 clients on a small MLP across inclusion
 rates, reporting rounds/sec and the wasted-local-epoch fraction (clients
 that paid E local epochs but were dropped at aggregation). Every timing
 pair is also a correctness pair: the cohort round must reproduce the dense
-round exactly before its timing row is emitted.
+round exactly before its timing row is emitted, and the state-threading
+row ASSERTS that carrying the full FederationState through a lax.scan of
+rounds costs <5% over a params-only carry at ``max_cohort`` off.
 
     PYTHONPATH=src python benchmarks/bench_round.py [--full] [--out PATH]
 
-emits ``BENCH_round.json``.
+emits ``BENCH_round.json`` (uploaded as the BENCH_round CI artifact).
 """
 from __future__ import annotations
 
@@ -28,22 +32,34 @@ from repro.models.small import init_mlp2, make_loss_fn, mlp2_apply
 
 CLIENTS = 64
 N_PRIORITY = 2
+SCAN_ROUNDS = 8          # rounds per scanned program in the overhead row
 
 
-def _time_round(fn, params, data, pm, w, iters):
+def _time_round(fn, state, data, pm, w, iters):
     key = jax.random.PRNGKey(0)
-    out = fn(params, data, pm, w, key, jnp.int32(1))
+    out = fn(state, data, pm, w, key, jnp.int32(1))
     jax.block_until_ready(out)                       # compile + warm-up
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = fn(params, data, pm, w, key, jnp.int32(1))
+        out = fn(state, data, pm, w, key, jnp.int32(1))
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters, out
 
 
-def run(fast=True):
-    samples = 64 if fast else 256
-    iters = 3 if fast else 8
+def _time_scan(fn, *args, reps=3):
+    """Best-of-reps wall time of an already-jitted scanned program."""
+    out = fn(*args)
+    jax.block_until_ready(out)                       # compile + warm-up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _setup(samples):
     fedn = make_synth_federation(seed=0, n_priority=N_PRIORITY,
                                  n_nonpriority=CLIENTS - N_PRIORITY,
                                  samples_per_client=samples)
@@ -53,6 +69,13 @@ def run(fast=True):
     init_fn = lambda key: init_mlp2(key, in_dim=60, hidden=256, num_classes=10)
     loss_fn = make_loss_fn(mlp2_apply)
     params = init_fn(jax.random.PRNGKey(42))
+    return data, pm, w, loss_fn, params
+
+
+def run_cohort(fast=True):
+    samples = 64 if fast else 256
+    iters = 3 if fast else 8
+    data, pm, w, loss_fn, params = _setup(samples)
 
     rows = []
     for rate in (0.25, 0.5, 1.0):
@@ -64,16 +87,17 @@ def run(fast=True):
                          warmup_frac=0.0, align_stat="loss",
                          selection="topk_align", topk=k - N_PRIORITY,
                          batch_size=32, seed=0)
+        state = engine.init_state(params, base, CLIENTS)
         dense_fn = jax.jit(engine.make_round_fn(loss_fn, base))
         cohort_fn = jax.jit(engine.make_round_fn(loss_fn,
                                                  base.replace(max_cohort=k)))
-        sec_d, (pd, sd) = _time_round(dense_fn, params, data, pm, w, iters)
-        sec_c, (pc, sc) = _time_round(cohort_fn, params, data, pm, w, iters)
+        sec_d, (std, sd) = _time_round(dense_fn, state, data, pm, w, iters)
+        sec_c, (stc, sc) = _time_round(cohort_fn, state, data, pm, w, iters)
 
         # correctness before timing is reported: identical gates + params
         np.testing.assert_array_equal(np.asarray(sd["gates"]),
                                       np.asarray(sc["gates"]))
-        for a, b in zip(jax.tree.leaves(pd), jax.tree.leaves(pc)):
+        for a, b in zip(jax.tree.leaves(std.params), jax.tree.leaves(stc.params)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        atol=1e-5)
 
@@ -94,6 +118,96 @@ def run(fast=True):
                 "speedup_vs_dense": round(sec_d / sec, 2),
             })
     return rows
+
+
+def run_server_opt(fast=True):
+    """Server-optimizer ablation (max_cohort off, dense rounds) + the
+    FederationState threading-overhead assertion.
+
+    The overhead baseline runs the SAME round math inside the same
+    lax.scan, but only the params cross the round boundary (opt moments /
+    backlog / EMAs are re-fed from the initial state every round), so the
+    delta between the two programs is exactly the cost of threading the
+    full state through the scan carry."""
+    samples = 64 if fast else 256
+    data, pm, w, loss_fn, params = _setup(samples)
+    base = FedConfig(num_clients=CLIENTS, num_priority=N_PRIORITY,
+                     rounds=100, local_epochs=2, epsilon=1e9,
+                     warmup_frac=0.0, align_stat="loss", batch_size=32,
+                     seed=0, max_cohort=0)
+
+    rows = []
+    sec_by_opt = {}
+    sgd_round_fn = sgd_state0 = None
+    for opt in ("sgd", "momentum", "adam", "yogi"):
+        fed = base.replace(server_opt=opt, server_lr=1.0)
+        round_fn = engine.make_round_fn(loss_fn, fed)
+        state0 = engine.init_state(params, fed, CLIENTS)
+        if opt == "sgd":
+            sgd_round_fn, sgd_state0 = round_fn, state0
+
+        @jax.jit
+        def scan_state(state, rng, rf=round_fn):
+            def body(carry, i):
+                st, key = carry
+                key, rkey = jax.random.split(key)
+                st, _ = rf(st, data, pm, w, rkey, i)
+                return (st, key), None
+            (state, rng), _ = jax.lax.scan(
+                body, (state, rng), jnp.arange(SCAN_ROUNDS, dtype=jnp.int32))
+            return state
+
+        sec = _time_scan(scan_state, state0, jax.random.PRNGKey(0))
+        sec_by_opt[opt] = sec
+        rows.append({
+            "path": f"server_opt:{opt}",
+            "clients": CLIENTS,
+            "max_cohort": 0,
+            "scan_rounds": SCAN_ROUNDS,
+            "sec_per_round": round(sec / SCAN_ROUNDS, 5),
+            "rounds_per_sec": round(SCAN_ROUNDS / sec, 2),
+            "slowdown_vs_sgd": None,   # filled below
+        })
+    for r in rows:
+        r["slowdown_vs_sgd"] = round(
+            sec_by_opt[r["path"].split(":")[1]] / sec_by_opt["sgd"], 3)
+
+    # --- state-threading overhead: full FederationState carry vs params-only.
+    # The full-state measurement IS the sgd ablation row above (same
+    # round_fn, same scan) — only the params-only baseline is timed anew.
+    round_fn, state0 = sgd_round_fn, sgd_state0
+
+    @jax.jit
+    def scan_params_only(p, rng):
+        def body(carry, i):
+            pp, key = carry
+            key, rkey = jax.random.split(key)
+            st, _ = round_fn(state0.replace(params=pp), data, pm, w, rkey, i)
+            return (st.params, key), None
+        (p, rng), _ = jax.lax.scan(
+            body, (p, rng), jnp.arange(SCAN_ROUNDS, dtype=jnp.int32))
+        return p
+
+    sec_full = sec_by_opt["sgd"]
+    sec_params = _time_scan(scan_params_only, params, jax.random.PRNGKey(0))
+    overhead = sec_full / sec_params - 1.0
+    rows.append({
+        "path": "state_threading_overhead",
+        "clients": CLIENTS,
+        "max_cohort": 0,
+        "scan_rounds": SCAN_ROUNDS,
+        "sec_per_round_full_state": round(sec_full / SCAN_ROUNDS, 5),
+        "sec_per_round_params_only": round(sec_params / SCAN_ROUNDS, 5),
+        "overhead_frac": round(overhead, 4),
+    })
+    assert overhead < 0.05, (
+        f"FederationState threading added {overhead:.1%} to the scanned "
+        f"round (budget: <5% at max_cohort off)")
+    return rows
+
+
+def run(fast=True):
+    return run_cohort(fast=fast) + run_server_opt(fast=fast)
 
 
 def main():

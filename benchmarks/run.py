@@ -12,6 +12,7 @@ import json
 import os
 import sys
 import time
+import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -54,7 +55,12 @@ def derived_summary(name: str, rows) -> str:
         if name == "round_pipeline":
             best = max(r["speedup_vs_dense"] for r in rows
                        if r["path"] == "cohort")
-            return f"best_cohort_speedup={best:.2f}x"
+            ov = next((r["overhead_frac"] for r in rows
+                       if r["path"] == "state_threading_overhead"), None)
+            adam = next((r["slowdown_vs_sgd"] for r in rows
+                         if r["path"] == "server_opt:adam"), None)
+            return (f"best_cohort_speedup={best:.2f}x;"
+                    f"state_overhead={ov};adam_slowdown={adam}")
         if name.startswith("roofline"):
             ok = [r for r in rows if r.get("status") == "ok"]
             if not ok:
@@ -77,6 +83,7 @@ def main() -> None:
 
     os.makedirs("results/bench", exist_ok=True)
     print("name,us_per_call,derived")
+    failures = []
     for name, modname in SUITES:
         if args.only and args.only not in name:
             continue
@@ -87,12 +94,20 @@ def main() -> None:
             rows = mod.run(fast=not args.full)
             status = ""
         except Exception as e:  # noqa: BLE001
+            # a raising suite FAILS the run (nonzero exit below) — the
+            # remaining suites still execute so one CI pass reports every
+            # breakage, but nothing silently "continues past" an error
             rows, status = [], f"ERROR:{type(e).__name__}:{e}"
+            failures.append(name)
+            traceback.print_exc(file=sys.stderr)
         us = (time.perf_counter() - t0) * 1e6
         derived = status or derived_summary(name, rows)
         print(f"{name},{us:.0f},{derived}", flush=True)
         with open(f"results/bench/{name}.json", "w") as f:
             json.dump(rows, f, indent=1, default=str)
+    if failures:
+        print(f"# FAILED suites: {', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -192,9 +192,27 @@ class FedConfig:
     selection: str = "fedalign"       # SelectionStrategy name (fl/engine.py
                                       # registry): fedalign | all |
                                       # priority_only | topk_align | grad_sim
+                                      # | welfare
     topk: int = 4                     # topk_align budget: at most k best
                                       # loss-matched non-priority clients
     sim_threshold: float = 0.0        # grad_sim: min cosine(delta_k, delta_P)
+    grad_sim_sketch: bool = False     # grad_sim: score clients on a
+                                      # CountSketch random projection of
+                                      # their delta instead of the exact
+                                      # [C, M_total] flatten (streaming-
+                                      # friendly; JL-approximate cosines)
+    sketch_dim: int = 256             # sketch width for grad_sim_sketch and
+                                      # the temporal (FSDP) grad_sim round
+    utility_ema: float = 0.9          # decay beta of the cross-round client
+                                      # utility EMAs (loss-gap + inclusion
+                                      # history) carried in FederationState
+    welfare_floor: float = 0.0        # welfare strategy: non-priority
+                                      # clients whose inclusion EMA fell
+                                      # below this floor are admitted even
+                                      # when their smoothed loss gap is
+                                      # outside eps_t (fairness floor after
+                                      # Travadi et al., arXiv:2302.08976);
+                                      # 0 disables the floor
     backend: str = "vmap_spatial"     # engine execution backend:
                                       # vmap_spatial (clients in parallel) |
                                       # scan_temporal (time-multiplexed)
@@ -214,9 +232,19 @@ class FedConfig:
                                       # matched overflow is dropped for the
                                       # round (deterministic, stable order)
     align_stat: str = "accuracy"      # accuracy (paper experiments) | loss (theory)
-    server_opt: str = "none"          # none | momentum (beyond-paper server optimizer)
+    server_opt: str = "none"          # ServerOptimizer registry name
+                                      # (core/aggregation.py): sgd (= the
+                                      # legacy "none") | momentum (FedAvgM)
+                                      # | adam (FedAdam) | yogi (FedYogi),
+                                      # applied to the fused aggregated
+                                      # delta; moments persist across
+                                      # rounds in FederationState.opt_state
     server_lr: float = 1.0
     server_momentum: float = 0.9
+    server_b1: float = 0.9            # adam/yogi first-moment decay
+    server_b2: float = 0.99           # adam/yogi second-moment decay
+                                      # (FedOpt paper default)
+    server_eps: float = 1e-3          # adam/yogi denominator floor (tau)
     agg_dtype: str = "float32"        # dtype of aggregated client DELTAS on the
                                       # wire (bfloat16 halves FedALIGN's
                                       # aggregation collective — beyond-paper)

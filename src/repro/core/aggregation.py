@@ -9,13 +9,24 @@ once per leaf — one kernel launch, one contraction, and under pjit with the
 client axis sharded over (pod, data) exactly one all-reduce: FedALIGN's
 entire server-side communication. Accumulation is f32 regardless of leaf
 dtype, so fused and per-leaf outputs agree to the cast.
+
+This module also owns the **ServerOptimizer registry**: the fused
+aggregated delta is a pseudo-gradient, and ``aggregate_updates`` applies
+the configured server-side update rule (FedOpt, Reddi et al.,
+arXiv:2003.00295) to it — ``sgd`` (FedAvg), ``momentum`` (FedAvgM),
+``adam`` (FedAdam), ``yogi`` (FedYogi) — reusing the update rules from
+``optim/optimizers.py``. Optimizer moments live in
+``fl.engine.FederationState.opt_state`` and thread through the round scan.
 """
 from __future__ import annotations
+
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.optim import optimizers as _opt
 
 
 def flatten_stacked(client_params, dtype=jnp.float32):
@@ -63,15 +74,92 @@ def aggregate_clients(client_params, weights, gates, *, use_pallas=False,
     return jax.tree.unflatten(treedef, agg_leaves)
 
 
-def aggregate_updates(global_params, client_params, weights, gates, *,
-                      use_pallas=False, fused=True, interpret=False,
-                      server_lr=1.0):
-    """Delta-form aggregation: w <- w + server_lr * agg(w_k - w).
+# ========================================================= server optimizers
+SERVER_OPTIMIZERS: dict[str, Callable] = {}
 
-    Equivalent to aggregate_clients at server_lr=1 but numerically nicer at
-    scale and the natural hook for server-side optimizers (beyond-paper)."""
-    deltas = jax.tree.map(lambda ck, g: ck - g[None], client_params, global_params)
-    agg = aggregate_clients(deltas, weights, gates, use_pallas=use_pallas,
-                            fused=fused, interpret=interpret)
-    return jax.tree.map(lambda g, d: (g + server_lr * d.astype(g.dtype)),
-                        global_params, agg)
+
+def register_server_optimizer(name: str):
+    """Register ``factory(fed) -> optim.optimizers.Optimizer`` under ``name``.
+
+    The factory reads its hyper-parameters off the FedConfig (duck-typed:
+    anything with the ``server_*`` attributes works); the resulting
+    Optimizer's ``init(params)`` builds the moment pytree carried in
+    ``FederationState.opt_state`` and ``update`` consumes the aggregated
+    delta as a pseudo-gradient."""
+    def deco(factory):
+        factory.opt_name = name
+        SERVER_OPTIMIZERS[name] = factory
+        return factory
+    return deco
+
+
+def resolve_server_opt(name) -> str:
+    """Canonical registry name ('none', the legacy no-op, is plain sgd)."""
+    return "sgd" if name in (None, "none") else name
+
+
+def get_server_optimizer(name: str) -> Callable:
+    name = resolve_server_opt(name)
+    try:
+        return SERVER_OPTIMIZERS[name]
+    except KeyError:
+        raise ValueError(f"unknown server optimizer {name!r}; "
+                         f"registered: {sorted(SERVER_OPTIMIZERS)}") from None
+
+
+def server_optimizer(fed):
+    """The configured ServerOptimizer instance for ``fed.server_opt``."""
+    return get_server_optimizer(fed.server_opt)(fed)
+
+
+@register_server_optimizer("sgd")
+def _server_sgd(fed):
+    # w <- w + server_lr * agg_delta: FedAvg at server_lr=1 (the paper rule)
+    return _opt.sgd(0.0)
+
+
+@register_server_optimizer("momentum")
+def _server_momentum(fed):
+    # FedAvgM: momentum over aggregated deltas
+    return _opt.sgd(momentum=fed.server_momentum)
+
+
+@register_server_optimizer("adam")
+def _server_adam(fed):
+    return _opt.adam(fed.server_b1, fed.server_b2, fed.server_eps)
+
+
+@register_server_optimizer("yogi")
+def _server_yogi(fed):
+    return _opt.yogi(fed.server_b1, fed.server_b2, fed.server_eps)
+
+
+def apply_server_opt(fed, global_params, opt_state, agg_delta):
+    """One server-optimizer step on an already-aggregated global delta.
+
+    Returns (new_params, new_opt_state). The delta enters the optimizer as
+    the pseudo-gradient g = -agg_delta, so ``sgd`` at server_lr recovers
+    w + server_lr * delta exactly and ``momentum`` reproduces the legacy
+    FedAvgM recursion m <- beta m + delta, w <- w + server_lr m."""
+    opt = server_optimizer(fed)
+    grads = jax.tree.map(lambda d: -d.astype(jnp.float32), agg_delta)
+    return opt.update(grads, opt_state, global_params, fed.server_lr)
+
+
+def aggregate_updates(global_params, client_params, weights, gates, *,
+                      fed, opt_state=(), interpret=False):
+    """Delta-form gated aggregation + the configured server optimizer:
+
+        d  <- agg(cast(w_k - w, fed.agg_dtype))     (ONE fused fedagg call)
+        w, moments <- ServerOptimizer(fed.server_opt)(w, moments, d)
+
+    Returns (new_params, new_opt_state). ``client_params`` may live in
+    cohort space [K, ...] (zero gates drop padding slots). ``fed.agg_dtype``
+    selects the reduced-precision delta wire format; accumulation is f32
+    either way."""
+    ad = jnp.dtype(fed.agg_dtype)
+    deltas = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
+                          client_params, global_params)
+    agg = aggregate_clients(deltas, weights, gates, use_pallas=fed.use_pallas,
+                            fused=fed.fused_agg, interpret=interpret)
+    return apply_server_opt(fed, global_params, opt_state, agg)

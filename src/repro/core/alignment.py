@@ -44,6 +44,9 @@ def inclusion_gates(local_losses, global_loss, eps, priority_mask, *,
     Back-compat wrapper over the SelectionStrategy registry in fl/engine.py
     (the single gating implementation). ``selection`` names any registered
     strategy: fedalign | all | priority_only | topk_align | grad_sim | ...
+    This wrapper is STATELESS — strategies needing the cross-round
+    FederationState EMAs (``welfare``) raise here; thread a state through
+    ``engine.make_round_fn`` instead.
     """
     from repro.fl import engine
     ctx = engine.SelectionContext(

@@ -1,12 +1,14 @@
 """FedALIGN communication-round engine — simulator-facing adapter.
 
 The actual round implementation (selection strategies, eps schedule,
-warm-up, participation sampling, execution backends, fused aggregation)
-lives in ``repro.fl.engine``; this module keeps the historical simulator
-entry point so ``fl/simulator.py`` and the paper benchmarks are untouched
-by engine refactors.
+warm-up, participation sampling, execution backends, fused aggregation,
+server optimizers, cross-round state) lives in ``repro.fl.engine``; this
+module keeps the historical simulator entry point so ``fl/simulator.py``
+and the paper benchmarks are untouched by engine refactors.
 
-One jitted ``round_fn`` executes a full communication round:
+One jitted ``round_fn`` executes a full communication round over a
+persistent ``FederationState`` (params + server-optimizer moments +
+overflow backlog + utility EMAs):
 
   1. server broadcasts w_t (implicit: vmap/scan over the client axis);
   2. every client evaluates F_k(w_t) on its local data (full batch);
@@ -15,8 +17,11 @@ One jitted ``round_fn`` executes a full communication round:
   5. E local epochs of minibatch SGD (or FedProx) — gate-before-train:
      for strategies gated by the eval pre-pass alone, only included
      clients train (scan cond-skip; dense [K, ...] cohort gather when
-     ``fed.max_cohort > 0``). Delta-based strategies run 5 before 4;
-  6. renormalized gated aggregation (core/aggregation.py, fused fedagg).
+     ``fed.max_cohort > 0``, backlog-aware overflow). Delta-based
+     strategies run 5 before 4;
+  6. renormalized gated delta aggregation (core/aggregation.py, fused
+     fedagg) + the configured ServerOptimizer step on the aggregated
+     delta (sgd | momentum | adam | yogi).
 
 Works for any (loss_fn, params) pair — the paper's logreg/2NN/CNN and the
 LM-scale models alike. For pod-scale pjit runs see fl/sharded.py.
@@ -29,12 +34,19 @@ from typing import Callable
 def make_round_fn(loss_fn: Callable, fed, *, backend: str = None) -> Callable:
     """loss_fn(params, batch)->(loss, metrics); batch={'x','y'} (or tokens).
 
-    Returns round_fn(global_params, data, priority_mask, weights, rng,
-    round_idx) -> (new_global, stats). ``data`` leaves have leading client
+    Returns round_fn(state, data, priority_mask, weights, rng, round_idx)
+    -> (new_state, stats), with ``state`` a ``fl.engine.FederationState``
+    (build one with ``init_state``). ``data`` leaves have leading client
     axis [C, n, ...]. ``backend`` (default fed.backend) picks vmap_spatial
     or scan_temporal execution — identical rounds either way."""
     from repro.fl import engine
     return engine.make_round_fn(loss_fn, fed, backend=backend)
+
+
+def init_state(params, fed, num_clients=None):
+    """Fresh ``fl.engine.FederationState`` (re-exported for adapters)."""
+    from repro.fl import engine
+    return engine.init_state(params, fed, num_clients)
 
 
 def _local_solver(loss_fn, fed):

@@ -1,4 +1,6 @@
-from repro.fl.simulator import evaluate, run_federation, run_local_baseline  # noqa: F401
-from repro.fl.engine import (BACKENDS, STRATEGIES, SelectionContext,  # noqa: F401
-                             compute_gates, get_strategy, make_round_fn,
-                             register_strategy)
+from repro.fl.simulator import (evaluate, load_federation_state,  # noqa: F401
+                                run_federation, run_local_baseline,
+                                save_federation_state)
+from repro.fl.engine import (BACKENDS, STRATEGIES, FederationState,  # noqa: F401
+                             SelectionContext, compute_gates, get_strategy,
+                             init_state, make_round_fn, register_strategy)

@@ -21,6 +21,11 @@ Two orthogonal seams:
                     et al. (arXiv:2402.05050): include non-priority client k
                     iff cosine(delta_k, delta_P) >= sim_threshold, where
                     delta_P is the priority-weighted mean update
+    welfare       — welfare/fairness-aware selection after Travadi et al.
+                    (arXiv:2302.08976): gate on the cross-round utility
+                    EMAs carried in FederationState (smoothed loss gap
+                    within eps_t, or inclusion EMA under the fairness
+                    floor)
 
 * **Execution backend** — how the client axis is executed:
 
@@ -32,25 +37,90 @@ Two orthogonal seams:
   Both backends produce identical rounds (same PRNG fan-out, same gating,
   same aggregation) — only the schedule over hardware differs.
 
-Aggregation routes through `core.aggregation.aggregate_clients`, which by
-default fuses the whole client-stacked pytree into one [C, M_total] buffer
-and invokes the `fedagg` kernel once per round (`FedConfig.use_pallas`
-selects the Pallas TPU kernel; `agg_dtype` casts client deltas on the wire).
+Rounds thread a persistent **FederationState** — a registered pytree
+carrying the global params, the server-optimizer moments, the per-client
+overflow backlog, and the per-client utility EMAs. Every round function in
+the repo has the signature
+
+    round_fn(state: FederationState, ...) -> (FederationState, stats)
+
+so cross-round behaviour (FedAdam/FedYogi server updates, backlog
+fairness, welfare selection, and later staggered/async cohorts) lives in
+one seam that survives the jitted ``lax.scan`` driver and checkpoints as
+one pytree.
+
+Aggregation routes through `core.aggregation.aggregate_updates`: the whole
+client-stacked delta pytree fuses into one [C, M_total] buffer, hits the
+`fedagg` kernel once per round (`FedConfig.use_pallas` selects the Pallas
+TPU kernel; `agg_dtype` casts client deltas on the wire), and the
+aggregated delta feeds the decorator-registered ServerOptimizer
+(`FedConfig.server_opt`: sgd | momentum | adam | yogi).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import aggregate_clients, flatten_stacked
+from repro.core.aggregation import (aggregate_updates, flatten_stacked,
+                                    server_optimizer)
 from repro.core.alignment import epsilon_at, global_loss_from_locals
 from repro.optim.schedules import make_schedule
 from repro.utils import tree_axpy
 
 BACKENDS = ("vmap_spatial", "scan_temporal")
+
+
+# ============================================================ federation state
+@dataclass
+class FederationState:
+    """Everything FedALIGN carries across the round boundary.
+
+    A registered pytree: jit/scan carries, donation, and
+    ``checkpoint/io.py`` all treat it as one tree. Leaf layout is fixed by
+    the config (optimizer choice, client count), never by round-time data —
+    the pytree-structure stability ``lax.scan`` requires.
+
+    * ``params`` — global model parameters w_t.
+    * ``opt_state`` — server-optimizer moments (shape set by
+      ``fed.server_opt``: ``()`` for sgd, FedAvgM momentum tree,
+      adam/yogi m/v/t).
+    * ``backlog`` — [C] int32 rounds each client has been dropped by
+      ``max_cohort`` overflow since it last aggregated; wins cohort ties.
+    * ``util_ema`` — [C] f32 EMA of the alignment gap |F_k(w_t) - F(w_t)|
+      (decay ``fed.utility_ema``), the welfare strategy's utility signal.
+    * ``incl_ema`` — [C] f32 EMA of the effective inclusion gates — the
+      cross-round participation share welfare fairness reads.
+    """
+    params: Any
+    opt_state: Any
+    backlog: Any
+    util_ema: Any
+    incl_ema: Any
+
+    def replace(self, **kw) -> "FederationState":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_dataclass(
+    FederationState,
+    data_fields=["params", "opt_state", "backlog", "util_ema", "incl_ema"],
+    meta_fields=[])
+
+
+def init_state(params, fed, num_clients: Optional[int] = None) -> FederationState:
+    """Fresh FederationState for a federation of ``num_clients`` (defaults
+    to ``fed.num_clients``): zero moments, zero backlog, zero EMAs."""
+    C = int(num_clients if num_clients is not None else fed.num_clients)
+    return FederationState(
+        params=params,
+        opt_state=server_optimizer(fed).init(params),
+        backlog=jnp.zeros((C,), jnp.int32),
+        util_ema=jnp.zeros((C,), jnp.float32),
+        incl_ema=jnp.zeros((C,), jnp.float32))
 
 
 # ============================================================ selection seam
@@ -61,7 +131,12 @@ class SelectionContext:
     align_vals/global_align are the paper's matching statistic (losses by
     theory, accuracies in the experiments — fed.align_stat). delta_cos is
     only populated when the strategy declares ``needs_deltas`` (it costs a
-    [C, M_total] flatten of the client updates)."""
+    [C, M_total] flatten of the client updates, or a CountSketch of them
+    under ``fed.grad_sim_sketch``). The cross-round fields
+    (backlog/util_ema/incl_ema) come from FederationState: ``util_ema``
+    is the BIAS-CORRECTED smoothed gap with THIS round's observation
+    already folded in (``utility_estimate``); ``incl_ema`` and
+    ``backlog`` describe previous rounds only (gates aren't fixed yet)."""
     align_vals: Any                    # [C] F_k(w_t) (or acc_k(w_t))
     global_align: Any                  # scalar F(w_t)
     eps: Any                           # scalar eps_t
@@ -72,6 +147,11 @@ class SelectionContext:
     delta_cos: Any = None              # [C] cosine(delta_k, delta_P)
     topk: int = 4                      # topk_align budget
     sim_threshold: float = 0.0         # grad_sim cosine threshold
+    backlog: Any = None                # [C] int32 overflow backlog (state)
+    util_ema: Any = None               # [C] bias-corrected loss-gap EMA
+                                       # incl. this round's observation
+    incl_ema: Any = None               # [C] inclusion EMA (prev. rounds)
+    welfare_floor: float = 0.0         # welfare fairness floor on incl_ema
 
 
 STRATEGIES: dict[str, Callable] = {}
@@ -141,6 +221,23 @@ def _grad_sim(ctx):
     return (ctx.delta_cos >= ctx.sim_threshold).astype(jnp.float32)
 
 
+@register_strategy("welfare")
+def _welfare(ctx):
+    """Welfare/fairness-aware selection (Travadi et al., arXiv:2302.08976):
+    include non-priority client k when its SMOOTHED alignment gap (the
+    loss-gap EMA, utility of including k for the priority objective) is
+    inside the eps band, or when its inclusion EMA has starved below the
+    fairness floor. utility_ema=0 degenerates to plain fedalign."""
+    if ctx.util_ema is None or ctx.incl_ema is None:
+        raise ValueError(
+            "welfare needs ctx.util_ema/ctx.incl_ema (cross-round client "
+            "utility EMAs from FederationState); this caller is stateless — "
+            "thread a FederationState through the round")
+    aligned = ctx.util_ema < ctx.eps
+    starved = ctx.incl_ema < ctx.welfare_floor
+    return (aligned | starved).astype(jnp.float32)
+
+
 def compute_gates(ctx: SelectionContext, selection: str = "fedalign"):
     """I_{k,t} per client — THE shared gating implementation.
 
@@ -168,7 +265,8 @@ def cosine_to_priority(flat_deltas, weights, priority_mask):
     return dots / jnp.maximum(norms, 1e-12)
 
 
-def cohort_select(gates, align_vals, global_align, priority_mask, k: int):
+def cohort_select(gates, align_vals, global_align, priority_mask, k: int,
+                  backlog=None):
     """Deterministic gather order for the gate-before-train cohort.
 
     Returns (cohort_idx [K], cohort_gates [K], effective_gates [C]).
@@ -177,41 +275,109 @@ def cohort_select(gates, align_vals, global_align, priority_mask, k: int):
     non-priority clients ranked by alignment match |F_k - F|, then excluded
     clients as zero-gate padding (their slot trains but is dropped by the
     aggregation's gate weighting). Overflow policy — more than K clients
-    gate in — drops the WORST-matched non-priority clients this round
-    (stable sort: ties break by client index, so the order is
-    deterministic). ``effective_gates`` is the [C] inclusion vector the
-    aggregation actually honours (== ``gates`` when nothing overflowed)."""
+    gate in — drops the WORST-matched non-priority clients this round.
+    ``backlog`` ([C] rounds spent dropped by overflow, from
+    FederationState) breaks match-quality ties: at equal |F_k - F| the
+    longer-starved client wins the slot, so overflow rotates instead of
+    permanently starving the same well-aligned clients. At backlog 0 (or
+    ``backlog=None``) ties fall back to client index — the original
+    drop-worst policy, unchanged. ``effective_gates`` is the [C] inclusion
+    vector the aggregation actually honours (== ``gates`` when nothing
+    overflowed)."""
     pri = priority_mask.astype(bool)
+    C = gates.shape[0]
     diff = jnp.abs(align_vals - global_align).astype(jnp.float32)
     rank = jnp.where(pri, -1.0, jnp.minimum(diff, 1e30))
-    order = jnp.argsort(jnp.where(gates > 0, rank, jnp.inf), stable=True)
+    key = jnp.where(gates > 0, rank, jnp.inf)
+    bl = (jnp.zeros((C,), jnp.float32) if backlog is None
+          else backlog.astype(jnp.float32))
+    # lexicographic: match quality, then backlog (older debts first), then
+    # client index — deterministic and identical to the stable argsort of
+    # ``key`` whenever every backlog is 0
+    order = jnp.lexsort((jnp.arange(C), -bl, key))
     cohort_idx = order[:k]
     cohort_gates = gates[cohort_idx]
     eff_gates = jnp.zeros_like(gates).at[cohort_idx].set(cohort_gates)
     return cohort_idx, cohort_gates, eff_gates
 
 
-def gated_server_update(fed, global_params, client_params, weights, gates):
-    """(6) renormalized gated aggregation into the global params — one fused
-    fedagg per round, honouring ``fed.agg_dtype``'s reduced-precision delta
-    wire format (w <- w + agg(cast(w_k - w)) halves the server all-reduce).
+def backlog_update(backlog, gates, eff_gates):
+    """Cross-round overflow-fairness ledger: +1 for every client that gated
+    in but lost its slot to the cohort budget, reset for clients the
+    aggregation honoured, untouched for clients the selection excluded."""
+    dropped = (gates > 0) & (eff_gates == 0)
+    included = eff_gates > 0
+    return jnp.where(dropped, backlog + 1,
+                     jnp.where(included, jnp.zeros_like(backlog), backlog))
+
+
+def utility_update(fed, util_ema, align_vals, global_align):
+    """Loss-gap EMA step (decay ``fed.utility_ema``) with this round's
+    observation |F_k(w_t) - F(w_t)| folded in. The carried EMA is RAW
+    (zero-initialized); consumers debias it with ``utility_estimate``."""
+    beta = jnp.float32(fed.utility_ema)
+    gap = jnp.abs(align_vals - global_align).astype(jnp.float32)
+    return beta * util_ema + (1.0 - beta) * gap
+
+
+def utility_estimate(fed, util_ema, round_idx):
+    """Bias-corrected smoothed gap (adam-style 1 - beta^t divisor).
+
+    The raw zero-initialized EMA UNDERestimates the gap for the first
+    ~1/(1-beta) rounds, which would admit badly-misaligned clients into
+    the welfare gate early in training; the EMA has been updated
+    ``round_idx + 1`` times when the gate reads it (every round updates
+    it, warm-up included), so the correction is exact."""
+    beta = jnp.float32(fed.utility_ema)
+    t = jnp.asarray(round_idx, jnp.float32) + 1.0
+    return util_ema / jnp.maximum(1.0 - beta ** t, 1e-12)
+
+
+def inclusion_update(fed, incl_ema, eff_gates):
+    """Inclusion-history EMA step over the EFFECTIVE gates (what the
+    aggregation honoured, overflow included)."""
+    beta = jnp.float32(fed.utility_ema)
+    return beta * incl_ema + (1.0 - beta) * eff_gates.astype(jnp.float32)
+
+
+def server_update(fed, global_params, opt_state, client_params, weights, gates):
+    """(6) renormalized gated delta aggregation + the configured
+    ServerOptimizer step — one fused fedagg per round, honouring
+    ``fed.agg_dtype``'s reduced-precision delta wire format, then
+    ``fed.server_opt`` (sgd | momentum | adam | yogi) applied to the
+    aggregated delta. Returns (new_params, new_opt_state).
     ``client_params``/``weights``/``gates`` may live in cohort space
     [K, ...]: zero gates drop padding slots, so the result matches the
     dense [C, ...] aggregation whenever every included client made the
     cohort. THE aggregation-routing implementation — the sharded pod
-    rounds call it too."""
-    agg_kw = dict(use_pallas=fed.use_pallas, fused=fed.fused_agg)
-    if fed.agg_dtype != "float32":
-        ad = jnp.dtype(fed.agg_dtype)
-        wire = jax.tree.map(lambda ck, gp: (ck - gp[None]).astype(ad),
-                            client_params, global_params)
-        agg = aggregate_clients(wire, weights, gates, **agg_kw)
-        return jax.tree.map(
-            lambda gp, d: (gp + d.astype(jnp.float32)).astype(gp.dtype),
-            global_params, agg)
-    new_global = aggregate_clients(client_params, weights, gates, **agg_kw)
-    return jax.tree.map(lambda n, p: n.astype(p.dtype),
-                        new_global, global_params)
+    rounds call it too (core/aggregation.aggregate_updates)."""
+    return aggregate_updates(global_params, client_params, weights, gates,
+                             fed=fed, opt_state=opt_state)
+
+
+def delta_sketch(delta, key, dim: int):
+    """[dim] CountSketch (sparse Johnson-Lindenstrauss) of a parameter-delta
+    pytree: every coordinate lands in one random bucket with a random sign.
+
+    One O(M) pass, no [dim, M] projection matrix is ever materialized — the
+    streaming-friendly delta score for grad_sim. The hash/sign streams
+    derive from ``key`` and the leaf index only, so every client is
+    projected identically and sketched cosines estimate the true delta
+    cosines (error ~ 1/sqrt(dim))."""
+    out = jnp.zeros((dim,), jnp.float32)
+    for i, leaf in enumerate(jax.tree.leaves(delta)):
+        x = leaf.reshape(-1).astype(jnp.float32)
+        kh, ks = jax.random.split(jax.random.fold_in(key, i))
+        h = jax.random.randint(kh, (x.size,), 0, dim)
+        s = jax.random.rademacher(ks, (x.size,), dtype=jnp.float32)
+        out = out + jax.ops.segment_sum(s * x, h, num_segments=dim)
+    return out
+
+
+def sketch_key(fed, round_idx):
+    """Per-round projection key — shared by every client (and by both
+    backends, so sketched rounds stay backend-identical)."""
+    return jax.random.fold_in(jax.random.PRNGKey(fed.seed ^ 0x5E7C), round_idx)
 
 
 def participation_mask(fed, key, priority_mask, round_idx):
@@ -309,18 +475,21 @@ _BACKENDS = {
 def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> Callable:
     """loss_fn(params, batch) -> (loss, metrics); batch = {'x','y'} (or tokens).
 
-    Returns round_fn(global_params, data, priority_mask, weights, rng,
-    round_idx) -> (new_global, stats). ``data`` leaves have leading client
-    axis [C, n, ...]. ``backend`` defaults to ``fed.backend``; both backends
-    produce identical rounds.
+    Returns round_fn(state, data, priority_mask, weights, rng, round_idx)
+    -> (new_state, stats), with ``state`` a FederationState (build one with
+    ``init_state``). ``data`` leaves have leading client axis [C, n, ...].
+    ``backend`` defaults to ``fed.backend``; both backends produce
+    identical rounds.
 
     Round order depends on the strategy. Strategies that gate from the eval
     pre-pass alone (``not needs_deltas``) run **eval -> gates -> train**:
     gates are fixed before any local epoch, so the scan backend cond-skips
     gated-out clients and, when ``fed.max_cohort > 0``, only the K gathered
-    included clients train at all (see ``cohort_select`` for the overflow
-    policy). Delta-based strategies (grad_sim) keep the train-first order —
-    their statistic needs the client updates."""
+    included clients train at all (see ``cohort_select`` for the
+    backlog-aware overflow policy). Delta-based strategies (grad_sim) keep
+    the train-first order — their statistic needs the client updates
+    (exact [C, M_total] flatten, or a CountSketch under
+    ``fed.grad_sim_sketch``)."""
     backend = backend or fed.backend
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")
@@ -331,7 +500,9 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
     warmup_rounds = int(fed.warmup_frac * fed.rounds)
     gate_before_train = not strategy.needs_deltas
 
-    def round_fn(global_params, data, priority_mask, weights, rng, round_idx):
+    def round_fn(state: FederationState, data, priority_mask, weights, rng,
+                 round_idx):
+        global_params = state.params
         C = priority_mask.shape[0]
         lr = sched(round_idx)
         eps = epsilon_at(fed, round_idx)
@@ -348,6 +519,10 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
         g_loss = global_loss_from_locals(local_losses, priority_mask, weights)
         g_align = global_loss_from_locals(align_vals, priority_mask, weights)
 
+        # cross-round utility EMA folds in this round's gap BEFORE gating —
+        # the welfare strategy gates on the smoothed signal
+        util_ema = utility_update(fed, state.util_ema, align_vals, g_align)
+
         # participation sampling (paper App. C.3 / A.4)
         rng, pkey = jax.random.split(rng)
         part = participation_mask(fed, pkey, priority_mask, round_idx)
@@ -363,42 +538,68 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
                 align_vals=align_vals, global_align=g_align, eps=eps,
                 priority_mask=priority_mask, weights=weights,
                 participation=part, warmup=warm, delta_cos=delta_cos,
-                topk=fed.topk, sim_threshold=fed.sim_threshold)
+                topk=fed.topk, sim_threshold=fed.sim_threshold,
+                backlog=state.backlog,
+                util_ema=utility_estimate(fed, util_ema, round_idx),
+                incl_ema=state.incl_ema, welfare_floor=fed.welfare_floor)
 
         if gate_before_train:
             # (4) gates first — they only need the eval pre-pass
-            gates = compute_gates(make_ctx(), fed.selection)
+            sel_gates = compute_gates(make_ctx(), fed.selection)
+            gates = sel_gates
             k = min(int(fed.max_cohort), C) if fed.max_cohort > 0 else 0
             if k > 0:
-                # (5) gather-train-scatter: only K cohort slots run E epochs
+                # (5) gather-train-scatter: only K cohort slots run E epochs;
+                # overflow ties resolve toward the longest-backlogged client
                 cohort_idx, cohort_gates, gates = cohort_select(
-                    gates, align_vals, g_align, priority_mask, k)
+                    sel_gates, align_vals, g_align, priority_mask, k,
+                    backlog=state.backlog)
                 cohort_params = train_clients(
                     solver, global_params,
                     jax.tree.map(lambda a: a[cohort_idx], data),
                     lkeys[cohort_idx], lr, gates=cohort_gates)
-                new_global = gated_server_update(fed, global_params,
-                                                 cohort_params,
-                                                 weights[cohort_idx],
-                                                 cohort_gates)
+                new_global, opt_state = server_update(
+                    fed, global_params, state.opt_state, cohort_params,
+                    weights[cohort_idx], cohort_gates)
             else:
                 # (5) dense: everyone trains, but the scan backend still
                 # cond-skips gated-out clients (no epochs for gate 0)
                 client_params = train_clients(solver, global_params, data,
                                               lkeys, lr, gates=gates)
-                new_global = gated_server_update(fed, global_params,
-                                                 client_params, weights, gates)
+                new_global, opt_state = server_update(
+                    fed, global_params, state.opt_state, client_params,
+                    weights, gates)
         else:
             # (5) train-first: the statistic needs the client updates
+            sel_gates = None
             client_params = train_clients(solver, global_params, data, lkeys, lr)
             deltas = jax.tree.map(lambda ck, g: ck - g[None],
                                   client_params, global_params)
-            delta_cos = cosine_to_priority(flatten_stacked(deltas),
-                                           weights, priority_mask)
+            if fed.grad_sim_sketch:
+                # streamed-friendly score: CountSketch each delta instead of
+                # the exact [C, M_total] flatten (same projection per client)
+                skey = sketch_key(fed, round_idx)
+                sketches = jax.vmap(
+                    lambda d: delta_sketch(d, skey, int(fed.sketch_dim)))(deltas)
+                delta_cos = cosine_to_priority(sketches, weights, priority_mask)
+            else:
+                delta_cos = cosine_to_priority(flatten_stacked(deltas),
+                                               weights, priority_mask)
             # (4) gates from the selection strategy (core/alignment rule et al.)
             gates = compute_gates(make_ctx(delta_cos), fed.selection)
-            new_global = gated_server_update(fed, global_params, client_params,
-                                             weights, gates)
+            new_global, opt_state = server_update(
+                fed, global_params, state.opt_state, client_params, weights,
+                gates)
+
+        # cross-round state: backlog ledger + inclusion EMA follow the
+        # EFFECTIVE gates the aggregation honoured
+        backlog = backlog_update(state.backlog,
+                                 gates if sel_gates is None else sel_gates,
+                                 gates)
+        incl_ema = inclusion_update(fed, state.incl_ema, gates)
+        new_state = FederationState(params=new_global, opt_state=opt_state,
+                                    backlog=backlog, util_ema=util_ema,
+                                    incl_ema=incl_ema)
 
         npri = (1.0 - priority_mask.astype(jnp.float32))
         included_mass = jnp.sum(npri * weights * gates)
@@ -409,10 +610,11 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
             "global_loss": g_loss,
             "local_losses": local_losses,
             "gates": gates,
+            "backlog": backlog,
             "theta_round": 1.0 / (1.0 + included_mass),   # paper eq. (7) term
             "included_nonpriority": jnp.sum(npri * gates),
             "warmup": warm.astype(jnp.int32) if hasattr(warm, "astype") else jnp.int32(warm),
         }
-        return new_global, stats
+        return new_state, stats
 
     return round_fn

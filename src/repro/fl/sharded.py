@@ -14,20 +14,38 @@ Two execution modes, chosen by model size (DESIGN.md §3):
   federation semantics are identical — clients are time-multiplexed
   instead of space-multiplexed.
 
+Both rounds have the engine's persistent-state signature
+
+    round_step(state: engine.FederationState, batch, round_idx=0)
+        -> (new_state, stats)
+
+so server-optimizer moments (``fed.server_opt``), the ``max_cohort``
+overflow backlog, and the welfare utility EMAs thread through pod rounds
+exactly as through the in-silico simulator.
+
 The server statistic F(w_t) is computed on a server-held global batch
 (paper §3.1: "the server transmits ... also its associated loss"), so the
 gate needs no second pass over clients. Gating itself comes from the
 SelectionStrategy registry in fl/engine.py — the SAME implementation the
-in-silico simulator uses. Both modes gate BEFORE training wherever the
-strategy allows it (``not needs_deltas``): the temporal scan fixes gates
-from a cheap eval pre-pass (one forward per client, negligible next to E
-local steps) and wraps each streamed client's training in
-``lax.cond(gate > 0, ...)`` so gated-out FSDP clients skip their E local
-steps entirely; the spatial round, when ``fed.max_cohort > 0``, gathers
-the included clients into a dense [K, ...] cohort and trains only those
-(``engine.cohort_select`` documents the overflow policy). Delta-based
-strategies (grad_sim) need client updates resident, keep the train-first
-order, and are spatial-only.
+in-silico simulator uses, as is the cohort gather order
+(``engine.cohort_select``: one overflow/backlog policy, no pod/simulator
+drift). Both modes gate BEFORE training wherever the strategy allows it
+(``not needs_deltas``): the temporal scan fixes gates from a cheap eval
+pre-pass (one forward per client, negligible next to E local steps) and
+wraps each streamed client's training in ``lax.cond(gate > 0, ...)`` so
+gated-out FSDP clients skip their E local steps entirely; the spatial
+round, when ``fed.max_cohort > 0``, gathers the included clients into a
+dense [K, ...] cohort and trains only those. Delta-based strategies
+(grad_sim) keep the train-first order; the temporal round requires
+``fed.grad_sim_sketch=True`` and scores streamed clients on a CountSketch
+random projection of their delta (``engine.delta_sketch``, width
+``fed.sketch_dim``) — the [C, sketch_dim] sketch buffer replaces the
+impossible [C, M_total] flatten — then re-runs the (deterministic) local
+steps of included clients in a second cond-skipped scan once the gates
+are known. The opt-in is explicit because the sketch is JL-approximate:
+with it set, the spatial round scores on the same sketches, so the two
+modes stay gate-identical; without it, exact cosines exist only
+spatially and the temporal round refuses rather than silently diverge.
 """
 from __future__ import annotations
 
@@ -37,10 +55,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import flatten_stacked
+from repro.core.aggregation import apply_server_opt, flatten_stacked
 from repro.core.alignment import epsilon_at
 from repro.fl import engine
-from repro.utils import tree_axpy
+from repro.utils import tree_axpy, tree_sub
 
 FSDP_ARCHS = {"jamba-1.5-large-398b", "llava-next-34b"}
 
@@ -50,7 +68,8 @@ def needs_fsdp(cfg) -> bool:
 
 
 def _train_steps(model, params, batch, lr, n_steps):
-    """E local SGD steps on one client's batch."""
+    """E local SGD steps on one client's batch (deterministic: full-batch
+    gradients, no PRNG — re-running them reproduces the update exactly)."""
     def step(p, _):
         loss, grads = jax.value_and_grad(
             lambda q: model.loss_fn(q, batch)[0])(p)
@@ -67,24 +86,41 @@ def _local_steps(model, params, batch, lr, n_steps):
     return _train_steps(model, params, batch, lr, n_steps), loss0
 
 
-def _gate_ctx(fed, local_losses, server_loss, pm, w, delta_cos=None,
-              round_idx=0):
+def _gate_ctx(fed, state, util_ema, local_losses, server_loss, pm, w,
+              delta_cos=None, round_idx=0):
     """SelectionContext for one pod-scale round. ``round_idx`` threads the
     driver's round counter into the eps schedule (eps_t via ``epsilon_at``);
-    drivers that never pass it keep the t=0 value (== fed.epsilon)."""
+    drivers that never pass it keep the t=0 value (== fed.epsilon).
+    ``util_ema`` is the updated RAW loss-gap EMA (this round's observation
+    folded in) — the strategy sees its bias-corrected estimate;
+    backlog/incl_ema come straight from the FederationState."""
     return engine.SelectionContext(
         align_vals=local_losses, global_align=server_loss,
         eps=epsilon_at(fed, round_idx), priority_mask=pm, weights=w,
-        delta_cos=delta_cos, topk=fed.topk, sim_threshold=fed.sim_threshold)
+        delta_cos=delta_cos, topk=fed.topk, sim_threshold=fed.sim_threshold,
+        backlog=state.backlog,
+        util_ema=engine.utility_estimate(fed, util_ema, round_idx),
+        incl_ema=state.incl_ema, welfare_floor=fed.welfare_floor)
 
 
-# the aggregation routing (f32 and reduced-precision delta wire formats,
-# dense [C, ...] or cohort [K, ...] stacks) is THE engine implementation
-_apply_agg = engine.gated_server_update
+def _next_state(fed, state, new_params, opt_state, sel_gates, eff_gates,
+                util_ema):
+    """Advance the cross-round carry with THE engine update rules."""
+    return engine.FederationState(
+        params=new_params, opt_state=opt_state,
+        backlog=engine.backlog_update(state.backlog, sel_gates, eff_gates),
+        util_ema=util_ema,
+        incl_ema=engine.inclusion_update(fed, state.incl_ema, eff_gates))
+
+
+# the aggregation + server-optimizer routing (f32 and reduced-precision
+# delta wire formats, dense [C, ...] or cohort [K, ...] stacks) is THE
+# engine implementation
+_apply_agg = engine.server_update
 
 
 def make_spatial_round(model, fed, num_clients: int):
-    """Returns round_step(params, batch, round_idx=0) -> (params', stats).
+    """Returns round_step(state, batch, round_idx=0) -> (new_state, stats).
 
     batch: client-stacked arrays [C, b, ...] + server_* arrays (global data).
     priority_mask/weights [C] ride inside batch so everything is one pytree.
@@ -92,15 +128,17 @@ def make_spatial_round(model, fed, num_clients: int):
     Gate-before-train: for strategies that gate from losses of the received
     model alone (``not needs_deltas``) and ``fed.max_cohort > 0``, an eval
     pre-pass fixes the gates, the K included clients are gathered into a
-    dense [K, ...] cohort, and only they run their E local steps — round
-    cost O(K*E) instead of O(C*E). grad_sim keeps the train-first order.
+    dense [K, ...] cohort (``engine.cohort_select`` — backlog-aware
+    overflow), and only they run their E local steps — round cost O(K*E)
+    instead of O(C*E). grad_sim keeps the train-first order.
     """
     E = fed.local_epochs
     lr = fed.lr
     strategy = engine.get_strategy(fed.selection)
     use_cohort = fed.max_cohort > 0 and not strategy.needs_deltas
 
-    def round_step(params, batch, round_idx=0):
+    def round_step(state, batch, round_idx=0):
+        params = state.params
         client_batch = batch["clients"]
         pm = batch["priority_mask"]
         w = batch["weights"]
@@ -112,37 +150,54 @@ def make_spatial_round(model, fed, num_clients: int):
             # eval -> gates -> gather-train: only K cohort slots pay E steps
             local_losses = jax.vmap(
                 lambda cb: model.loss_fn(params, cb)[0])(client_batch)
-            gates = engine.compute_gates(
-                _gate_ctx(fed, local_losses, server_loss, pm, w,
-                          round_idx=round_idx), fed.selection)
+            util_ema = engine.utility_update(fed, state.util_ema,
+                                             local_losses, server_loss)
+            sel_gates = engine.compute_gates(
+                _gate_ctx(fed, state, util_ema, local_losses, server_loss,
+                          pm, w, round_idx=round_idx), fed.selection)
             idx, cg, gates = engine.cohort_select(
-                gates, local_losses, server_loss, pm, min(fed.max_cohort, C))
+                sel_gates, local_losses, server_loss, pm,
+                min(fed.max_cohort, C), backlog=state.backlog)
             cohort_params = jax.vmap(
                 lambda cb: _train_steps(model, params, cb, lr, E))(
                 jax.tree.map(lambda a: a[idx], client_batch))
-            new_params = _apply_agg(fed, params, cohort_params, w[idx], cg)
+            new_params, opt_state = _apply_agg(fed, params, state.opt_state,
+                                               cohort_params, w[idx], cg)
         else:
             client_params, local_losses = jax.vmap(
                 lambda cb: _local_steps(model, params, cb, lr, E))(client_batch)
+            util_ema = engine.utility_update(fed, state.util_ema,
+                                             local_losses, server_loss)
 
             delta_cos = None
             if strategy.needs_deltas:
                 deltas = jax.tree.map(lambda ck, g: ck - g[None],
                                       client_params, params)
-                delta_cos = engine.cosine_to_priority(flatten_stacked(deltas),
-                                                      w, pm)
+                if fed.grad_sim_sketch:
+                    skey = engine.sketch_key(fed, round_idx)
+                    sketches = jax.vmap(lambda d: engine.delta_sketch(
+                        d, skey, int(fed.sketch_dim)))(deltas)
+                    delta_cos = engine.cosine_to_priority(sketches, w, pm)
+                else:
+                    delta_cos = engine.cosine_to_priority(
+                        flatten_stacked(deltas), w, pm)
 
-            gates = engine.compute_gates(
-                _gate_ctx(fed, local_losses, server_loss, pm, w, delta_cos,
-                          round_idx=round_idx), fed.selection)
-            new_params = _apply_agg(fed, params, client_params, w, gates)
+            sel_gates = gates = engine.compute_gates(
+                _gate_ctx(fed, state, util_ema, local_losses, server_loss,
+                          pm, w, delta_cos, round_idx=round_idx),
+                fed.selection)
+            new_params, opt_state = _apply_agg(fed, params, state.opt_state,
+                                               client_params, w, gates)
+        new_state = _next_state(fed, state, new_params, opt_state,
+                                sel_gates, gates, util_ema)
         stats = {
             "server_loss": server_loss,
             "local_losses": local_losses,
             "gates": gates,
+            "backlog": new_state.backlog,
             "theta_round": 1.0 / (1.0 + jnp.sum((1 - pm.astype(jnp.float32)) * w * gates)),
         }
-        return new_params, stats
+        return new_state, stats
 
     return round_step
 
@@ -152,18 +207,30 @@ def make_temporal_round(model, fed, cohort: int):
 
     batch['clients'] leaves are [C, b, ...] with C the SCAN axis (unsharded);
     the inner batch dim b is sharded over (pod, data).
+
+    Delta-based strategies (grad_sim) stream too: a first scan trains each
+    client and keeps only a [sketch_dim] CountSketch of its delta
+    (``engine.delta_sketch`` — the projection, never the [C, M_total]
+    deltas, crosses the scan), cosines against the priority-weighted mean
+    sketch fix the gates, and a second cond-skipped scan re-runs the
+    deterministic local steps of the included clients to accumulate their
+    gated updates. Cost: one extra pass of E local steps for included
+    clients — the price of scoring without materializing per-client deltas.
     """
     E = fed.local_epochs
     lr = fed.lr
     strategy = engine.get_strategy(fed.selection)
-    if strategy.needs_deltas:
-        raise NotImplementedError(
-            f"selection {fed.selection!r} needs client deltas resident in "
-            "memory; the temporal (FSDP) round streams clients one at a "
-            "time — use the spatial round or the engine's vmap_spatial "
-            "backend")
+    if strategy.needs_deltas and not fed.grad_sim_sketch:
+        raise ValueError(
+            f"selection {fed.selection!r} needs client deltas; the temporal "
+            "(FSDP) round streams clients and can only score them on a "
+            "CountSketch of their delta — set FedConfig.grad_sim_sketch=True "
+            "(and size sketch_dim) to opt in to the JL-approximate statistic "
+            "(the spatial round then sketches too, keeping the modes "
+            "identical), or use the spatial round for exact cosines")
 
-    def round_step(params, batch, round_idx=0):
+    def round_step(state, batch, round_idx=0):
+        params = state.params
         pm = batch["priority_mask"]
         w = batch["weights"]
         server_loss, _ = model.loss_fn(params, batch["server"])
@@ -172,9 +239,26 @@ def make_temporal_round(model, fed, cohort: int):
         # fixed (rank-based strategies need the full loss vector)
         local_losses = jax.lax.map(
             lambda cb: model.loss_fn(params, cb)[0], batch["clients"])
+        util_ema = engine.utility_update(fed, state.util_ema,
+                                         local_losses, server_loss)
+
+        delta_cos = None
+        if strategy.needs_deltas:
+            # pass 1: train each streamed client, keep only its delta sketch
+            skey = engine.sketch_key(fed, round_idx)
+            dim = int(fed.sketch_dim)
+
+            def sketch_client(carry, cbatch):
+                p_k = _train_steps(model, params, cbatch, lr, E)
+                return carry, engine.delta_sketch(tree_sub(p_k, params),
+                                                  skey, dim)
+
+            _, sketches = jax.lax.scan(sketch_client, 0, batch["clients"])
+            delta_cos = engine.cosine_to_priority(sketches, w, pm)
+
         gates = engine.compute_gates(
-            _gate_ctx(fed, local_losses, server_loss, pm, w,
-                      round_idx=round_idx), fed.selection)
+            _gate_ctx(fed, state, util_ema, local_losses, server_loss, pm, w,
+                      delta_cos, round_idx=round_idx), fed.selection)
 
         def per_client(carry, inp):
             acc_num, acc_den = carry
@@ -195,15 +279,23 @@ def make_temporal_round(model, fed, cohort: int):
         (num, den), _ = jax.lax.scan(
             per_client, (zeros, jnp.float32(0)),
             (batch["clients"], w, gates))
-        new_params = jax.tree.map(
-            lambda n, p: (n / jnp.maximum(den, 1e-30)).astype(p.dtype), num, params)
+        # streamed aggregation accumulates f32 in the carry; the aggregated
+        # DELTA then feeds the same ServerOptimizer step as the fused path
+        agg_delta = jax.tree.map(
+            lambda n, p: n / jnp.maximum(den, 1e-30) - p.astype(jnp.float32),
+            num, params)
+        new_params, opt_state = apply_server_opt(fed, params, state.opt_state,
+                                                 agg_delta)
+        new_state = _next_state(fed, state, new_params, opt_state,
+                                gates, gates, util_ema)
         stats = {
             "server_loss": server_loss,
             "local_losses": local_losses,
             "gates": gates,
+            "backlog": new_state.backlog,
             "theta_round": 1.0 / (1.0 + jnp.sum((1 - pm.astype(jnp.float32)) * w * gates)),
         }
-        return new_params, stats
+        return new_state, stats
 
     return round_step
 

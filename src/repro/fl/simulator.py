@@ -4,23 +4,31 @@ experiment (benchmarks/bench_*.py).
 
 The driver is NOT a per-round python loop: rounds are executed as
 ``lax.scan`` chunks of ``eval_every`` rounds inside one jitted program with
-donated param/momentum buffers, so the host dispatches (and syncs) once per
-eval point instead of once per round. Per-round stats come back as stacked
-device arrays and cross to the host in one transfer per chunk.
+a donated ``FederationState`` carry (params + server-optimizer moments +
+overflow backlog + utility EMAs travel as ONE pytree), so the host
+dispatches (and syncs) once per eval point instead of once per round.
+Per-round stats come back as stacked device arrays and cross to the host
+in one transfer per chunk.
+
+Runs are resumable: ``save_federation_state``/``load_federation_state``
+checkpoint the full (state, rng) pair via ``checkpoint/io.py``, and
+``run_federation(state=..., rng=..., start_round=...)`` continues a run
+bit-identically — the PRNG stream is split once per round inside the scan
+body, so chunking and resume points never perturb it.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.io import load_pytree, save_pytree
 from repro.core.metrics import History
-from repro.core.round import make_round_fn
+from repro.core.round import init_state, make_round_fn
 from repro.data.synth import Federation
-from repro.utils import tree_axpy
 
 
 @functools.partial(jax.jit, static_argnames=("loss_fn",))
@@ -62,55 +70,76 @@ def evaluate(loss_fn, params, x, y, batch=4096):
     return float(out[0]), float(out[1])
 
 
+def save_federation_state(path: str, state, rng, round_idx: int) -> None:
+    """Checkpoint the FULL cross-round carry — FederationState (params,
+    server-optimizer moments, backlog, utility EMAs) AND the driver PRNG
+    key — as one msgpack pytree (checkpoint/io.py)."""
+    save_pytree(path, {"state": state, "rng": rng}, step=int(round_idx))
+
+
+def load_federation_state(path: str, like_state):
+    """Restore (state, rng, next_round) saved by ``save_federation_state``.
+    ``like_state`` fixes the pytree structure/shapes (``init_state`` with
+    the run's config produces one)."""
+    tree, step = load_pytree(path, {"state": like_state,
+                                    "rng": jax.random.PRNGKey(0)})
+    return tree["state"], tree["rng"], step
+
+
 def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
-                   *, eval_every: int = 1, verbose: bool = False) -> History:
-    """Run ``fed.rounds`` FedALIGN communication rounds."""
+                   *, eval_every: int = 1, verbose: bool = False,
+                   state=None, rng=None, start_round: int = 0,
+                   checkpoint_path: Optional[str] = None) -> History:
+    """Run FedALIGN communication rounds ``start_round .. fed.rounds - 1``.
+
+    ``init_params`` seeds a fresh FederationState; pass ``state``/``rng``
+    (from ``load_federation_state``) plus ``start_round`` to resume a
+    checkpointed run bit-identically instead. ``checkpoint_path`` writes
+    the full (state, rng) carry at every chunk boundary (the host sync
+    points), so a killed run loses at most ``eval_every`` rounds."""
     round_fn = make_round_fn(loss_fn, fed)
     data = {"x": jnp.asarray(federation.x), "y": jnp.asarray(federation.y)}
     pm = jnp.asarray(federation.priority_mask)
     w = jnp.asarray(federation.weights)
+    C = int(pm.shape[0])
+    if state is None:
+        state = init_state(init_params, fed, C)
     # private copy: chunk buffers are donated, and the caller keeps ownership
     # of whatever it passed in
-    params = jax.tree.map(lambda a: jnp.array(a, copy=True), init_params)
-    rng = jax.random.PRNGKey(fed.seed)
+    state = jax.tree.map(lambda a: jnp.array(a, copy=True), state)
+    rng = jax.random.PRNGKey(fed.seed) if rng is None else jnp.asarray(rng)
     hist = History()
 
-    # beyond-paper: FedAvgM-style server momentum over aggregated deltas
-    use_server_m = fed.server_opt == "momentum"
-    server_m = jax.tree.map(jnp.zeros_like, params) if use_server_m else None
-
     @functools.partial(jax.jit, static_argnames=("n",),
-                       donate_argnums=(0, 1, 2))
-    def run_chunk(params, server_m, rng, r0, *, n):
-        """n rounds as one scanned program; stats leaves come back [n, ...]."""
+                       donate_argnums=(0, 1))
+    def run_chunk(state, rng, r0, *, n):
+        """n rounds as one scanned program; stats leaves come back [n, ...].
+        The whole FederationState is the donated scan carry — params,
+        optimizer moments, backlog, and EMAs update in place."""
         def body(carry, i):
-            params, server_m, rng = carry
+            state, rng = carry
             rng, rkey = jax.random.split(rng)
-            new_params, stats = round_fn(params, data, pm, w, rkey, r0 + i)
-            if use_server_m:
-                delta = jax.tree.map(jnp.subtract, new_params, params)
-                sm = jax.tree.map(lambda mi, d: fed.server_momentum * mi + d,
-                                  server_m, delta)
-                params = jax.tree.map(lambda o, mi: o + fed.server_lr * mi,
-                                      params, sm)
-                return (params, sm, rng), stats
-            return (new_params, server_m, rng), stats
+            state, stats = round_fn(state, data, pm, w, rkey, r0 + i)
+            return (state, rng), stats
 
-        (params, server_m, rng), stats = jax.lax.scan(
-            body, (params, server_m, rng), jnp.arange(n, dtype=jnp.int32))
-        return params, server_m, rng, stats
+        (state, rng), stats = jax.lax.scan(
+            body, (state, rng), jnp.arange(n, dtype=jnp.int32))
+        return state, rng, stats
 
     # chunk boundaries = the eval rounds of the old per-round loop
     # (r % eval_every == 0, plus the final round), so logging cadence and
     # History contents are unchanged — only the dispatch granularity is.
-    bounds = sorted(set(range(0, fed.rounds, eval_every)) | {fed.rounds - 1})
-    start = 0
+    # Resumed runs keep the ABSOLUTE boundaries so their eval/log cadence
+    # matches an uninterrupted run exactly.
+    bounds = sorted(b for b in set(range(0, fed.rounds, eval_every))
+                    | {fed.rounds - 1} if b >= start_round)
+    start = start_round
     for b in bounds:
         n = b - start + 1
-        params, server_m, rng, stats = run_chunk(params, server_m, rng,
-                                                 jnp.int32(start), n=n)
+        state, rng, stats = run_chunk(state, rng, jnp.int32(start), n=n)
         stats_np = jax.tree.map(np.asarray, stats)   # one transfer per chunk
-        tl, ta = evaluate(loss_fn, params, federation.test_x, federation.test_y)
+        tl, ta = evaluate(loss_fn, state.params,
+                          federation.test_x, federation.test_y)
         for i in range(n):
             s = {k: v[i] for k, v in stats_np.items()}
             if i == n - 1:
@@ -121,8 +150,12 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
                           f"inc={float(s['included_nonpriority']):.1f}")
             else:
                 hist.log(s)
+        if checkpoint_path is not None:
+            save_federation_state(checkpoint_path, state, rng, b + 1)
         start = b + 1
-    hist.params = params
+    hist.params = state.params
+    hist.state = state
+    hist.rng = rng
     return hist
 
 

@@ -29,7 +29,8 @@ from repro.fl import sharded
 from repro.launch.mesh import make_production_mesh
 from repro.models import get_model
 from repro.sharding.specs import (auto_batch_specs, auto_param_specs,
-                                  auto_tree_specs, dp_axes, shaped_with)
+                                  auto_tree_specs, dp_axes,
+                                  federation_state_specs, shaped_with)
 from repro.utils import param_count
 
 # shape-point skips with reasons (DESIGN.md SS4)
@@ -143,16 +144,23 @@ def build_train(cfg, shape, mesh, fed=DRYRUN_FED):
     param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     param_specs = auto_param_specs(param_shapes, mesh, fsdp=fsdp,
                                    expert_parallel=cfg.expert_parallel)
+    # the round input/output is the full FederationState: params keep their
+    # auto specs, optimizer moments inherit them, client-state replicates
+    from repro.fl import engine
+    state_shapes = jax.eval_shape(
+        lambda p: engine.init_state(p, fed, C), param_shapes)
+    state_specs = federation_state_specs(fed, param_specs)
 
     step = sharded.make_round_step(model, fed, C, fsdp=fsdp)
-    args = (shaped_with(param_shapes, param_specs, mesh),
+    args = (shaped_with(state_shapes, state_specs, mesh),
             shaped_with(batch_shapes, batch_specs, mesh))
-    in_shardings = (jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs),
+    in_shardings = (jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs),
                     jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs))
-    out_shardings = (jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs),
+    out_shardings = (jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs),
                      None)
     meta = {"mode": "train", "clients": C, "per_client_batch": b,
-            "fsdp": fsdp, "local_steps": fed.local_epochs}
+            "fsdp": fsdp, "local_steps": fed.local_epochs,
+            "server_opt": fed.server_opt}
     return step, args, in_shardings, out_shardings, meta, param_shapes
 
 
@@ -272,6 +280,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, fed=DRYRUN_FED,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # jax < 0.5 returned [dict]
+        cost = cost[0] if cost else None
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text)
 

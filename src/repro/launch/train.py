@@ -20,7 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, get_smoke
 from repro.configs.base import FedConfig
 from repro.data.tokens import make_token_federation
-from repro.fl import sharded
+from repro.fl import engine, sharded
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
 from repro.sharding.specs import auto_param_specs
@@ -65,6 +65,9 @@ def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
 
     round_step = jax.jit(sharded.make_round_step(model, fed, clients, fsdp=False))
     params = model.init(jax.random.PRNGKey(seed))
+    # the whole cross-round carry (params + server-optimizer moments +
+    # backlog + utility EMAs) threads through the driver as ONE pytree
+    state = engine.init_state(params, fed, clients)
     if verbose:
         print(f"[train] {cfg.name} params={param_count(params):,} clients={clients}")
     rng = np.random.default_rng(seed)
@@ -73,7 +76,7 @@ def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
         batch = build_batches(cfg, fed_data, clients=clients,
                               per_client=per_client, seq=seq, rng=rng)
         t0 = time.time()
-        params, stats = round_step(params, batch, jnp.int32(r))
+        state, stats = round_step(state, batch, jnp.int32(r))
         dt = time.time() - t0
         rec = {"round": r,
                "server_loss": float(stats["server_loss"]),
@@ -84,7 +87,7 @@ def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
         if verbose and r % log_every == 0:
             print(f"  round {r:3d} server_loss={rec['server_loss']:.4f} "
                   f"included_nonpri={rec['included']:.0f} ({dt:.2f}s)")
-    return params, history
+    return state.params, history
 
 
 def main():

@@ -67,6 +67,35 @@ def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
     return Optimizer(init, update, "adam")
 
 
+def yogi(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-3) -> Optimizer:
+    """Yogi (Zaheer et al., NeurIPS 2018): Adam with an *additive* second
+    moment, v <- v - (1-b2) sign(v - g^2) g^2, so v can shrink when recent
+    gradients are small. Applied to the aggregated federation delta this is
+    the FedYogi server optimizer of Reddi et al. (arXiv:2003.00295); eps
+    defaults to that paper's 1e-3."""
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda vi, g: vi - (1 - b2) * jnp.sign(vi - jnp.square(g.astype(jnp.float32)))
+            * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda p, mi, vi: (p - lr * (mi / bc1) /
+                               (jnp.sqrt(vi / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+    return Optimizer(init, update, "yogi")
+
+
 def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
           weight_decay: float = 0.01) -> Optimizer:
     base = adam(b1, b2, eps)

@@ -193,3 +193,26 @@ def shaped_with(shapes, specs, mesh: Mesh):
         lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
                                            sharding=NamedSharding(mesh, sp)),
         shapes, specs)
+
+
+def federation_state_specs(fed, param_specs):
+    """PartitionSpec pytree for a ``fl.engine.FederationState``.
+
+    Server-optimizer moments are params-shaped and inherit the matching
+    param's spec (FSDP'd moments for FSDP'd params); the [C] client-state
+    vectors (backlog, utility EMAs) and scalar step counters replicate —
+    they are a few bytes and every pod reads them in the gate."""
+    from repro.core.aggregation import resolve_server_opt
+    from repro.fl.engine import FederationState
+
+    name = resolve_server_opt(fed.server_opt)
+    rep = P()
+    if name == "sgd" or (name == "momentum" and fed.server_momentum == 0.0):
+        # optim.sgd collapses momentum=0 to the stateless update -> ()
+        opt_specs = ()
+    elif name == "momentum":
+        opt_specs = {"m": param_specs}
+    else:                                   # adam / yogi: m, v, step counter
+        opt_specs = {"m": param_specs, "v": param_specs, "t": rep}
+    return FederationState(params=param_specs, opt_state=opt_specs,
+                           backlog=rep, util_ema=rep, incl_ema=rep)

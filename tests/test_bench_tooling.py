@@ -1,0 +1,43 @@
+"""Benchmark entrypoint tooling: a raising suite must fail the run with a
+nonzero exit instead of being silently swallowed."""
+import sys
+import types
+
+import pytest
+
+
+def _fake_suite(name, fn):
+    mod = types.ModuleType(name)
+    mod.run = fn
+    sys.modules[name] = mod
+    return mod
+
+
+def test_bench_runner_exits_nonzero_on_suite_error(monkeypatch, tmp_path,
+                                                   capsys):
+    import benchmarks.run as br
+
+    _fake_suite("benchmarks._boom", lambda fast=True: (_ for _ in ()).throw(
+        RuntimeError("boom")))
+    _fake_suite("benchmarks._fine", lambda fast=True: [{"ok": 1}])
+    monkeypatch.setattr(br, "SUITES", [("boom", "benchmarks._boom"),
+                                       ("fine", "benchmarks._fine")])
+    monkeypatch.setattr(sys, "argv", ["run.py"])
+    monkeypatch.chdir(tmp_path)
+    with pytest.raises(SystemExit) as exc:
+        br.main()
+    assert exc.value.code == 1
+    out = capsys.readouterr().out
+    # the failing suite is reported AND the later suite still ran
+    assert "ERROR:RuntimeError:boom" in out
+    assert "fine," in out
+
+
+def test_bench_runner_exits_zero_when_clean(monkeypatch, tmp_path):
+    import benchmarks.run as br
+
+    _fake_suite("benchmarks._fine2", lambda fast=True: [{"ok": 1}])
+    monkeypatch.setattr(br, "SUITES", [("fine2", "benchmarks._fine2")])
+    monkeypatch.setattr(sys, "argv", ["run.py"])
+    monkeypatch.chdir(tmp_path)
+    assert br.main() is None

@@ -1,8 +1,10 @@
 """Gate-before-train cohort execution: gather-train-scatter (max_cohort)
 and cond-skip rounds must be bit-equal (to dtype tolerance) to the dense
-train-everyone round for every registered strategy on both backends, the
-overflow policy must be deterministic, and the sharded adapters must agree
-with their dense counterparts."""
+train-everyone round for every registered strategy on both backends — and
+for every server optimizer (the moments see the SAME aggregated delta
+either way). The overflow policy must be deterministic, backlog must make
+overflow fair across rounds, and the sharded adapters must agree with
+their dense counterparts."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,18 +28,28 @@ PARAMS = INIT(jax.random.PRNGKey(0))
 STRATEGIES = sorted(engine.STRATEGIES)
 
 
-def _run(fed, backend, r=2, seed=1, params=None):
+def _run(fed, backend, r=2, seed=1, state=None, rounds=1):
+    """``rounds`` consecutive state-threaded rounds; returns the final
+    (state, stats) pair — multi-round runs exercise the cross-round carry
+    (optimizer moments, backlog, EMAs)."""
     fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
-    return fn(params if params is not None else PARAMS, DATA, PM, W,
-              jax.random.PRNGKey(seed), jnp.int32(r))
+    if state is None:
+        state = engine.init_state(PARAMS, fed, C)
+    for i in range(rounds):
+        state, stats = fn(state, DATA, PM, W, jax.random.PRNGKey(seed + i),
+                          jnp.int32(r + i))
+    return state, stats
 
 
 def _assert_rounds_equal(a, b, atol=1e-6):
-    (pa, sa), (pb, sb) = a, b
-    np.testing.assert_array_equal(np.asarray(sa["gates"]),
-                                  np.asarray(sb["gates"]))
-    for la, lb in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
-        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+    (sa, ta), (sb, tb) = a, b
+    np.testing.assert_array_equal(np.asarray(ta["gates"]),
+                                  np.asarray(tb["gates"]))
+    # the WHOLE cross-round state must agree: params, optimizer moments,
+    # backlog, and utility EMAs
+    for la, lb in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        np.testing.assert_allclose(np.asarray(la, np.float64),
+                                   np.asarray(lb, np.float64), atol=atol)
 
 
 # =================================================== cohort == dense parity
@@ -48,10 +60,27 @@ def test_cohort_round_equals_dense_round(selection, backend):
     exactly (same per-client PRNG keys, same gates, same aggregation)."""
     fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
                     epsilon=0.5, warmup_frac=0.0, align_stat="loss",
-                    selection=selection, topk=2, sim_threshold=0.0)
+                    selection=selection, topk=2, sim_threshold=0.0,
+                    welfare_floor=0.05)
     dense = _run(fed, backend)
     cohort = _run(fed.replace(max_cohort=C), backend)
     _assert_rounds_equal(dense, cohort)
+
+
+@pytest.mark.parametrize("backend", engine.BACKENDS)
+@pytest.mark.parametrize("server_opt", ["momentum", "adam", "yogi"])
+@pytest.mark.parametrize("selection", ["fedalign", "topk_align", "welfare"])
+def test_cohort_parity_per_server_optimizer(selection, server_opt, backend):
+    """Server-optimizer moments thread through BOTH execution paths: three
+    consecutive rounds with adam/yogi/momentum state must end identically
+    whether clients train densely or through the cohort gather."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                    epsilon=0.5, warmup_frac=0.0, align_stat="loss",
+                    selection=selection, topk=2, welfare_floor=0.05,
+                    server_opt=server_opt, server_lr=0.7)
+    dense = _run(fed, backend, rounds=3)
+    cohort = _run(fed.replace(max_cohort=C), backend, rounds=3)
+    _assert_rounds_equal(dense, cohort, atol=5e-6)
 
 
 @pytest.mark.parametrize("backend", engine.BACKENDS)
@@ -77,6 +106,8 @@ def test_cohort_parity_during_warmup(backend):
                     epsilon=1e9, local_epochs=1, align_stat="loss")
     dense = _run(fed, backend, r=0)
     cohort = _run(fed.replace(max_cohort=3), backend, r=0)
+    # K < C overflows nothing during warm-up (only priority gates in), but
+    # backlog ledgers still agree; compare the full state
     _assert_rounds_equal(dense, cohort)
 
 
@@ -139,6 +170,84 @@ def test_cohort_overflow_round_reports_effective_gates():
     assert float(stats["included_nonpriority"]) == 1.0   # 4 slots - 3 priority
 
 
+# =================================================== backlog fairness
+def test_backlog_breaks_overflow_ties():
+    """A client dropped by overflow in round t is preferred at EQUAL match
+    quality in round t+1: the backlog it accrued wins the tie that client
+    index would otherwise lose."""
+    gates = jnp.ones((4,), jnp.float32)
+    align = jnp.asarray([0.0, 0.2, 0.2, 0.2])           # exact 3-way tie
+    pm = jnp.asarray([1, 0, 0, 0], jnp.float32)
+    backlog = jnp.zeros((4,), jnp.int32)
+
+    # round t: K=2 -> priority 0 + tie broken by index -> client 1 in,
+    # clients 2 and 3 dropped by overflow
+    idx, _, eff = engine.cohort_select(gates, align, jnp.float32(0.0), pm, 2,
+                                       backlog=backlog)
+    np.testing.assert_array_equal(np.asarray(idx), [0, 1])
+    backlog = engine.backlog_update(backlog, gates, eff)
+    np.testing.assert_array_equal(np.asarray(backlog), [0, 0, 1, 1])
+
+    # round t+1, same tie: the backlogged clients 2,3 now outrank client 1
+    # (among themselves the tie falls back to index: 2 before 3)
+    idx, _, eff = engine.cohort_select(gates, align, jnp.float32(0.0), pm, 2,
+                                       backlog=backlog)
+    np.testing.assert_array_equal(np.asarray(idx), [0, 2])
+    backlog = engine.backlog_update(backlog, gates, eff)
+    np.testing.assert_array_equal(np.asarray(backlog), [0, 1, 0, 2])
+
+    # round t+2: client 3 (backlog 2) finally wins the slot
+    idx, _, eff = engine.cohort_select(gates, align, jnp.float32(0.0), pm, 2,
+                                       backlog=backlog)
+    np.testing.assert_array_equal(np.asarray(idx), [0, 3])
+
+
+def test_backlog_zero_preserves_drop_worst():
+    """At backlog 0 the policy is EXACTLY the original drop-worst stable
+    sort (ties by client index)."""
+    gates = jnp.ones((5,), jnp.float32)
+    align = jnp.asarray([0.0, 0.3, 0.1, 0.3, 0.2])
+    pm = jnp.asarray([1, 0, 0, 0, 0], jnp.float32)
+    a = engine.cohort_select(gates, align, jnp.float32(0.0), pm, 3)
+    b = engine.cohort_select(gates, align, jnp.float32(0.0), pm, 3,
+                             backlog=jnp.zeros((5,), jnp.int32))
+    for xa, xb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    np.testing.assert_array_equal(np.asarray(a[0]), [0, 2, 4])
+
+
+def test_backlog_untouched_for_selection_excluded():
+    """Only OVERFLOW accrues backlog: clients the strategy never gated in
+    keep their ledger, included clients reset it."""
+    backlog = jnp.asarray([0, 3, 2, 5], jnp.int32)
+    gates = jnp.asarray([1, 1, 0, 1], jnp.float32)      # 2 never gated in
+    eff = jnp.asarray([1, 0, 0, 1], jnp.float32)        # 1 dropped by budget
+    out = np.asarray(engine.backlog_update(backlog, gates, eff))
+    np.testing.assert_array_equal(out, [0, 4, 2, 0])
+
+
+def test_backlog_threads_through_engine_round():
+    """End-to-end: an overflowing cohort round writes the ledger into the
+    carried FederationState and the stats."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                    epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                    max_cohort=4)
+    state, stats = _run(fed, "vmap_spatial")
+    backlog = np.asarray(state.backlog)
+    np.testing.assert_array_equal(backlog, np.asarray(stats["backlog"]))
+    # everyone gated in (eps=inf); 4 slots -> C-4 non-priority dropped
+    assert backlog.sum() == C - 4
+    assert np.all(backlog[np.asarray(PM)] == 0)
+    # a second overflowing round rotates the slot to a backlogged client
+    # only on an exact match-quality tie; either way the ledger grows for
+    # still-dropped clients and resets for aggregated ones
+    state2, stats2 = _run(fed, "vmap_spatial", r=3, seed=3, state=state)
+    gates2 = np.asarray(stats2["gates"])
+    b2 = np.asarray(state2.backlog)
+    assert np.all(b2[gates2 > 0] == 0)
+    assert np.all(b2[(gates2 == 0) & ~np.asarray(PM)] >= 1)
+
+
 # =================================================== scan cond-skip
 def test_scan_backend_skips_gated_out_clients():
     """The temporal backend must branch (lax.cond), not select: its HLO
@@ -146,6 +255,7 @@ def test_scan_backend_skips_gated_out_clients():
     fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
                     epsilon=0.0, warmup_frac=0.0, align_stat="loss")
     fn = engine.make_round_fn(LOSS, fed, backend="scan_temporal")
-    text = jax.jit(fn).lower(PARAMS, DATA, PM, W, jax.random.PRNGKey(0),
+    state = engine.init_state(PARAMS, fed, C)
+    text = jax.jit(fn).lower(state, DATA, PM, W, jax.random.PRNGKey(0),
                              jnp.int32(0)).as_text()
     assert "stablehlo.if" in text or "stablehlo.case" in text

@@ -21,7 +21,8 @@ PM = jnp.asarray(FEDN.priority_mask)
 W = jnp.asarray(FEDN.weights)
 C = int(PM.shape[0])
 
-STRATEGIES = ["fedalign", "all", "priority_only", "topk_align", "grad_sim"]
+STRATEGIES = ["fedalign", "all", "priority_only", "topk_align", "grad_sim",
+              "welfare"]
 
 
 def _tree(C=6, dtype=jnp.float32, seed=0):
@@ -96,11 +97,11 @@ def test_flatten_stacked_shape_and_order():
 
 # ===================================================== backend equivalence
 def _round_pair(fed, seed=0, r=1):
-    params = INIT(jax.random.PRNGKey(0))
+    state = engine.init_state(INIT(jax.random.PRNGKey(0)), fed, C)
     outs = []
     for backend in engine.BACKENDS:
         fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
-        outs.append(fn(params, DATA, PM, W, jax.random.PRNGKey(seed),
+        outs.append(fn(state, DATA, PM, W, jax.random.PRNGKey(seed),
                        jnp.int32(r)))
     return outs
 
@@ -109,12 +110,14 @@ def _round_pair(fed, seed=0, r=1):
 def test_backends_identical_per_strategy(selection):
     fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
                     epsilon=0.5, warmup_frac=0.0, align_stat="loss",
-                    selection=selection, topk=2, sim_threshold=0.0)
+                    selection=selection, topk=2, sim_threshold=0.0,
+                    welfare_floor=0.05)
     (pv, sv), (pt, st) = _round_pair(fed)
     np.testing.assert_array_equal(np.asarray(sv["gates"]),
                                   np.asarray(st["gates"]))
     np.testing.assert_allclose(np.asarray(sv["local_losses"]),
                                np.asarray(st["local_losses"]), atol=1e-6)
+    # the full carried state (params, moments, backlog, EMAs) must agree
     for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pt)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
@@ -217,8 +220,8 @@ def test_register_strategy_decorator_roundtrip():
                         local_epochs=1, warmup_frac=0.0, align_stat="loss",
                         selection="_test_even_clients")
         fn = jax.jit(engine.make_round_fn(LOSS, fed))
-        _, stats = fn(INIT(jax.random.PRNGKey(0)), DATA, PM, W,
-                      jax.random.PRNGKey(0), jnp.int32(0))
+        _, stats = fn(engine.init_state(INIT(jax.random.PRNGKey(0)), fed, C),
+                      DATA, PM, W, jax.random.PRNGKey(0), jnp.int32(0))
         got = np.asarray(stats["gates"])
         want = np.maximum(np.asarray(PM, np.float32),
                           (np.arange(C) % 2 == 0).astype(np.float32))
@@ -230,8 +233,8 @@ def test_register_strategy_decorator_roundtrip():
 # ===================================================== gate regressions
 def _run_round(fed, r=0, seed=0, backend="vmap_spatial"):
     fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
-    return fn(INIT(jax.random.PRNGKey(0)), DATA, PM, W,
-              jax.random.PRNGKey(seed), jnp.int32(r))
+    return fn(engine.init_state(INIT(jax.random.PRNGKey(0)), fed, C),
+              DATA, PM, W, jax.random.PRNGKey(seed), jnp.int32(r))
 
 
 @pytest.mark.parametrize("selection", ["fedalign", "topk_align", "grad_sim"])
@@ -292,11 +295,11 @@ def test_agg_dtype_bf16_round_close_to_f32():
     fed32 = FedConfig(num_clients=C, num_priority=3, rounds=4, local_epochs=2,
                       epsilon=1e9, warmup_frac=0.0, align_stat="loss")
     fed16 = fed32.replace(agg_dtype="bfloat16")
-    p32, _ = _run_round(fed32)
-    p16, _ = _run_round(fed16)
+    s32, _ = _run_round(fed32)
+    s16, _ = _run_round(fed16)
     num = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in
-              zip(jax.tree.leaves(p32), jax.tree.leaves(p16)))
-    den = sum(float(jnp.sum(jnp.abs(a))) for a in jax.tree.leaves(p32))
+              zip(jax.tree.leaves(s32.params), jax.tree.leaves(s16.params)))
+    den = sum(float(jnp.sum(jnp.abs(a))) for a in jax.tree.leaves(s32.params))
     assert num < 0.02 * max(den, 1e-9), (num, den)
 
 
@@ -306,32 +309,22 @@ def test_sharded_uses_engine_gating():
     import inspect
     from repro.fl import sharded
     src = inspect.getsource(sharded)
-    assert "_gates" not in src.replace("compute_gates", "")
+    assert "def _gates" not in src          # no private gate implementation
     assert "engine.compute_gates" in src
+    assert "engine.cohort_select" in src    # and no private gather copy
 
 
-@pytest.mark.parametrize("selection", ["topk_align", "grad_sim"])
+@pytest.mark.parametrize("selection", ["topk_align", "grad_sim", "welfare"])
 def test_sharded_spatial_new_strategies_smoke(selection):
     from repro.fl import sharded
     from tests.test_sharded import MODEL, _batch
     fed = FedConfig(local_epochs=1, epsilon=1e9, lr=0.05, selection=selection,
                     topk=1, sim_threshold=-1.0)
     step = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))
-    params = MODEL.init(jax.random.PRNGKey(0))
-    _, stats = step(params, _batch())
+    state = engine.init_state(MODEL.init(jax.random.PRNGKey(0)), fed, 4)
+    _, stats = step(state, _batch())
     gates = np.asarray(stats["gates"])
     assert set(np.unique(gates)).issubset({0.0, 1.0})
     assert np.all(gates[:2] == 1.0)                  # priority always in
     if selection == "topk_align":
         assert gates[2:].sum() <= 1                  # budget respected
-
-
-def test_sharded_temporal_rejects_delta_strategies():
-    from repro.configs import get_smoke
-    from repro.fl import sharded
-    from repro.models import get_model
-    cfg = get_smoke("qwen1_5_0_5b").replace(remat=False)
-    model = get_model(cfg)
-    fed = FedConfig(local_epochs=1, epsilon=1e9, selection="grad_sim")
-    with pytest.raises(NotImplementedError, match="grad_sim"):
-        sharded.make_temporal_round(model, fed, 4)

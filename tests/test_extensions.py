@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core.round import make_round_fn
+from repro.core.round import init_state, make_round_fn
 from repro.data.synth import make_synth_federation
 from repro.fl.simulator import run_federation
 from repro.models.small import SMALL_MODELS, make_loss_fn
@@ -25,10 +25,10 @@ def test_straggler_cadence():
     fed = FedConfig(rounds=20, warmup_frac=0.0, epsilon=1e9, local_epochs=1,
                     straggler_period=3, align_stat="loss")
     fn = jax.jit(make_round_fn(LOSS, fed))
-    params = INIT(jax.random.PRNGKey(0))
+    state = init_state(INIT(jax.random.PRNGKey(0)), fed, int(PM.shape[0]))
     seen = []
     for r in range(6):
-        _, stats = fn(params, DATA, PM, W, jax.random.PRNGKey(r), jnp.int32(r))
+        _, stats = fn(state, DATA, PM, W, jax.random.PRNGKey(r), jnp.int32(r))
         seen.append(np.asarray(stats["gates"]))
     seen = np.stack(seen)
     assert np.all(seen[:, :4] == 1.0)                  # priority every round
@@ -64,7 +64,7 @@ def test_bf16_delta_aggregation_close_to_f32():
     """agg_dtype=bfloat16 quantizes client deltas on the wire; the result
     must stay close to exact f32 aggregation after one round."""
     from repro.configs import get_smoke
-    from repro.fl import sharded
+    from repro.fl import engine, sharded
     from repro.models import get_model
     from tests.test_sharded import _batch, CFG, MODEL
 
@@ -72,11 +72,13 @@ def test_bf16_delta_aggregation_close_to_f32():
     fed16 = fed32.replace(agg_dtype="bfloat16")
     params = MODEL.init(jax.random.PRNGKey(0))
     batch = _batch()
-    p32, _ = jax.jit(sharded.make_spatial_round(MODEL, fed32, 4))(params, batch)
-    p16, _ = jax.jit(sharded.make_spatial_round(MODEL, fed16, 4))(params, batch)
+    s32, _ = jax.jit(sharded.make_spatial_round(MODEL, fed32, 4))(
+        engine.init_state(params, fed32, 4), batch)
+    s16, _ = jax.jit(sharded.make_spatial_round(MODEL, fed16, 4))(
+        engine.init_state(params, fed16, 4), batch)
     num = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in
-              zip(jax.tree.leaves(p32), jax.tree.leaves(p16)))
+              zip(jax.tree.leaves(s32.params), jax.tree.leaves(s16.params)))
     den = sum(float(jnp.sum(jnp.abs(a - g))) for a, g in
-              zip(jax.tree.leaves(p32), jax.tree.leaves(params)))
+              zip(jax.tree.leaves(s32.params), jax.tree.leaves(params)))
     # quantization error well below the actual update magnitude
     assert num < 0.05 * max(den, 1e-9), (num, den)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import FedConfig
-from repro.core.round import make_round_fn
+from repro.core.round import init_state, make_round_fn
 from repro.data.synth import make_synth_federation
 from repro.models.small import SMALL_MODELS, make_loss_fn
 
@@ -17,21 +17,25 @@ FEDN = make_synth_federation(seed=1, n_priority=4, n_nonpriority=4,
 DATA = {"x": jnp.asarray(FEDN.x), "y": jnp.asarray(FEDN.y)}
 PM = jnp.asarray(FEDN.priority_mask)
 W = jnp.asarray(FEDN.weights)
+C = int(PM.shape[0])
 
 
-def run_round(fed, params=None, r=0, seed=0):
+def run_round(fed, state=None, r=0, seed=0):
+    """One round through the simulator adapter; returns (state', stats).
+    ``state`` may be a FederationState (chained rounds) or None (fresh)."""
     fn = jax.jit(make_round_fn(LOSS, fed))
-    p = params if params is not None else INIT(jax.random.PRNGKey(0))
-    return fn(p, DATA, PM, W, jax.random.PRNGKey(seed), jnp.int32(r))
+    if state is None:
+        state = init_state(INIT(jax.random.PRNGKey(0)), fed, C)
+    return fn(state, DATA, PM, W, jax.random.PRNGKey(seed), jnp.int32(r))
 
 
 def test_eps_zero_equals_priority_only():
     fed_a = FedConfig(rounds=10, warmup_frac=0.0, epsilon=0.0, local_epochs=2,
                       selection="fedalign", align_stat="loss")
     fed_b = fed_a.replace(selection="priority_only")
-    pa, _ = run_round(fed_a)
-    pb, _ = run_round(fed_b)
-    for la, lb in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+    sa, _ = run_round(fed_a)
+    sb, _ = run_round(fed_b)
+    for la, lb in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params)):
         np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
 
 
@@ -39,10 +43,10 @@ def test_eps_inf_equals_all():
     fed_a = FedConfig(rounds=10, warmup_frac=0.0, epsilon=1e9, local_epochs=2,
                       selection="fedalign", align_stat="loss")
     fed_b = fed_a.replace(selection="all")
-    pa, sa = run_round(fed_a)
-    pb, sb = run_round(fed_b)
+    sta, sa = run_round(fed_a)
+    stb, sb = run_round(fed_b)
     assert np.all(np.asarray(sa["gates"]) == 1.0)
-    for la, lb in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+    for la, lb in zip(jax.tree.leaves(sta.params), jax.tree.leaves(stb.params)):
         np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
 
 
@@ -59,10 +63,9 @@ def test_warmup_excludes_nonpriority():
 def test_round_reduces_global_loss():
     fed = FedConfig(rounds=10, warmup_frac=0.0, epsilon=0.2, local_epochs=3,
                     lr=0.1)
-    params = INIT(jax.random.PRNGKey(0))
-    _, s0 = run_round(fed, params, r=0)
-    p1, _ = run_round(fed, params, r=0)
-    _, s1 = run_round(fed, p1, r=1)
+    _, s0 = run_round(fed, r=0)
+    st1, _ = run_round(fed, r=0)
+    _, s1 = run_round(fed, st1, r=1)
     assert float(s1["global_loss"]) < float(s0["global_loss"])
 
 
@@ -73,16 +76,16 @@ def test_fedprox_differs_from_fedavg():
     params = INIT(jax.random.PRNGKey(0))
     # move params off-init so the prox pull is non-trivial
     params = jax.tree.map(lambda x: x + 0.5, params)
-    pa, _ = run_round(fed_a, params)
-    pp, _ = run_round(fed_p, params)
+    sa, _ = run_round(fed_a, init_state(params, fed_a, C))
+    sp, _ = run_round(fed_p, init_state(params, fed_p, C))
     diffs = [float(jnp.max(jnp.abs(a - b)))
-             for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pp))]
+             for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sp.params))]
     assert max(diffs) > 1e-6
     # prox solution stays closer to the global model
     da = sum(float(jnp.sum((a - g) ** 2)) for a, g in
-             zip(jax.tree.leaves(pa), jax.tree.leaves(params)))
+             zip(jax.tree.leaves(sa.params), jax.tree.leaves(params)))
     dp = sum(float(jnp.sum((a - g) ** 2)) for a, g in
-             zip(jax.tree.leaves(pp), jax.tree.leaves(params)))
+             zip(jax.tree.leaves(sp.params), jax.tree.leaves(params)))
     assert dp < da
 
 

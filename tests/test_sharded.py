@@ -1,12 +1,14 @@
 """Pod-scale round-step semantics on the single host device: spatial and
-temporal engines must agree with each other and train the model."""
+temporal engines must agree with each other, thread the same
+FederationState, and train the model."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke
 from repro.configs.base import FedConfig
-from repro.fl import sharded
+from repro.fl import engine, sharded
 from repro.launch.train import build_batches, run as train_run
 from repro.data.tokens import make_token_federation
 from repro.models import get_model
@@ -24,34 +26,40 @@ def _batch(C=4, b=2, S=32, seed=0):
     return build_batches(CFG, fd, clients=C, per_client=b, seq=S, rng=rng)
 
 
+def _state(fed, C=4, seed=0):
+    return engine.init_state(MODEL.init(jax.random.PRNGKey(seed)), fed, C)
+
+
 def test_spatial_round_trains():
     step = jax.jit(sharded.make_spatial_round(MODEL, FED, 4))
-    params = MODEL.init(jax.random.PRNGKey(0))
+    state = _state(FED)
     batch = _batch()
-    p1, s1 = step(params, batch)
-    p2, s2 = step(p1, batch)
-    assert float(s2["server_loss"]) < float(s1["server_loss"])
-    assert np.all(np.asarray(s1["gates"]) == 1.0)      # eps = inf
+    s1, t1 = step(state, batch)
+    s2, t2 = step(s1, batch)
+    assert float(t2["server_loss"]) < float(t1["server_loss"])
+    assert np.all(np.asarray(t1["gates"]) == 1.0)      # eps = inf
 
 
 def test_spatial_equals_temporal():
     """Same federation semantics whether clients are space- or
-    time-multiplexed (weights equal => identical aggregation)."""
+    time-multiplexed (weights equal => identical aggregation), including
+    the carried state (backlog, EMAs)."""
     batch = _batch()
-    params = MODEL.init(jax.random.PRNGKey(0))
-    ps, ss = jax.jit(sharded.make_spatial_round(MODEL, FED, 4))(params, batch)
-    pt, st = jax.jit(sharded.make_temporal_round(MODEL, FED, 4))(params, batch)
-    np.testing.assert_allclose(np.asarray(ss["local_losses"]),
-                               np.asarray(st["local_losses"]), rtol=1e-5)
-    for a, b in zip(jax.tree.leaves(ps), jax.tree.leaves(pt)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+    state = _state(FED)
+    ss, ts = jax.jit(sharded.make_spatial_round(MODEL, FED, 4))(state, batch)
+    st, tt = jax.jit(sharded.make_temporal_round(MODEL, FED, 4))(state, batch)
+    np.testing.assert_allclose(np.asarray(ts["local_losses"]),
+                               np.asarray(tt["local_losses"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(ss), jax.tree.leaves(st)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
                                    atol=5e-5, rtol=5e-5)
 
 
 def test_gating_excludes_misaligned():
     fed = FedConfig(local_epochs=1, epsilon=0.05, lr=0.05)
     step = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))
-    params = MODEL.init(jax.random.PRNGKey(0))
+    state = _state(fed)
     batch = _batch()
     # corrupt the last client's labels to force misalignment after warm start
     bad = jax.random.randint(jax.random.PRNGKey(9),
@@ -62,7 +70,7 @@ def test_gating_excludes_misaligned():
     # fall outside the eps band while priority gates stay 1
     excluded = False
     for _ in range(10):
-        params, stats = step(params, batch)
+        state, stats = step(state, batch)
         gates = np.asarray(stats["gates"])
         assert gates[0] == 1.0 and gates[1] == 1.0      # priority always
         if gates[3] == 0.0:
@@ -78,11 +86,11 @@ def test_round_idx_drives_eps_schedule():
     fed = FedConfig(local_epochs=1, epsilon=0.5, lr=0.05,
                     epsilon_schedule="exp", epsilon_decay=0.9)
     batch = _batch()
-    params = MODEL.init(jax.random.PRNGKey(0))
+    state = _state(fed)
     for make in (sharded.make_spatial_round, sharded.make_temporal_round):
         step = jax.jit(make(MODEL, fed, 4))
-        _, s0 = step(params, batch, jnp.int32(0))
-        _, s9 = step(params, batch, jnp.int32(9))
+        _, s0 = step(state, batch, jnp.int32(0))
+        _, s9 = step(state, batch, jnp.int32(9))
         assert np.asarray(s0["gates"]).sum() == 4.0          # eps_0 = 0.5
         late = np.asarray(s9["gates"])                        # eps_9 ~ 2e-10
         assert np.all(late[:2] == 1.0)                        # priority kept
@@ -96,33 +104,58 @@ def test_spatial_cohort_matches_dense_and_temporal():
     fed = FedConfig(local_epochs=2, epsilon=0.5, lr=0.05,
                     epsilon_schedule="exp", epsilon_decay=0.5)
     batch = _batch()
-    params = MODEL.init(jax.random.PRNGKey(0))
+    state = _state(fed)
     for r in (0, 6):
-        pd, sd = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))(
-            params, batch, jnp.int32(r))
-        pc, sc = jax.jit(sharded.make_spatial_round(
-            MODEL, fed.replace(max_cohort=4), 4))(params, batch, jnp.int32(r))
-        pt, st = jax.jit(sharded.make_temporal_round(MODEL, fed, 4))(
-            params, batch, jnp.int32(r))
-        np.testing.assert_array_equal(np.asarray(sd["gates"]),
-                                      np.asarray(sc["gates"]))
-        np.testing.assert_array_equal(np.asarray(sd["gates"]),
-                                      np.asarray(st["gates"]))
-        for a, b in zip(jax.tree.leaves(pd), jax.tree.leaves(pc)):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+        sd, td = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))(
+            state, batch, jnp.int32(r))
+        sc, tc = jax.jit(sharded.make_spatial_round(
+            MODEL, fed.replace(max_cohort=4), 4))(state, batch, jnp.int32(r))
+        st, tt = jax.jit(sharded.make_temporal_round(MODEL, fed, 4))(
+            state, batch, jnp.int32(r))
+        np.testing.assert_array_equal(np.asarray(td["gates"]),
+                                      np.asarray(tc["gates"]))
+        np.testing.assert_array_equal(np.asarray(td["gates"]),
+                                      np.asarray(tt["gates"]))
+        for a, b in zip(jax.tree.leaves(sd), jax.tree.leaves(sc)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
                                        atol=5e-5, rtol=5e-5)
-        for a, b in zip(jax.tree.leaves(pd), jax.tree.leaves(pt)):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+        for a, b in zip(jax.tree.leaves(sd), jax.tree.leaves(st)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
                                        atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("server_opt", ["momentum", "adam", "yogi"])
+def test_sharded_server_optimizers_thread_state(server_opt):
+    """Two chained rounds with a stateful server optimizer: moments must
+    advance (t counter / non-zero m) and spatial==temporal still holds."""
+    fed = FED.replace(server_opt=server_opt, server_lr=0.5)
+    batch = _batch()
+    state = _state(fed)
+    sp = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))
+    tp = jax.jit(sharded.make_temporal_round(MODEL, fed, 4))
+    s1, _ = sp(state, batch, jnp.int32(0))
+    s2, _ = sp(s1, batch, jnp.int32(1))
+    if server_opt in ("adam", "yogi"):
+        assert int(s2.opt_state["t"]) == 2
+    m_norm = sum(float(jnp.sum(jnp.abs(l)))
+                 for l in jax.tree.leaves(s2.opt_state["m"]))
+    assert m_norm > 0.0
+    t1, _ = tp(state, batch, jnp.int32(0))
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(t1)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-5, rtol=5e-5)
 
 
 def test_spatial_cohort_overflow_keeps_best_matched():
     """K < #included: the spatial gather drops the worst loss-matched
-    non-priority clients and reports the effective gates."""
+    non-priority clients, reports the effective gates, and books the
+    dropped client into the backlog ledger."""
     fed = FedConfig(local_epochs=1, epsilon=1e9, lr=0.05, max_cohort=3)
     step = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))
-    params = MODEL.init(jax.random.PRNGKey(0))
-    _, stats = step(params, _batch())
+    state, stats = step(_state(fed), _batch())
     gates = np.asarray(stats["gates"])
     assert gates.sum() == 3.0
     assert np.all(gates[:2] == 1.0)                           # priority kept
@@ -131,6 +164,48 @@ def test_spatial_cohort_overflow_keeps_best_matched():
     server = float(stats["server_loss"])
     kept, dropped = (2, 3) if gates[2] == 1.0 else (3, 2)
     assert abs(losses[kept] - server) <= abs(losses[dropped] - server)
+    np.testing.assert_array_equal(
+        np.asarray(state.backlog),
+        np.asarray([0, 0, 0, 0]) + (np.arange(4) == dropped))
+
+
+def test_temporal_grad_sim_streams_sketches():
+    """The temporal (FSDP) round supports grad_sim via CountSketch scoring:
+    its gates match the spatial round scored on the SAME sketches, and the
+    aggregated params agree across the modes."""
+    fed = FedConfig(local_epochs=1, epsilon=1e9, lr=0.05,
+                    selection="grad_sim", sim_threshold=0.0,
+                    grad_sim_sketch=True, sketch_dim=512)
+    batch = _batch()
+    state = _state(fed)
+    st, tt = jax.jit(sharded.make_temporal_round(MODEL, fed, 4))(state, batch)
+    ss, ts = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))(state, batch)
+    gates = np.asarray(tt["gates"])
+    assert set(np.unique(gates)).issubset({0.0, 1.0})
+    assert np.all(gates[:2] == 1.0)                           # priority in
+    np.testing.assert_array_equal(gates, np.asarray(ts["gates"]))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(ss)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-5, rtol=5e-5)
+
+
+def test_temporal_grad_sim_requires_sketch_opt_in():
+    """Exact delta cosines don't exist for streamed clients: without the
+    explicit grad_sim_sketch opt-in the temporal round refuses instead of
+    silently gating differently from the spatial round."""
+    fed = FedConfig(local_epochs=1, epsilon=1e9, selection="grad_sim")
+    with pytest.raises(ValueError, match="grad_sim_sketch"):
+        sharded.make_temporal_round(MODEL, fed, 4)
+
+
+def test_sharded_cohort_select_is_engine_cohort_select():
+    """The pod rounds must not grow their own gather copy: the overflow /
+    backlog policy lives in engine.cohort_select ONLY."""
+    import inspect
+    src = inspect.getsource(sharded)
+    assert "engine.cohort_select" in src
+    assert "argsort" not in src and "lexsort" not in src
 
 
 def test_train_driver_end_to_end():

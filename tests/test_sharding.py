@@ -6,9 +6,11 @@ import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.configs.base import FedConfig
 from repro.models import get_model
 from repro.sharding.specs import (auto_batch_specs, auto_param_specs,
-                                  auto_tree_specs, dp_axes)
+                                  auto_tree_specs, dp_axes,
+                                  federation_state_specs)
 
 MESH = AbstractMesh((("data", 16), ("model", 16)))
 MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
@@ -83,6 +85,30 @@ def test_cache_specs_batch_one():
     shapes = jax.eval_shape(lambda: model.make_cache(1, 524288))
     specs = auto_tree_specs(shapes, MESH)
     _check_divisible(shapes, specs, MESH)
+
+
+@pytest.mark.parametrize("server_opt,kw", [
+    ("sgd", {}), ("momentum", {}), ("adam", {}), ("yogi", {}),
+    ("momentum", {"server_momentum": 0.0}),     # collapses to stateless sgd
+])
+def test_federation_state_specs_match_state_tree(server_opt, kw):
+    """The FederationState spec tree must mirror init_state's pytree for
+    every optimizer layout (dryrun lowers the full state), with moments
+    inheriting the param specs and client-state replicated."""
+    from repro.fl import engine
+    cfg = get_smoke("qwen1_5_0_5b")
+    model = get_model(cfg)
+    fed = FedConfig(server_opt=server_opt, **kw)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = auto_param_specs(shapes, MESH)
+    state_shapes = jax.eval_shape(lambda p: engine.init_state(p, fed, 8),
+                                  shapes)
+    sspecs = federation_state_specs(fed, pspecs)
+    assert (jax.tree.structure(state_shapes) ==
+            jax.tree.structure(sspecs, is_leaf=lambda s: isinstance(s, P)))
+    assert sspecs.backlog == P() and sspecs.util_ema == P()
+    if server_opt in ("adam", "yogi"):
+        assert sspecs.opt_state["m"] == pspecs
 
 
 def test_expert_parallel_toggle():

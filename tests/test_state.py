@@ -1,0 +1,331 @@
+"""Persistent FederationState: pytree registration, server-optimizer
+registry semantics, welfare selection, sketched grad_sim scoring, and the
+checkpoint/resume round-trip (bit-identical params + stats + PRNG stream).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import aggregation as agg
+from repro.data.synth import make_synth_federation
+from repro.fl import engine
+from repro.fl.simulator import (load_federation_state, run_federation,
+                                save_federation_state)
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+INIT, APPLY = SMALL_MODELS["synth_logreg"]
+LOSS = make_loss_fn(APPLY)
+FEDN = make_synth_federation(seed=5, n_priority=3, n_nonpriority=5,
+                             samples_per_client=64)
+DATA = {"x": jnp.asarray(FEDN.x), "y": jnp.asarray(FEDN.y)}
+PM = jnp.asarray(FEDN.priority_mask)
+W = jnp.asarray(FEDN.weights)
+C = int(PM.shape[0])
+PARAMS = INIT(jax.random.PRNGKey(0))
+
+
+# ===================================================== FederationState pytree
+def test_init_state_shapes_and_pytree():
+    fed = FedConfig(num_clients=C, server_opt="adam")
+    st = engine.init_state(PARAMS, fed, C)
+    assert st.backlog.shape == (C,) and st.backlog.dtype == jnp.int32
+    assert st.util_ema.shape == (C,) and st.incl_ema.shape == (C,)
+    assert set(st.opt_state) == {"m", "v", "t"}
+    # registered pytree: flatten/unflatten round-trips, jit can carry it
+    leaves, treedef = jax.tree.flatten(st)
+    st2 = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(st2, engine.FederationState)
+    doubled = jax.jit(lambda s: jax.tree.map(lambda x: x * 2, s))(st)
+    assert isinstance(doubled, engine.FederationState)
+
+
+def test_init_state_optimizer_layout_follows_config():
+    assert engine.init_state(PARAMS, FedConfig(server_opt="none"), C).opt_state == ()
+    assert engine.init_state(PARAMS, FedConfig(server_opt="sgd"), C).opt_state == ()
+    m = engine.init_state(PARAMS, FedConfig(server_opt="momentum"), C).opt_state
+    assert set(m) == {"m"}
+    y = engine.init_state(PARAMS, FedConfig(server_opt="yogi"), C).opt_state
+    assert set(y) == {"m", "v", "t"}
+
+
+def test_unknown_server_optimizer_raises():
+    with pytest.raises(ValueError, match="server optimizer"):
+        engine.init_state(PARAMS, FedConfig(server_opt="nope"), C)
+
+
+# ===================================================== server-optimizer rules
+def _one_round(fed, state=None, r=1, seed=0):
+    fn = jax.jit(engine.make_round_fn(LOSS, fed))
+    if state is None:
+        state = engine.init_state(PARAMS, fed, C)
+    return fn(state, DATA, PM, W, jax.random.PRNGKey(seed), jnp.int32(r))
+
+
+def test_none_is_sgd_alias():
+    base = dict(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
+                epsilon=1e9, warmup_frac=0.0, align_stat="loss")
+    sa, _ = _one_round(FedConfig(**base, server_opt="none"))
+    sb, _ = _one_round(FedConfig(**base, server_opt="sgd"))
+    for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_momentum_matches_hand_recursion():
+    """apply_server_opt with momentum reproduces m <- beta m + d,
+    w <- w + lr m on a toy tree."""
+    fed = FedConfig(server_opt="momentum", server_momentum=0.5, server_lr=0.1)
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    opt_state = agg.server_optimizer(fed).init(p)
+    d1 = {"w": jnp.asarray([1.0, -1.0])}
+    d2 = {"w": jnp.asarray([0.5, 0.5])}
+    p1, st1 = agg.apply_server_opt(fed, p, opt_state, d1)
+    p2, _ = agg.apply_server_opt(fed, p1, st1, d2)
+    m1 = 0.5 * 0 + np.asarray([1.0, -1.0])
+    w1 = np.asarray([1.0, 2.0]) + 0.1 * m1
+    m2 = 0.5 * m1 + np.asarray([0.5, 0.5])
+    w2 = w1 + 0.1 * m2
+    np.testing.assert_allclose(np.asarray(p1["w"]), w1, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(p2["w"]), w2, atol=1e-6)
+
+
+def test_adam_and_yogi_rules_on_constant_delta():
+    """With a constant delta, bias-corrected adam and yogi both step by
+    ~server_lr * d/(|d| + eps) in the right DIRECTION, and their second
+    moments differ (multiplicative vs additive v update)."""
+    p = {"w": jnp.asarray([0.0])}
+    d = {"w": jnp.asarray([0.01])}
+    outs = {}
+    for name in ("adam", "yogi"):
+        fed = FedConfig(server_opt=name, server_lr=0.1, server_eps=1e-3)
+        st = agg.server_optimizer(fed).init(p)
+        w = p
+        for _ in range(3):
+            w, st = agg.apply_server_opt(fed, w, st, d)
+        outs[name] = (float(w["w"][0]), st)
+        assert int(st["t"]) == 3
+        assert outs[name][0] > 0.0                       # moves toward delta
+    # bias-corrected adam on a constant delta steps EXACTLY
+    # server_lr * d / (|d| + eps) every round
+    np.testing.assert_allclose(
+        outs["adam"][0], 3 * 0.1 * 0.01 / (0.01 + 1e-3), rtol=1e-4)
+    # yogi's additive second moment grows faster than adam's EMA
+    v_adam = float(outs["adam"][1]["v"]["w"][0])
+    v_yogi = float(outs["yogi"][1]["v"]["w"][0])
+    assert v_yogi > v_adam > 0.0
+
+
+@pytest.mark.parametrize("server_opt", ["momentum", "adam", "yogi"])
+def test_server_optimizers_train_in_simulator(server_opt):
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=12, local_epochs=3,
+                    epsilon=0.2, lr=0.1, warmup_frac=0.0, batch_size=32,
+                    server_opt=server_opt,
+                    server_lr=1.0 if server_opt == "momentum" else 0.3)
+    hist = run_federation(LOSS, INIT(jax.random.PRNGKey(0)), fed, FEDN,
+                          eval_every=4)
+    assert hist.test_acc[-1] > 0.4
+    # the optimizer state really threads: moments are non-zero at the end
+    m_norm = sum(float(jnp.sum(jnp.abs(l)))
+                 for l in jax.tree.leaves(hist.state.opt_state["m"]))
+    assert m_norm > 0.0
+
+
+# ===================================================== welfare strategy
+def _ctx(**kw):
+    d = dict(align_vals=jnp.zeros((4,)), global_align=jnp.float32(0.0),
+             eps=jnp.float32(0.5), priority_mask=jnp.asarray([1, 0, 0, 0], bool))
+    d.update(kw)
+    return engine.SelectionContext(**d)
+
+
+def test_welfare_gates_on_smoothed_gap_and_floor():
+    ctx = _ctx(util_ema=jnp.asarray([0.0, 0.1, 0.9, 0.9]),
+               incl_ema=jnp.asarray([1.0, 1.0, 0.02, 0.5]),
+               welfare_floor=0.05)
+    gates = engine.compute_gates(ctx, "welfare")
+    # 1: smoothed gap 0.1 < eps; 2: gap 0.9 out of band BUT starved below
+    # the floor -> fairness admission; 3: out of band, not starved -> out
+    np.testing.assert_array_equal(np.asarray(gates), [1, 1, 1, 0])
+
+
+def test_welfare_without_state_raises():
+    with pytest.raises(ValueError, match="util_ema"):
+        engine.compute_gates(_ctx(), "welfare")
+
+
+def test_welfare_beta_zero_floor_zero_equals_fedalign():
+    """utility_ema=0 makes the EMA the instantaneous gap; floor 0 disables
+    the fairness admission -> welfare == fedalign gates for any round."""
+    base = dict(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                epsilon=0.3, warmup_frac=0.0, align_stat="loss",
+                utility_ema=0.0, welfare_floor=0.0)
+    _, sa = _one_round(FedConfig(**base, selection="welfare"))
+    _, sb = _one_round(FedConfig(**base, selection="fedalign"))
+    np.testing.assert_array_equal(np.asarray(sa["gates"]),
+                                  np.asarray(sb["gates"]))
+
+
+def test_utility_estimate_debiases_cold_start():
+    """Round 0 with beta=0.9: the raw EMA is 0.1*gap (would sneak a gap of
+    3.0 under eps=0.5); the bias-corrected estimate recovers the gap
+    exactly, so welfare rejects the misaligned client immediately."""
+    fed = FedConfig(utility_ema=0.9)
+    gap = jnp.asarray([3.0, 0.1])
+    raw = engine.utility_update(fed, jnp.zeros((2,)), gap, jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(raw), [0.3, 0.01], atol=1e-6)
+    hat = engine.utility_estimate(fed, raw, jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(hat), [3.0, 0.1], atol=1e-5)
+    # constant gap stays exactly recovered at every round
+    for r in range(1, 5):
+        raw = engine.utility_update(fed, raw, gap, jnp.float32(0.0))
+        hat = engine.utility_estimate(fed, raw, jnp.int32(r))
+        np.testing.assert_allclose(np.asarray(hat), [3.0, 0.1], atol=1e-5)
+    # and the end-to-end welfare round at r=0 rejects what fedalign rejects
+    base = dict(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                epsilon=0.3, warmup_frac=0.0, align_stat="loss",
+                utility_ema=0.9, welfare_floor=0.0)
+    _, sw = _one_round(FedConfig(**base, selection="welfare"), r=0)
+    _, sf = _one_round(FedConfig(**base, selection="fedalign"), r=0)
+    np.testing.assert_array_equal(np.asarray(sw["gates"]),
+                                  np.asarray(sf["gates"]))
+
+
+def test_welfare_ema_smooths_across_rounds():
+    """A high decay keeps yesterday's utility alive: after rounds of small
+    gaps, the smoothed gap stays in-band even if eps would cut the
+    instantaneous one — pinned via the carried util_ema."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                    epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                    selection="welfare", utility_ema=0.9)
+    st, _ = _one_round(fed)
+    st2, _ = _one_round(fed, state=st, r=2, seed=2)
+    assert np.all(np.asarray(st2.util_ema) >= 0)
+    assert np.any(np.asarray(st2.util_ema) != np.asarray(st.util_ema))
+
+
+# ===================================================== sketched grad_sim
+def test_delta_sketch_preserves_cosines():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    tree_a = {"x": a[:1000].reshape(10, 100), "y": a[1000:]}
+    tree_b = {"x": 2.0 * a[:1000].reshape(10, 100), "y": 2.0 * a[1000:]}  # cos 1
+    c = jax.random.normal(jax.random.PRNGKey(2), (4096,))
+    tree_c = {"x": c[:1000].reshape(10, 100), "y": c[1000:]}              # cos ~0
+    dim = 2048
+    sa = engine.delta_sketch(tree_a, key, dim)
+    sb = engine.delta_sketch(tree_b, key, dim)
+    sc = engine.delta_sketch(tree_c, key, dim)
+
+    def cos(u, v):
+        return float(jnp.dot(u, v) / (jnp.linalg.norm(u) * jnp.linalg.norm(v)))
+
+    assert cos(sa, sb) > 0.95                        # parallel stays parallel
+    assert abs(cos(sa, sc)) < 0.2                    # orthogonal stays small
+    # norms are preserved in expectation too (unbiased JL)
+    assert abs(float(jnp.linalg.norm(sa)) / float(jnp.linalg.norm(a)) - 1) < 0.2
+
+
+def test_engine_grad_sim_sketch_backends_identical():
+    """Sketched scoring uses a round-derived key shared by both backends:
+    vmap_spatial and scan_temporal still produce the identical round."""
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                    epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                    selection="grad_sim", sim_threshold=0.0,
+                    grad_sim_sketch=True, sketch_dim=256)
+    state = engine.init_state(PARAMS, fed, C)
+    outs = []
+    for backend in engine.BACKENDS:
+        fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
+        outs.append(fn(state, DATA, PM, W, jax.random.PRNGKey(0), jnp.int32(1)))
+    (sv, tv), (st_, tt) = outs
+    np.testing.assert_array_equal(np.asarray(tv["gates"]),
+                                  np.asarray(tt["gates"]))
+    for a, b in zip(jax.tree.leaves(sv), jax.tree.leaves(st_)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_sketched_cosines_close_to_exact():
+    """On the small model the sketched grad_sim statistic approximates the
+    exact one: same gates at a 0 threshold with well-separated cosines."""
+    from repro.core.aggregation import flatten_stacked
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
+                    epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                    selection="grad_sim", sim_threshold=0.0, sketch_dim=2048)
+    solver = engine.local_solver(LOSS, fed)
+    lkeys = jax.random.split(jax.random.PRNGKey(3), C)
+    client_params = jax.vmap(
+        lambda d, k: solver(PARAMS, d, k, jnp.float32(fed.lr)))(DATA, lkeys)
+    deltas = jax.tree.map(lambda ck, g: ck - g[None], client_params, PARAMS)
+    exact = engine.cosine_to_priority(flatten_stacked(deltas), W, PM)
+    skey = engine.sketch_key(fed, 1)
+    sketches = jax.vmap(
+        lambda d: engine.delta_sketch(d, skey, fed.sketch_dim))(deltas)
+    approx = engine.cosine_to_priority(sketches, W, PM)
+    exact, approx = np.asarray(exact), np.asarray(approx)
+    np.testing.assert_allclose(approx, exact, atol=0.25)
+    # clearly-separated clients (|cos| > 0.1) must gate identically at
+    # threshold 0 — the sketch only risks flips inside the noise band
+    clear = np.abs(exact) > 0.1
+    assert clear.any()
+    assert np.array_equal((exact > 0)[clear], (approx > 0)[clear])
+
+
+# ===================================================== checkpoint / resume
+def test_checkpoint_resume_bit_identical(tmp_path):
+    """Save the FULL FederationState (+ PRNG key) mid-run, resume, and pin
+    bit-identical params and stats against the uninterrupted run.
+
+    warmup_frac=0 and constant schedules keep the round semantics
+    independent of ``fed.rounds``, so the 'interrupted' run is literally
+    the first 5 rounds of the same trajectory."""
+    path = str(tmp_path / "fed.msgpack")
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=8, local_epochs=2,
+                    epsilon=0.3, lr=0.1, warmup_frac=0.0, batch_size=32,
+                    server_opt="yogi", server_lr=0.3, max_cohort=5,
+                    align_stat="loss")
+    params0 = INIT(jax.random.PRNGKey(0))
+    full = run_federation(LOSS, params0, fed, FEDN, eval_every=4,
+                          checkpoint_path=path)
+    like = engine.init_state(params0, fed, C)
+    _, _, step = load_federation_state(path, like)
+    assert step == fed.rounds                  # last boundary checkpoint
+
+    # interrupted run: rounds 0..4 (same chunking as the full run's first
+    # two chunks), checkpointed, reloaded, resumed for rounds 5..7
+    half = run_federation(LOSS, params0, fed.replace(rounds=5), FEDN,
+                          eval_every=4)
+    save_federation_state(path, half.state, half.rng, 5)
+    state, rng, step = load_federation_state(path, like)
+    assert step == 5
+    resumed = run_federation(LOSS, None, fed, FEDN, eval_every=4,
+                             state=state, rng=rng, start_round=step)
+
+    # bit-identical final params + optimizer moments + client state
+    for a, b in zip(jax.tree.leaves(full.state), jax.tree.leaves(resumed.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # stats of the overlapping rounds pin the PRNG stream too
+    np.testing.assert_array_equal(np.asarray(full.global_loss[5:]),
+                                  np.asarray(resumed.global_loss))
+    np.testing.assert_array_equal(np.stack(full.gates[5:]),
+                                  np.stack(resumed.gates))
+    assert full.test_acc[-1] == resumed.test_acc[-1]
+
+
+def test_checkpoint_roundtrip_state_pytree(tmp_path):
+    """save/load of a FederationState preserves every leaf (incl. int32
+    backlog and the adam step counter) exactly."""
+    fed = FedConfig(num_clients=C, server_opt="adam")
+    st = engine.init_state(PARAMS, fed, C)
+    st = st.replace(backlog=st.backlog.at[1].set(3),
+                    util_ema=st.util_ema + 0.25)
+    path = str(tmp_path / "st.msgpack")
+    save_federation_state(path, st, jax.random.PRNGKey(7), 11)
+    like = engine.init_state(PARAMS, fed, C)
+    st2, rng2, step = load_federation_state(path, like)
+    assert step == 11
+    np.testing.assert_array_equal(np.asarray(rng2),
+                                  np.asarray(jax.random.PRNGKey(7)))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
