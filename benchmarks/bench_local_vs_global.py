@@ -7,7 +7,7 @@ import jax
 
 from repro.configs.base import FedConfig
 from repro.data.shards import make_benchmark_federation
-from repro.fl.simulator import evaluate, run_federation, run_local_baseline
+from repro.fl.simulator import run_federation, run_local_baseline
 from repro.models.small import SMALL_MODELS, make_loss_fn
 
 

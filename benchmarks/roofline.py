@@ -22,7 +22,6 @@ import glob
 import json
 import os
 
-import numpy as np
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip

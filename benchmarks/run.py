@@ -28,8 +28,16 @@ SUITES = [
     ("ablations", "benchmarks.bench_ablations"),
     ("kernels", "benchmarks.bench_kernels"),
     ("round_pipeline", "benchmarks.bench_round"),
+    # bench_round.py --quick: seconds-long smoke (one cohort rate + the
+    # depth-0 async parity row) — opt-in, for local use via
+    # `python -m benchmarks.run --only round_pipeline_quick`
+    ("round_pipeline_quick", "benchmarks.bench_round:run_quick"),
     ("roofline_single_pod", "benchmarks.roofline"),
 ]
+
+# suites that only run when --only names them (local smoke entry points;
+# a full pass would just duplicate their parent suite's coverage)
+OPT_IN_SUITES = {"round_pipeline_quick"}
 
 
 def derived_summary(name: str, rows) -> str:
@@ -52,15 +60,19 @@ def derived_summary(name: str, rows) -> str:
         if name == "kernels":
             worst = max(r["max_err_vs_oracle"] for r in rows)
             return f"max_oracle_err={worst:.2e}"
-        if name == "round_pipeline":
+        if name.startswith("round_pipeline"):
             best = max(r["speedup_vs_dense"] for r in rows
                        if r["path"] == "cohort")
             ov = next((r["overhead_frac"] for r in rows
                        if r["path"] == "state_threading_overhead"), None)
             adam = next((r["slowdown_vs_sgd"] for r in rows
                          if r["path"] == "server_opt:adam"), None)
+            asy = next((r["async_speedup_vs_sync"] for r in rows
+                        if r["path"].startswith("async:depth")
+                        and r["async_depth"]), None)
             return (f"best_cohort_speedup={best:.2f}x;"
-                    f"state_overhead={ov};adam_slowdown={adam}")
+                    f"state_overhead={ov};adam_slowdown={adam};"
+                    f"async_depth_speedup={asy}")
         if name.startswith("roofline"):
             ok = [r for r in rows if r.get("status") == "ok"]
             if not ok:
@@ -84,15 +96,27 @@ def main() -> None:
     os.makedirs("results/bench", exist_ok=True)
     print("name,us_per_call,derived")
     failures = []
-    for name, modname in SUITES:
+    for name, modspec in SUITES:
         if args.only and args.only not in name:
             continue
+        # opt-in suites run only when --only names them EXACTLY — the
+        # substring filter alone would drag round_pipeline_quick into
+        # every `--only round_pipeline` run
+        if name in OPT_IN_SUITES and args.only != name:
+            continue
         print(f"# running {name} ...", file=sys.stderr, flush=True)
+        modname, _, attr = modspec.partition(":")
         mod = importlib.import_module(modname)
+        run_fn = getattr(mod, attr or "run")
         t0 = time.perf_counter()
         try:
-            rows = mod.run(fast=not args.full)
+            rows = run_fn(fast=not args.full)
             status = ""
+            if not rows:
+                # a suite that silently produces NOTHING is as broken as a
+                # raising one — its output file would be an empty artifact
+                status = "ERROR:EmptyOutput:suite returned no rows"
+                failures.append(name)
         except Exception as e:  # noqa: BLE001
             # a raising suite FAILS the run (nonzero exit below) — the
             # remaining suites still execute so one CI pass reports every
@@ -103,8 +127,17 @@ def main() -> None:
         us = (time.perf_counter() - t0) * 1e6
         derived = status or derived_summary(name, rows)
         print(f"{name},{us:.0f},{derived}", flush=True)
-        with open(f"results/bench/{name}.json", "w") as f:
-            json.dump(rows, f, indent=1, default=str)
+        out_path = f"results/bench/{name}.json"
+        try:
+            with open(out_path, "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+        except OSError as e:
+            # a suite whose output file cannot be written is a failure,
+            # not a quiet gap in the artifact directory
+            print(f"# {name}: could not write {out_path}: {e}",
+                  file=sys.stderr)
+            if name not in failures:
+                failures.append(name)
     if failures:
         print(f"# FAILED suites: {', '.join(failures)}", file=sys.stderr)
         sys.exit(1)

@@ -1,0 +1,150 @@
+"""CI benchmark-regression gate.
+
+Compares a freshly generated ``BENCH_round.json`` against the committed
+baseline and FAILS (exit 1) when any row's ``rounds_per_sec`` regressed by
+more than the tolerance (default 15%). Rows are matched by their identity
+fields (path + configuration knobs), NOT by list position, so reordering
+or interleaving new rows never miscompares:
+
+* new rows (present only in the fresh run) are ALLOWED — adding a
+  benchmark must not require touching the gate;
+* removed rows (present only in the baseline) FAIL — a silently dropped
+  row is how a regression hides;
+* rows without a ``rounds_per_sec`` metric (e.g. the rounds-to-target
+  convergence rows, the state-threading-overhead row) are not gated.
+
+**Common-mode normalization.** The committed baseline and the fresh run
+usually come from DIFFERENT machines (dev laptop vs CI runner) or load
+conditions, so a uniform absolute shift carries no signal. When >= 3 rows
+are gated, each row's fresh/baseline ratio is judged relative to the
+MEDIAN ratio across rows, capped at 1.0: a slower-but-uniformly-slower box
+stays green, while a single row that fell behind its peers fails. The cap
+means a uniformly *faster* run is still gated absolutely (nothing can fail
+from others speeding up). The trade-off is explicit: a genuinely uniform
+code slowdown across every row reads as machine speed — per-row gates
+cannot distinguish the two across hardware; ``--absolute`` restores raw
+ratio gating for same-machine comparisons.
+
+Usage (wired into .github/workflows/ci.yml after the bench step):
+
+    python scripts/check_bench.py BENCH_round.json BENCH_round.fresh.json \
+        [--tolerance 0.15] [--absolute]
+
+The tolerance can also be set via the BENCH_REGRESSION_TOLERANCE env var
+(the CLI flag wins). Exit codes: 0 green, 1 regression/missing row,
+2 usage error (unreadable/empty input).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# fields that identify a row across runs; metrics and derived values are
+# deliberately absent (they are what we compare, not how we match)
+KEY_FIELDS = ("path", "target_inclusion_rate", "max_cohort", "clients",
+              "scan_rounds", "async_depth")
+
+METRIC = "rounds_per_sec"
+
+
+def row_key(row: dict) -> tuple:
+    return tuple((k, row[k]) for k in KEY_FIELDS if k in row)
+
+
+def load_rows(path: str) -> dict:
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench: cannot read {path!r}: {e}", file=sys.stderr)
+        raise SystemExit(2) from None
+    if not isinstance(rows, list) or not rows:
+        print(f"check_bench: {path!r} holds no benchmark rows", file=sys.stderr)
+        raise SystemExit(2)
+    out = {}
+    for row in rows:
+        key = row_key(row)
+        if key in out:
+            print(f"check_bench: duplicate row key {key} in {path!r}",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        out[key] = row
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float,
+            absolute: bool = False) -> list[str]:
+    """Returns the list of failure messages (empty == gate green)."""
+    failures, pairs = [], []
+    for key, base_row in sorted(baseline.items()):
+        if METRIC not in base_row or base_row[METRIC] in (None, 0):
+            continue
+        name = dict(key).get("path", str(key))
+        if key not in fresh:
+            failures.append(f"row {key} vanished from the fresh run "
+                            f"(was {base_row[METRIC]} {METRIC})")
+            continue
+        fresh_row = fresh[key]
+        if METRIC not in fresh_row or fresh_row[METRIC] in (None, 0):
+            failures.append(f"{name}: fresh row lost its {METRIC} metric")
+            continue
+        pairs.append((name, base_row[METRIC], fresh_row[METRIC]))
+
+    norm = 1.0
+    if not absolute and len(pairs) >= 3:
+        ratios = sorted(f / b for _, b, f in pairs)
+        mid = len(ratios) // 2
+        median = (ratios[mid] if len(ratios) % 2
+                  else (ratios[mid - 1] + ratios[mid]) / 2.0)
+        norm = min(median, 1.0)
+        if norm < 1.0:
+            print(f"  common-mode speed factor {norm:.2%} (median ratio) — "
+                  f"rows are judged relative to it")
+    for name, base_v, fresh_v in pairs:
+        rel = (fresh_v / base_v) / norm
+        verdict = "OK" if rel >= 1.0 - tolerance else "REGRESSION"
+        print(f"  [{verdict}] {name}: {base_v:.2f} -> {fresh_v:.2f} "
+              f"{METRIC} ({fresh_v / base_v:.2%} of baseline, "
+              f"{rel:.2%} normalized)")
+        if verdict == "REGRESSION":
+            failures.append(
+                f"{name}: {METRIC} fell {1.0 - rel:.1%} behind the fleet "
+                f"({base_v:.2f} -> {fresh_v:.2f}, tolerance "
+                f"{tolerance:.0%})")
+    new = set(fresh) - set(baseline)
+    for key in sorted(new):
+        print(f"  [NEW] {dict(key).get('path', key)} (not gated this run)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_round.json")
+    ap.add_argument("fresh", help="freshly generated BENCH_round.json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_TOLERANCE", "0.15")),
+                    help="max allowed fractional rounds/sec drop per row "
+                         "(default 0.15 = 15%%)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="gate raw ratios without common-mode (median) "
+                         "normalization — for same-machine comparisons")
+    args = ap.parse_args(argv)
+
+    print(f"check_bench: {args.fresh} vs baseline {args.baseline} "
+          f"(tolerance {args.tolerance:.0%})")
+    failures = compare(load_rows(args.baseline), load_rows(args.fresh),
+                       args.tolerance, absolute=args.absolute)
+    if failures:
+        print("\ncheck_bench: FAILED", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("check_bench: green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,6 @@
 """Generate EXPERIMENTS.md markdown tables from dry-run + roofline artifacts."""
 import glob
 import json
-import os
 import sys
 
 sys.path.insert(0, "src")

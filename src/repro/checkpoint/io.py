@@ -45,14 +45,31 @@ def save_pytree(path: str, tree: Any, step: int | None = None) -> None:
 
 
 def load_pytree(path: str, like: Any):
-    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    """Restore into the structure of ``like`` (shape/dtype-checked).
+
+    Mismatches raise ``ValueError`` with the offending layout spelled out:
+    the usual cause is restoring with a config whose state layout differs
+    from the one that wrote the checkpoint (different ``server_opt`` moment
+    tree, ``num_clients``, or — for async runs — ``async_depth``, which
+    sizes the in-flight cohort buffer's leading [D] axis)."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), object_hook=_decode, strict_map_key=False)
     leaves, treedef = jax.tree.flatten(like)
     new_leaves = payload["leaves"]
-    assert len(new_leaves) == len(leaves), (len(new_leaves), len(leaves))
+    if len(new_leaves) != len(leaves):
+        raise ValueError(
+            f"checkpoint {path!r} holds {len(new_leaves)} leaves but the "
+            f"requested structure has {len(leaves)} — was it written with a "
+            "different config (server_opt moment layout, async_depth "
+            "in-flight buffer, num_clients)?")
     out = []
-    for old, new in zip(leaves, new_leaves):
-        assert tuple(new.shape) == tuple(old.shape), (new.shape, old.shape)
+    for i, (old, new) in enumerate(zip(leaves, new_leaves)):
+        if tuple(new.shape) != tuple(old.shape):
+            raise ValueError(
+                f"checkpoint {path!r} leaf {i} has shape "
+                f"{tuple(new.shape)} but the requested structure expects "
+                f"{tuple(old.shape)} — config/state layout mismatch "
+                "(e.g. a resume with a different async_depth or client "
+                "count than the run that wrote the checkpoint)")
         out.append(jnp.asarray(new, dtype=old.dtype))
     return jax.tree.unflatten(treedef, out), payload.get("step")

@@ -8,8 +8,7 @@ variant of the same family: <=2 layers-per-period repeats, d_model<=512,
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 
@@ -215,7 +214,27 @@ class FedConfig:
                                       # 0 disables the floor
     backend: str = "vmap_spatial"     # engine execution backend:
                                       # vmap_spatial (clients in parallel) |
-                                      # scan_temporal (time-multiplexed)
+                                      # scan_temporal (time-multiplexed) |
+                                      # scan_async (overlapped cohorts: the
+                                      # round's aggregated delta is applied
+                                      # async_depth rounds later)
+    async_depth: int = 0              # scan_async pipeline depth D: the
+                                      # cohort gathered at round t trains
+                                      # against w_t but its aggregated delta
+                                      # is applied at round t + D, while
+                                      # rounds t+1..t+D-1 evaluate/gate
+                                      # without waiting for it. The D
+                                      # in-flight deltas live in
+                                      # FederationState.inflight (a ring
+                                      # buffer, oldest first). 0 = fully
+                                      # synchronous: scan_async is then
+                                      # bit-identical to vmap_spatial
+    staleness_decay: float = 1.0      # per-round discount on stale deltas:
+                                      # a delta applied with staleness D is
+                                      # scaled by staleness_decay ** D
+                                      # before the ServerOptimizer step
+                                      # (1.0 = no discount; cf. async FL
+                                      # buffers, arXiv:2402.05050)
     max_cohort: int = 0               # static training-cohort budget K for
                                       # gate-before-train strategies (those
                                       # not needing client deltas): gates are

@@ -1,8 +1,8 @@
 from repro.core.alignment import (epsilon_at, global_loss_from_locals,  # noqa: F401
                                   inclusion_gates)
 from repro.core.aggregation import (SERVER_OPTIMIZERS, aggregate_clients,  # noqa: F401
-                                    aggregate_updates, apply_server_opt,
-                                    get_server_optimizer,
+                                    aggregate_delta, aggregate_updates,
+                                    apply_server_opt, get_server_optimizer,
                                     register_server_optimizer,
                                     server_optimizer)
 from repro.core.round import init_state, make_round_fn  # noqa: F401

@@ -134,32 +134,57 @@ def _server_yogi(fed):
     return _opt.yogi(fed.server_b1, fed.server_b2, fed.server_eps)
 
 
-def apply_server_opt(fed, global_params, opt_state, agg_delta):
+def apply_server_opt(fed, global_params, opt_state, agg_delta, *, scale=1.0):
     """One server-optimizer step on an already-aggregated global delta.
 
     Returns (new_params, new_opt_state). The delta enters the optimizer as
     the pseudo-gradient g = -agg_delta, so ``sgd`` at server_lr recovers
     w + server_lr * delta exactly and ``momentum`` reproduces the legacy
-    FedAvgM recursion m <- beta m + delta, w <- w + server_lr m."""
+    FedAvgM recursion m <- beta m + delta, w <- w + server_lr m.
+
+    ``scale`` pre-multiplies the delta (in f32, after the wire-dtype cast):
+    the staleness discount of the ``scan_async`` backend
+    (``staleness_decay ** async_depth``) enters the optimizer here, so a
+    stale delta's momentum/second-moment contribution is discounted too,
+    not just its parameter step. The default 1.0 skips the multiply
+    entirely — the synchronous path is untouched."""
     opt = server_optimizer(fed)
-    grads = jax.tree.map(lambda d: -d.astype(jnp.float32), agg_delta)
+    if isinstance(scale, (int, float)) and float(scale) == 1.0:
+        grads = jax.tree.map(lambda d: -d.astype(jnp.float32), agg_delta)
+    else:
+        grads = jax.tree.map(lambda d: -d.astype(jnp.float32) * scale,
+                             agg_delta)
     return opt.update(grads, opt_state, global_params, fed.server_lr)
+
+
+def aggregate_delta(global_params, client_params, weights, gates, *,
+                    fed, interpret=False):
+    """Delta-form gated aggregation WITHOUT the server step:
+
+        d <- agg(cast(w_k - w, fed.agg_dtype))      (ONE fused fedagg call)
+
+    Returns the aggregated global delta (leaves in ``fed.agg_dtype``).
+    This is the seam the ``scan_async`` backend buffers: an in-flight
+    cohort is exactly one of these deltas awaiting its (staleness-
+    discounted) ``apply_server_opt`` some rounds later. ``client_params``
+    may live in cohort space [K, ...] (zero gates drop padding slots)."""
+    ad = jnp.dtype(fed.agg_dtype)
+    deltas = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
+                          client_params, global_params)
+    return aggregate_clients(deltas, weights, gates,
+                             use_pallas=fed.use_pallas,
+                             fused=fed.fused_agg, interpret=interpret)
 
 
 def aggregate_updates(global_params, client_params, weights, gates, *,
                       fed, opt_state=(), interpret=False):
     """Delta-form gated aggregation + the configured server optimizer:
 
-        d  <- agg(cast(w_k - w, fed.agg_dtype))     (ONE fused fedagg call)
+        d  <- aggregate_delta(...)                  (ONE fused fedagg call)
         w, moments <- ServerOptimizer(fed.server_opt)(w, moments, d)
 
-    Returns (new_params, new_opt_state). ``client_params`` may live in
-    cohort space [K, ...] (zero gates drop padding slots). ``fed.agg_dtype``
-    selects the reduced-precision delta wire format; accumulation is f32
-    either way."""
-    ad = jnp.dtype(fed.agg_dtype)
-    deltas = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
-                          client_params, global_params)
-    agg = aggregate_clients(deltas, weights, gates, use_pallas=fed.use_pallas,
-                            fused=fed.fused_agg, interpret=interpret)
+    Returns (new_params, new_opt_state). ``fed.agg_dtype`` selects the
+    reduced-precision delta wire format; accumulation is f32 either way."""
+    agg = aggregate_delta(global_params, client_params, weights, gates,
+                          fed=fed, interpret=interpret)
     return apply_server_opt(fed, global_params, opt_state, agg)

@@ -13,7 +13,6 @@ Priority clients are always included (subject to participation sampling).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -14,7 +14,6 @@ is what drives the paper's heterogeneity claims and is preserved exactly.
 """
 from __future__ import annotations
 
-from dataclasses import replace
 
 import numpy as np
 

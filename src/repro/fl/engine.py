@@ -33,9 +33,24 @@ Two orthogonal seams:
                     at pod scale)
     scan_temporal — clients time-multiplexed via lax.scan (models too big
                     to replicate per client)
+    scan_async    — overlapped cohorts: spatial (vmap) execution, but the
+                    round's aggregated delta is NOT applied at the round
+                    barrier. The cohort gathered at round t trains against
+                    w_t while rounds t+1..t+D-1 evaluate/gate without
+                    waiting for it; its delta lands at round t + D
+                    (``FedConfig.async_depth``) scaled by the staleness
+                    discount ``staleness_decay ** D``. The D in-flight
+                    deltas are ordinary ``FederationState`` leaves
+                    (``state.inflight``, a ring buffer), so the jitted
+                    ``lax.scan`` driver, checkpoint/resume, and the pjit
+                    lowering carry them like any other cross-round state.
+                    ``async_depth=0`` degenerates to the synchronous
+                    round, bit-identical to vmap_spatial.
 
-  Both backends produce identical rounds (same PRNG fan-out, same gating,
-  same aggregation) — only the schedule over hardware differs.
+  The two synchronous backends produce identical rounds (same PRNG
+  fan-out, same gating, same aggregation) — only the schedule over
+  hardware differs. ``scan_async`` produces the same *per-round compute*
+  but a pipelined *application* schedule.
 
 Rounds thread a persistent **FederationState** — a registered pytree
 carrying the global params, the server-optimizer moments, the per-client
@@ -49,12 +64,14 @@ fairness, welfare selection, and later staggered/async cohorts) lives in
 one seam that survives the jitted ``lax.scan`` driver and checkpoints as
 one pytree.
 
-Aggregation routes through `core.aggregation.aggregate_updates`: the whole
-client-stacked delta pytree fuses into one [C, M_total] buffer, hits the
-`fedagg` kernel once per round (`FedConfig.use_pallas` selects the Pallas
-TPU kernel; `agg_dtype` casts client deltas on the wire), and the
-aggregated delta feeds the decorator-registered ServerOptimizer
-(`FedConfig.server_opt`: sgd | momentum | adam | yogi).
+Aggregation routes through `core.aggregation.aggregate_delta`: the whole
+client-stacked delta pytree fuses into one [C, M_total] buffer and hits
+the `fedagg` kernel once per round (`FedConfig.use_pallas` selects the
+Pallas TPU kernel; `agg_dtype` casts client deltas on the wire). The
+aggregated delta then feeds the decorator-registered ServerOptimizer
+(`FedConfig.server_opt`: sgd | momentum | adam | yogi) via
+`apply_server_opt` — immediately in the synchronous backends, or
+`async_depth` rounds later through the in-flight buffer in `scan_async`.
 """
 from __future__ import annotations
 
@@ -65,13 +82,13 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import (aggregate_updates, flatten_stacked,
-                                    server_optimizer)
+from repro.core.aggregation import (aggregate_delta, apply_server_opt,
+                                    flatten_stacked, server_optimizer)
 from repro.core.alignment import epsilon_at, global_loss_from_locals
 from repro.optim.schedules import make_schedule
 from repro.utils import tree_axpy
 
-BACKENDS = ("vmap_spatial", "scan_temporal")
+BACKENDS = ("vmap_spatial", "scan_temporal", "scan_async")
 
 
 # ============================================================ federation state
@@ -94,12 +111,20 @@ class FederationState:
       (decay ``fed.utility_ema``), the welfare strategy's utility signal.
     * ``incl_ema`` — [C] f32 EMA of the effective inclusion gates — the
       cross-round participation share welfare fairness reads.
+    * ``inflight`` — the ``scan_async`` in-flight cohort buffer, or ``()``
+      when ``fed.async_depth == 0``. A dict of two leaves:
+      ``inflight["delta"]`` stacks the D = ``fed.async_depth`` aggregated
+      cohort deltas awaiting application (params-shaped leaves with a
+      leading [D] axis, wire dtype ``fed.agg_dtype``, oldest at index 0)
+      and ``inflight["valid"]`` is the [D] f32 occupancy mask (0 while the
+      pipeline warms up and the slot holds no real cohort yet).
     """
     params: Any
     opt_state: Any
     backlog: Any
     util_ema: Any
     incl_ema: Any
+    inflight: Any = ()
 
     def replace(self, **kw) -> "FederationState":
         return dataclasses.replace(self, **kw)
@@ -107,20 +132,41 @@ class FederationState:
 
 jax.tree_util.register_dataclass(
     FederationState,
-    data_fields=["params", "opt_state", "backlog", "util_ema", "incl_ema"],
+    data_fields=["params", "opt_state", "backlog", "util_ema", "incl_ema",
+                 "inflight"],
     meta_fields=[])
+
+
+def init_inflight(params, fed):
+    """Empty in-flight cohort ring buffer for ``fed.async_depth`` (D) slots,
+    or ``()`` at depth 0 (synchronous runs carry no extra leaves).
+
+    Leaf layout is fixed by the CONFIG (depth, params shapes, wire dtype) —
+    the pytree-structure stability the scanned driver and checkpoint
+    round-trips require."""
+    D = int(fed.async_depth)
+    if D <= 0:
+        return ()
+    ad = jnp.dtype(fed.agg_dtype)
+    return {
+        "delta": jax.tree.map(
+            lambda p: jnp.zeros((D,) + tuple(p.shape), ad), params),
+        "valid": jnp.zeros((D,), jnp.float32),
+    }
 
 
 def init_state(params, fed, num_clients: Optional[int] = None) -> FederationState:
     """Fresh FederationState for a federation of ``num_clients`` (defaults
-    to ``fed.num_clients``): zero moments, zero backlog, zero EMAs."""
+    to ``fed.num_clients``): zero moments, zero backlog, zero EMAs, and an
+    empty in-flight buffer when ``fed.async_depth > 0``."""
     C = int(num_clients if num_clients is not None else fed.num_clients)
     return FederationState(
         params=params,
         opt_state=server_optimizer(fed).init(params),
         backlog=jnp.zeros((C,), jnp.int32),
         util_ema=jnp.zeros((C,), jnp.float32),
-        incl_ema=jnp.zeros((C,), jnp.float32))
+        incl_ema=jnp.zeros((C,), jnp.float32),
+        inflight=init_inflight(params, fed))
 
 
 # ============================================================ selection seam
@@ -340,19 +386,87 @@ def inclusion_update(fed, incl_ema, eff_gates):
     return beta * incl_ema + (1.0 - beta) * eff_gates.astype(jnp.float32)
 
 
-def server_update(fed, global_params, opt_state, client_params, weights, gates):
-    """(6) renormalized gated delta aggregation + the configured
-    ServerOptimizer step — one fused fedagg per round, honouring
-    ``fed.agg_dtype``'s reduced-precision delta wire format, then
-    ``fed.server_opt`` (sgd | momentum | adam | yogi) applied to the
-    aggregated delta. Returns (new_params, new_opt_state).
-    ``client_params``/``weights``/``gates`` may live in cohort space
-    [K, ...]: zero gates drop padding slots, so the result matches the
-    dense [C, ...] aggregation whenever every included client made the
-    cohort. THE aggregation-routing implementation — the sharded pod
-    rounds call it too (core/aggregation.aggregate_updates)."""
-    return aggregate_updates(global_params, client_params, weights, gates,
-                             fed=fed, opt_state=opt_state)
+def server_delta(fed, global_params, client_params, weights, gates):
+    """(6a) renormalized gated delta aggregation: one fused fedagg on the
+    gated client deltas, honouring ``fed.agg_dtype``'s reduced-precision
+    wire format, WITHOUT the ServerOptimizer step. The synchronous round
+    applies the result immediately (``apply_server_opt``); the
+    ``scan_async`` round pushes it into the in-flight buffer instead
+    (``async_apply``). ``client_params``/``weights``/``gates`` may live in
+    cohort space [K, ...]: zero gates drop padding slots, so the result
+    matches the dense [C, ...] aggregation whenever every included client
+    made the cohort. THE aggregation-routing seam — the sharded pod rounds
+    call it too (core/aggregation.aggregate_delta)."""
+    return aggregate_delta(global_params, client_params, weights, gates,
+                           fed=fed)
+
+
+def staleness_discount(fed) -> float:
+    """Static scale applied to a delta that aged ``fed.async_depth`` rounds
+    in the in-flight buffer: ``staleness_decay ** async_depth``. With the
+    fixed-depth pipeline every applied delta has exactly this staleness, so
+    the discount is a compile-time constant."""
+    return float(fed.staleness_decay) ** int(fed.async_depth)
+
+
+def async_apply(fed, global_params, opt_state, inflight, agg_delta):
+    """One tick of the scan_async application state machine.
+
+    Pops the OLDEST in-flight cohort delta (index 0 of the ring buffer),
+    applies it through the configured ServerOptimizer scaled by the
+    staleness discount — under ``lax.cond`` on the slot's validity, so
+    pipeline warm-up rounds (the first D rounds, before any cohort has
+    aged D rounds) leave params AND optimizer moments untouched — then
+    shifts the buffer and pushes this round's fresh ``agg_delta`` into the
+    youngest slot.
+
+    Returns ``(new_params, new_opt_state, new_inflight, applied_valid)``.
+    The buffer leaves keep their config-fixed [D, ...] shapes, so the
+    whole transition is a legal ``lax.scan`` carry step."""
+    oldest = jax.tree.map(lambda buf: buf[0], inflight["delta"])
+    valid0 = inflight["valid"][0]
+    disc = staleness_discount(fed)
+    new_params, new_opt = jax.lax.cond(
+        valid0 > 0,
+        lambda: apply_server_opt(fed, global_params, opt_state, oldest,
+                                 scale=disc),
+        lambda: (global_params, opt_state))
+    new_inflight = {
+        "delta": jax.tree.map(
+            lambda buf, d: jnp.concatenate(
+                [buf[1:], d.astype(buf.dtype)[None]], axis=0),
+            inflight["delta"], agg_delta),
+        "valid": jnp.concatenate(
+            [inflight["valid"][1:], jnp.ones((1,), jnp.float32)]),
+    }
+    return new_params, new_opt, new_inflight, valid0
+
+
+def drain_inflight(fed, state: FederationState) -> FederationState:
+    """Flush a scan_async pipeline at end of run: apply every still-valid
+    in-flight cohort delta oldest-first through the ServerOptimizer (each
+    with the same ``staleness_discount`` it would have received in-stream)
+    and return the state with an emptied buffer. A real async server does
+    exactly this at shutdown — straggler cohorts are absorbed, not
+    dropped. No-op for synchronous states (``inflight == ()``)."""
+    if not isinstance(state.inflight, dict):
+        return state
+    disc = staleness_discount(fed)
+    params, opt_state = state.params, state.opt_state
+    D = int(state.inflight["valid"].shape[0])
+    for i in range(D):                     # static unroll: D is small
+        delta_i = jax.tree.map(lambda b: b[i], state.inflight["delta"])
+        params, opt_state = jax.lax.cond(
+            state.inflight["valid"][i] > 0,
+            lambda po, d=delta_i: apply_server_opt(fed, po[0], po[1], d,
+                                                   scale=disc),
+            lambda po: po,
+            (params, opt_state))
+    empty = {
+        "delta": jax.tree.map(jnp.zeros_like, state.inflight["delta"]),
+        "valid": jnp.zeros_like(state.inflight["valid"]),
+    }
+    return state.replace(params=params, opt_state=opt_state, inflight=empty)
 
 
 def delta_sketch(delta, key, dim: int):
@@ -468,6 +582,10 @@ def _train_scan(solver, global_params, data, keys, lr, gates=None):
 _BACKENDS = {
     "vmap_spatial": (_eval_vmap, _train_vmap),
     "scan_temporal": (_eval_scan, _train_scan),
+    # scan_async schedules CLIENTS spatially (vmap) like vmap_spatial — the
+    # "scan" in its name is the round axis: cohorts overlap ACROSS rounds
+    # of the driver's lax.scan via the in-flight FederationState buffer.
+    "scan_async": (_eval_vmap, _train_vmap),
 }
 
 
@@ -489,16 +607,33 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
     backlog-aware overflow policy). Delta-based strategies (grad_sim) keep
     the train-first order — their statistic needs the client updates
     (exact [C, M_total] flatten, or a CountSketch under
-    ``fed.grad_sim_sketch``)."""
+    ``fed.grad_sim_sketch``).
+
+    ``backend="scan_async"`` with ``fed.async_depth = D > 0`` defers the
+    APPLICATION of the round's aggregated delta by D rounds through the
+    ``FederationState.inflight`` ring buffer (``async_apply``): round t's
+    cohort trains against w_t, rounds t+1..t+D-1 gate without waiting for
+    it, and its delta lands at t+D scaled by ``staleness_decay ** D``.
+    At D = 0 the async round degenerates to the synchronous one and is
+    bit-identical to ``vmap_spatial``."""
     backend = backend or fed.backend
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")
+    if fed.async_depth > 0 and backend != "scan_async":
+        raise ValueError(
+            f"FedConfig.async_depth={fed.async_depth} requires the "
+            f"'scan_async' backend; {backend!r} applies every delta at its "
+            "own round barrier and would silently ignore the in-flight "
+            "buffer (set async_depth=0 or backend='scan_async')")
     eval_clients, train_clients = _BACKENDS[backend]
     strategy = get_strategy(fed.selection)
     solver = local_solver(loss_fn, fed)
     sched = make_schedule(fed)
     warmup_rounds = int(fed.warmup_frac * fed.rounds)
     gate_before_train = not strategy.needs_deltas
+    # static pipeline depth: 0 (and thus the fully synchronous application
+    # path, bit-identical to vmap_spatial) unless scan_async asks for more
+    async_depth = int(fed.async_depth) if backend == "scan_async" else 0
 
     def round_fn(state: FederationState, data, priority_mask, weights, rng,
                  round_idx):
@@ -558,17 +693,15 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
                     solver, global_params,
                     jax.tree.map(lambda a: a[cohort_idx], data),
                     lkeys[cohort_idx], lr, gates=cohort_gates)
-                new_global, opt_state = server_update(
-                    fed, global_params, state.opt_state, cohort_params,
-                    weights[cohort_idx], cohort_gates)
+                agg_delta = server_delta(fed, global_params, cohort_params,
+                                         weights[cohort_idx], cohort_gates)
             else:
                 # (5) dense: everyone trains, but the scan backend still
                 # cond-skips gated-out clients (no epochs for gate 0)
                 client_params = train_clients(solver, global_params, data,
                                               lkeys, lr, gates=gates)
-                new_global, opt_state = server_update(
-                    fed, global_params, state.opt_state, client_params,
-                    weights, gates)
+                agg_delta = server_delta(fed, global_params, client_params,
+                                         weights, gates)
         else:
             # (5) train-first: the statistic needs the client updates
             sel_gates = None
@@ -587,9 +720,19 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
                                                weights, priority_mask)
             # (4) gates from the selection strategy (core/alignment rule et al.)
             gates = compute_gates(make_ctx(delta_cos), fed.selection)
-            new_global, opt_state = server_update(
-                fed, global_params, state.opt_state, client_params, weights,
-                gates)
+            agg_delta = server_delta(fed, global_params, client_params,
+                                     weights, gates)
+
+        # (6) apply — at the round barrier (sync, and scan_async at depth
+        # 0), or D rounds late through the in-flight buffer (scan_async)
+        if async_depth > 0:
+            new_global, opt_state, inflight, applied_valid = async_apply(
+                fed, global_params, state.opt_state, state.inflight,
+                agg_delta)
+        else:
+            new_global, opt_state = apply_server_opt(
+                fed, global_params, state.opt_state, agg_delta)
+            inflight = state.inflight
 
         # cross-round state: backlog ledger + inclusion EMA follow the
         # EFFECTIVE gates the aggregation honoured
@@ -599,7 +742,7 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
         incl_ema = inclusion_update(fed, state.incl_ema, gates)
         new_state = FederationState(params=new_global, opt_state=opt_state,
                                     backlog=backlog, util_ema=util_ema,
-                                    incl_ema=incl_ema)
+                                    incl_ema=incl_ema, inflight=inflight)
 
         npri = (1.0 - priority_mask.astype(jnp.float32))
         included_mass = jnp.sum(npri * weights * gates)
@@ -615,6 +758,12 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
             "included_nonpriority": jnp.sum(npri * gates),
             "warmup": warm.astype(jnp.int32) if hasattr(warm, "astype") else jnp.int32(warm),
         }
+        if async_depth > 0:
+            # async-only keys (python-level branch: the depth-0 trace stays
+            # literally the vmap_spatial trace)
+            stats["staleness"] = jnp.int32(async_depth)
+            stats["applied_valid"] = applied_valid
+            stats["inflight_occupancy"] = jnp.sum(inflight["valid"])
         return new_state, stats
 
     return round_fn

@@ -20,8 +20,14 @@ Both rounds have the engine's persistent-state signature
         -> (new_state, stats)
 
 so server-optimizer moments (``fed.server_opt``), the ``max_cohort``
-overflow backlog, and the welfare utility EMAs thread through pod rounds
-exactly as through the in-silico simulator.
+overflow backlog, the welfare utility EMAs, and the ``scan_async``
+in-flight cohort buffer thread through pod rounds exactly as through the
+in-silico simulator. ``fed.async_depth = D > 0`` runs BOTH pod modes with
+overlapped cohorts: the round aggregates as usual but its delta enters the
+``FederationState.inflight`` ring buffer and the delta that aged D rounds
+is applied instead, staleness-discounted (``engine.async_apply`` — the
+same state machine as the engine's ``scan_async`` backend, so pod rounds
+and the simulator stay drift-free).
 
 The server statistic F(w_t) is computed on a server-held global batch
 (paper §3.1: "the server transmits ... also its associated loss"), so the
@@ -49,8 +55,6 @@ spatially and the temporal round refuses rather than silently diverge.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -104,19 +108,39 @@ def _gate_ctx(fed, state, util_ema, local_losses, server_loss, pm, w,
 
 
 def _next_state(fed, state, new_params, opt_state, sel_gates, eff_gates,
-                util_ema):
+                util_ema, inflight=None):
     """Advance the cross-round carry with THE engine update rules."""
     return engine.FederationState(
         params=new_params, opt_state=opt_state,
         backlog=engine.backlog_update(state.backlog, sel_gates, eff_gates),
         util_ema=util_ema,
-        incl_ema=engine.inclusion_update(fed, state.incl_ema, eff_gates))
+        incl_ema=engine.inclusion_update(fed, state.incl_ema, eff_gates),
+        inflight=state.inflight if inflight is None else inflight)
 
 
-# the aggregation + server-optimizer routing (f32 and reduced-precision
-# delta wire formats, dense [C, ...] or cohort [K, ...] stacks) is THE
-# engine implementation
-_apply_agg = engine.server_update
+def _apply_delta(fed, state, params, agg_delta):
+    """Apply an aggregated global delta the way the engine would: at the
+    round barrier when ``fed.async_depth == 0``, or D rounds late through
+    the FederationState in-flight ring buffer (``engine.async_apply``, THE
+    staleness state machine — no pod/simulator drift) when the pod round
+    runs overlapped cohorts. Returns (new_params, opt_state, inflight,
+    applied_valid | None)."""
+    if fed.async_depth > 0:
+        return engine.async_apply(fed, params, state.opt_state,
+                                  state.inflight, agg_delta)
+    new_params, opt_state = apply_server_opt(fed, params, state.opt_state,
+                                             agg_delta)
+    return new_params, opt_state, state.inflight, None
+
+
+def _async_stats(fed, stats, applied_valid, inflight):
+    """Async-only stat keys (python-level branch: synchronous pod rounds
+    keep their exact stats structure)."""
+    if fed.async_depth > 0:
+        stats["staleness"] = jnp.int32(fed.async_depth)
+        stats["applied_valid"] = applied_valid
+        stats["inflight_occupancy"] = jnp.sum(inflight["valid"])
+    return stats
 
 
 def make_spatial_round(model, fed, num_clients: int):
@@ -161,8 +185,8 @@ def make_spatial_round(model, fed, num_clients: int):
             cohort_params = jax.vmap(
                 lambda cb: _train_steps(model, params, cb, lr, E))(
                 jax.tree.map(lambda a: a[idx], client_batch))
-            new_params, opt_state = _apply_agg(fed, params, state.opt_state,
-                                               cohort_params, w[idx], cg)
+            agg_delta = engine.server_delta(fed, params, cohort_params,
+                                            w[idx], cg)
         else:
             client_params, local_losses = jax.vmap(
                 lambda cb: _local_steps(model, params, cb, lr, E))(client_batch)
@@ -186,17 +210,19 @@ def make_spatial_round(model, fed, num_clients: int):
                 _gate_ctx(fed, state, util_ema, local_losses, server_loss,
                           pm, w, delta_cos, round_idx=round_idx),
                 fed.selection)
-            new_params, opt_state = _apply_agg(fed, params, state.opt_state,
-                                               client_params, w, gates)
+            agg_delta = engine.server_delta(fed, params, client_params, w,
+                                            gates)
+        new_params, opt_state, inflight, applied = _apply_delta(
+            fed, state, params, agg_delta)
         new_state = _next_state(fed, state, new_params, opt_state,
-                                sel_gates, gates, util_ema)
-        stats = {
+                                sel_gates, gates, util_ema, inflight=inflight)
+        stats = _async_stats(fed, {
             "server_loss": server_loss,
             "local_losses": local_losses,
             "gates": gates,
             "backlog": new_state.backlog,
             "theta_round": 1.0 / (1.0 + jnp.sum((1 - pm.astype(jnp.float32)) * w * gates)),
-        }
+        }, applied, inflight)
         return new_state, stats
 
     return round_step
@@ -281,20 +307,21 @@ def make_temporal_round(model, fed, cohort: int):
             (batch["clients"], w, gates))
         # streamed aggregation accumulates f32 in the carry; the aggregated
         # DELTA then feeds the same ServerOptimizer step as the fused path
+        # (or the in-flight buffer, when the round runs overlapped cohorts)
         agg_delta = jax.tree.map(
             lambda n, p: n / jnp.maximum(den, 1e-30) - p.astype(jnp.float32),
             num, params)
-        new_params, opt_state = apply_server_opt(fed, params, state.opt_state,
-                                                 agg_delta)
+        new_params, opt_state, inflight, applied = _apply_delta(
+            fed, state, params, agg_delta)
         new_state = _next_state(fed, state, new_params, opt_state,
-                                gates, gates, util_ema)
-        stats = {
+                                gates, gates, util_ema, inflight=inflight)
+        stats = _async_stats(fed, {
             "server_loss": server_loss,
             "local_losses": local_losses,
             "gates": gates,
             "backlog": new_state.backlog,
             "theta_round": 1.0 / (1.0 + jnp.sum((1 - pm.astype(jnp.float32)) * w * gates)),
-        }
+        }, applied, inflight)
         return new_state, stats
 
     return round_step

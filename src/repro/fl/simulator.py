@@ -14,7 +14,10 @@ Runs are resumable: ``save_federation_state``/``load_federation_state``
 checkpoint the full (state, rng) pair via ``checkpoint/io.py``, and
 ``run_federation(state=..., rng=..., start_round=...)`` continues a run
 bit-identically — the PRNG stream is split once per round inside the scan
-body, so chunking and resume points never perturb it.
+body, so chunking and resume points never perturb it. This covers the
+``scan_async`` backend's in-flight cohort buffer too: staggered cohorts
+are just more FederationState, so async pipelines checkpoint, resume, and
+chunk mid-flight with no extra machinery.
 """
 from __future__ import annotations
 
@@ -89,14 +92,24 @@ def load_federation_state(path: str, like_state):
 def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
                    *, eval_every: int = 1, verbose: bool = False,
                    state=None, rng=None, start_round: int = 0,
-                   checkpoint_path: Optional[str] = None) -> History:
+                   checkpoint_path: Optional[str] = None,
+                   drain_inflight: bool = False) -> History:
     """Run FedALIGN communication rounds ``start_round .. fed.rounds - 1``.
 
     ``init_params`` seeds a fresh FederationState; pass ``state``/``rng``
     (from ``load_federation_state``) plus ``start_round`` to resume a
     checkpointed run bit-identically instead. ``checkpoint_path`` writes
     the full (state, rng) carry at every chunk boundary (the host sync
-    points), so a killed run loses at most ``eval_every`` rounds."""
+    points), so a killed run loses at most ``eval_every`` rounds.
+
+    ``backend="scan_async"`` runs (``fed.async_depth`` staggered cohorts)
+    need no special handling here: the in-flight delta buffer is ordinary
+    FederationState, so it rides the donated scan carry and the chunk-
+    boundary checkpoints like the optimizer moments do — a mid-flight
+    resume restores the pipeline bit-identically. ``drain_inflight=True``
+    additionally flushes still-in-flight cohort deltas into the params
+    after the final round (``engine.drain_inflight``); the default leaves
+    them in ``hist.state.inflight``, exactly as a checkpoint would."""
     round_fn = make_round_fn(loss_fn, fed)
     data = {"x": jnp.asarray(federation.x), "y": jnp.asarray(federation.y)}
     pm = jnp.asarray(federation.priority_mask)
@@ -153,6 +166,9 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
         if checkpoint_path is not None:
             save_federation_state(checkpoint_path, state, rng, b + 1)
         start = b + 1
+    if drain_inflight:
+        from repro.fl import engine
+        state = engine.drain_inflight(fed, state)
     hist.params = state.params
     hist.state = state
     hist.rng = rng

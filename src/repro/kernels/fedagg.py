@@ -13,12 +13,10 @@ block_m is sized for DMA efficiency (multiples of 512 lanes).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(u_ref, w_ref, g_ref, o_ref):

@@ -9,7 +9,6 @@ kernels only run in ``interpret=True`` mode (tests do this explicitly).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -318,8 +318,17 @@ def main():
     ap.add_argument("--shape", default="all")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--variant", default="baseline", choices=["baseline", "opt"])
+    ap.add_argument("--async-depth", type=int, default=0,
+                    help="lower the train rounds with scan_async overlapped "
+                         "cohorts: the in-flight delta buffer (async_depth "
+                         "stacked param-shaped deltas) joins the lowered "
+                         "FederationState")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
+
+    fed = DRYRUN_FED
+    if args.async_depth > 0:
+        fed = fed.replace(async_depth=args.async_depth, backend="scan_async")
 
     archs = ARCH_IDS if args.arch == "all" else [ALIASES.get(args.arch, args.arch)]
     shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
@@ -331,6 +340,8 @@ def main():
             tag = f"{cfg_name}__{s}__{'multi' if args.multi_pod else 'single'}"
             if args.variant != "baseline":
                 tag += f"__{args.variant}"
+            if args.async_depth > 0:
+                tag += f"__async{args.async_depth}"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
                 print(f"[skip-existing] {tag}")
@@ -338,7 +349,7 @@ def main():
             print(f"[dryrun] {tag} ...", flush=True)
             try:
                 out = run_one(cfg_name, s, multi_pod=args.multi_pod,
-                              variant=args.variant)
+                              variant=args.variant, fed=fed)
                 if isinstance(out, tuple):
                     rec, hlo_text = out
                     import gzip

@@ -15,15 +15,12 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, get_smoke
 from repro.configs.base import FedConfig
 from repro.data.tokens import make_token_federation
 from repro.fl import engine, sharded
-from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
-from repro.sharding.specs import auto_param_specs
 from repro.utils import param_count
 
 
@@ -52,12 +49,16 @@ def build_batches(cfg, fed_data, *, clients, per_client, seq, rng):
 
 def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
         per_client=4, seq=128, lr=0.05, epsilon=0.5, local_epochs=2,
-        misalign_max=1.0, log_every=1, seed=0, verbose=True):
+        misalign_max=1.0, log_every=1, seed=0, verbose=True, **fed_kw):
+    """``fed_kw`` passes any further FedConfig knob straight through —
+    e.g. ``async_depth=2, staleness_decay=0.5, backend="scan_async"`` to
+    drive the pod rounds with overlapped cohorts, or ``server_opt``."""
     cfg = get_smoke(arch) if smoke else get_config(arch)
     assert not cfg.encdec, "use examples/whisper for enc-dec training"
     model = get_model(cfg)
     fed = FedConfig(num_clients=clients, num_priority=n_priority,
-                    local_epochs=local_epochs, epsilon=epsilon, lr=lr)
+                    local_epochs=local_epochs, epsilon=epsilon, lr=lr,
+                    **fed_kw)
     fed_data = make_token_federation(seed=seed, vocab=cfg.vocab_size,
                                      n_clients=clients, n_priority=n_priority,
                                      seq_len=seq, misalign_max=misalign_max,

@@ -7,8 +7,6 @@ the Pallas version in on TPU).
 """
 from __future__ import annotations
 
-import math
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

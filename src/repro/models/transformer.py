@@ -16,8 +16,7 @@ API (all functional):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+from repro.models.layers import dense_init
 from repro.utils import fold_in_name
 
 NEG_INF = -1e30

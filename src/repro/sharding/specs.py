@@ -12,10 +12,8 @@ performance knobs (see EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # name -> preferred dim (negative = from the end) for the MODEL axis
@@ -201,7 +199,11 @@ def federation_state_specs(fed, param_specs):
     Server-optimizer moments are params-shaped and inherit the matching
     param's spec (FSDP'd moments for FSDP'd params); the [C] client-state
     vectors (backlog, utility EMAs) and scalar step counters replicate —
-    they are a few bytes and every pod reads them in the gate."""
+    they are a few bytes and every pod reads them in the gate. The
+    ``scan_async`` in-flight buffer (``fed.async_depth`` stacked aggregated
+    deltas) is params-shaped behind its leading ring-buffer axis, so every
+    delta slot shards exactly like the param it will eventually update —
+    the buffer adds D x params of sharded bytes, never a replicated copy."""
     from repro.core.aggregation import resolve_server_opt
     from repro.fl.engine import FederationState
 
@@ -214,5 +216,15 @@ def federation_state_specs(fed, param_specs):
         opt_specs = {"m": param_specs}
     else:                                   # adam / yogi: m, v, step counter
         opt_specs = {"m": param_specs, "v": param_specs, "t": rep}
+    if fed.async_depth > 0:
+        inflight_specs = {
+            "delta": jax.tree.map(
+                lambda sp: P(*([None] + list(sp))), param_specs,
+                is_leaf=lambda x: isinstance(x, P)),
+            "valid": rep,
+        }
+    else:
+        inflight_specs = ()
     return FederationState(params=param_specs, opt_state=opt_specs,
-                           backlog=rep, util_ema=rep, incl_ema=rep)
+                           backlog=rep, util_ema=rep, incl_ema=rep,
+                           inflight=inflight_specs)

@@ -2,7 +2,8 @@
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+import zlib
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -54,8 +55,13 @@ def param_bytes(tree: Pytree) -> int:
 
 
 def fold_in_name(key: jax.Array, name: str) -> jax.Array:
-    """Derive a named sub-key deterministically from a string."""
-    h = np.uint32(abs(hash(name)) % (2**31 - 1))
+    """Derive a named sub-key deterministically from a string.
+
+    Uses crc32, NOT python's builtin ``hash`` — str hashing is salted per
+    process (PYTHONHASHSEED), so builtin-hash-derived keys silently gave
+    every process a different "seeded" model init: benchmark loss curves
+    and paper runs were unreproducible across invocations."""
+    h = np.uint32(zlib.crc32(name.encode()) % (2**31 - 1))
     return jax.random.fold_in(key, h)
 
 

@@ -1,0 +1,341 @@
+"""scan_async overlapped-cohort backend: staleness semantics.
+
+Pins (1) async_depth=0 parity — BIT-identical to vmap_spatial and equal to
+scan_temporal within backend tolerance, for every registered strategy;
+(2) the pipeline state machine — params frozen while the pipe warms up,
+deltas applied exactly async_depth rounds late, staleness discount scaling;
+(3) checkpoint/resume mid-flight with the in-flight cohort restored
+bit-identically; (4) participation/straggler masks under staggered
+cohorts; (5) the sharded pod rounds and the partition-spec layout of the
+in-flight buffer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.data.synth import make_synth_federation
+from repro.fl import engine
+from repro.fl.simulator import (load_federation_state, run_federation,
+                                save_federation_state)
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+INIT, APPLY = SMALL_MODELS["synth_logreg"]
+LOSS = make_loss_fn(APPLY)
+FEDN = make_synth_federation(seed=7, n_priority=3, n_nonpriority=5,
+                             samples_per_client=64)
+DATA = {"x": jnp.asarray(FEDN.x), "y": jnp.asarray(FEDN.y)}
+PM = jnp.asarray(FEDN.priority_mask)
+W = jnp.asarray(FEDN.weights)
+C = int(PM.shape[0])
+PARAMS = INIT(jax.random.PRNGKey(0))
+
+STRATEGIES = sorted(engine.STRATEGIES)
+
+
+def _base(**kw):
+    d = dict(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
+             epsilon=0.5, warmup_frac=0.0, align_stat="loss", topk=2,
+             welfare_floor=0.05)
+    d.update(kw)
+    return FedConfig(**d)
+
+
+def _run(fed, backend, r=2, seed=1, state=None, rounds=1):
+    fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
+    if state is None:
+        state = engine.init_state(PARAMS, fed, C)
+    for i in range(rounds):
+        state, stats = fn(state, DATA, PM, W, jax.random.PRNGKey(seed + i),
+                          jnp.int32(r + i))
+    return state, stats
+
+
+# ================================================= depth-0 parity (sync)
+@pytest.mark.parametrize("selection", STRATEGIES)
+def test_depth0_bit_identical_to_vmap_spatial(selection):
+    """The acceptance pin: scan_async at async_depth=0 IS the synchronous
+    spatial round — bit-identical state and gates, every strategy."""
+    fed = _base(selection=selection)
+    (ss, ts) = _run(fed, "vmap_spatial")
+    (sa, ta) = _run(fed, "scan_async")
+    np.testing.assert_array_equal(np.asarray(ts["gates"]),
+                                  np.asarray(ta["gates"]))
+    for a, b in zip(jax.tree.leaves(ss), jax.tree.leaves(sa)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("selection", STRATEGIES)
+def test_depth0_matches_scan_temporal(selection):
+    """...and agrees with the other synchronous backend to the usual
+    backend-equivalence tolerance."""
+    fed = _base(selection=selection)
+    (st_, tt) = _run(fed, "scan_temporal")
+    (sa, ta) = _run(fed, "scan_async")
+    np.testing.assert_array_equal(np.asarray(tt["gates"]),
+                                  np.asarray(ta["gates"]))
+    for a, b in zip(jax.tree.leaves(st_), jax.tree.leaves(sa)):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=1e-6)
+
+
+def test_depth0_parity_with_cohort_gather():
+    """max_cohort and async compose: the depth-0 gathered round still
+    equals the synchronous gathered round bitwise."""
+    (ss, ts) = _run(_base(max_cohort=5), "vmap_spatial")
+    (sa, ta) = _run(_base(max_cohort=5), "scan_async")
+    np.testing.assert_array_equal(np.asarray(ts["gates"]),
+                                  np.asarray(ta["gates"]))
+    for a, b in zip(jax.tree.leaves(ss), jax.tree.leaves(sa)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_depth_requires_async_backend():
+    """Synchronous backends refuse a config asking for a pipeline they
+    would silently ignore."""
+    with pytest.raises(ValueError, match="scan_async"):
+        engine.make_round_fn(LOSS, _base(async_depth=2), backend="vmap_spatial")
+    with pytest.raises(ValueError, match="scan_async"):
+        engine.make_round_fn(LOSS, _base(async_depth=1,
+                                         backend="scan_temporal"))
+
+
+# ================================================= in-flight buffer layout
+def test_inflight_layout_follows_config():
+    st0 = engine.init_state(PARAMS, _base(), C)
+    assert st0.inflight == ()
+    fed = _base(async_depth=3, agg_dtype="bfloat16", backend="scan_async")
+    st = engine.init_state(PARAMS, fed, C)
+    assert set(st.inflight) == {"delta", "valid"}
+    assert st.inflight["valid"].shape == (3,)
+    for p, d in zip(jax.tree.leaves(PARAMS),
+                    jax.tree.leaves(st.inflight["delta"])):
+        assert d.shape == (3,) + p.shape
+        assert d.dtype == jnp.bfloat16          # the delta wire dtype
+    # registered pytree: the buffer rides flatten/unflatten like any leaf
+    leaves, treedef = jax.tree.flatten(st)
+    assert isinstance(jax.tree.unflatten(treedef, leaves),
+                      engine.FederationState)
+
+
+# ================================================= pipeline semantics
+def test_pipeline_applies_deltas_depth_rounds_late():
+    """Rounds 0..D-1 leave params (and optimizer moments) untouched; the
+    first cohort's delta lands exactly at round D."""
+    D = 2
+    fed = _base(backend="scan_async", async_depth=D, server_opt="adam",
+                epsilon=1e9)
+    fn = jax.jit(engine.make_round_fn(LOSS, fed))
+    state = engine.init_state(PARAMS, fed, C)
+    for r in range(D + 1):
+        state, stats = fn(state, DATA, PM, W, jax.random.PRNGKey(r),
+                          jnp.int32(r))
+        frozen = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(state.params),
+                            jax.tree.leaves(PARAMS)))
+        assert frozen == (r < D), f"round {r}"
+        assert float(stats["applied_valid"]) == (0.0 if r < D else 1.0)
+        assert int(stats["staleness"]) == D
+        assert float(stats["inflight_occupancy"]) == min(r + 1, D)
+        # warm-up rounds must not tick the adam step counter either
+        assert int(state.opt_state["t"]) == max(0, r - D + 1)
+
+
+def test_staleness_discount_scales_applied_delta():
+    """depth=1, decay=0.5, sgd server: the delta applied at round t+1 is
+    exactly half the delta the synchronous round would have applied."""
+    fed_sync = _base(epsilon=1e9)
+    sync_params = _run(fed_sync, "vmap_spatial", r=0, seed=1)[0].params
+    d0 = jax.tree.map(lambda a, b: np.asarray(a) - np.asarray(b),
+                      sync_params, PARAMS)
+
+    fed = _base(backend="scan_async", async_depth=1, staleness_decay=0.5,
+                epsilon=1e9)
+    fn = jax.jit(engine.make_round_fn(LOSS, fed))
+    state = engine.init_state(PARAMS, fed, C)
+    # round 0 buffers d0 (same PRNG key and round index as the sync round);
+    # round 1 applies 0.5 * d0
+    state, _ = fn(state, DATA, PM, W, jax.random.PRNGKey(1), jnp.int32(0))
+    state, _ = fn(state, DATA, PM, W, jax.random.PRNGKey(99), jnp.int32(1))
+    for p, p0, d in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(PARAMS), jax.tree.leaves(d0)):
+        np.testing.assert_allclose(np.asarray(p), np.asarray(p0) + 0.5 * d,
+                                   atol=1e-6)
+
+
+def test_drain_inflight_flushes_stragglers():
+    """depth=1, decay=1: one round + drain equals the synchronous round
+    bit-identically (the drained delta takes the same apply path)."""
+    fed = _base(epsilon=1e9)
+    sync = run_federation(LOSS, PARAMS, fed.replace(rounds=1), FEDN,
+                          eval_every=1)
+    asy = run_federation(
+        LOSS, PARAMS,
+        fed.replace(rounds=1, backend="scan_async", async_depth=1), FEDN,
+        eval_every=1, drain_inflight=True)
+    for a, b in zip(jax.tree.leaves(sync.state.params),
+                    jax.tree.leaves(asy.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the drained buffer is empty
+    assert float(jnp.sum(asy.state.inflight["valid"])) == 0.0
+
+
+def test_drain_is_noop_for_sync_state():
+    st = engine.init_state(PARAMS, _base(), C)
+    assert engine.drain_inflight(_base(), st) is st
+
+
+# ================================================= masks under staggering
+def test_depth0_parity_under_participation_and_stragglers():
+    """Partial participation + straggler cadence: the depth-0 async round
+    still reproduces the synchronous round bitwise, seed by seed."""
+    fed = _base(epsilon=1e9, participation=0.6, straggler_period=3,
+                max_cohort=5)
+    for seed in range(3):
+        (ss, ts) = _run(fed, "vmap_spatial", r=seed, seed=seed)
+        (sa, ta) = _run(fed, "scan_async", r=seed, seed=seed)
+        np.testing.assert_array_equal(np.asarray(ts["gates"]),
+                                      np.asarray(ta["gates"]))
+        for a, b in zip(jax.tree.leaves(ss), jax.tree.leaves(sa)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_staggered_cohorts_respect_masks_and_backlog():
+    """With a live pipeline (D=2), gates stay truthful: binary, priority
+    honoured under participation sampling, cohort budget enforced, and the
+    backlog ledger advances exactly as the gates dictate."""
+    fed = _base(backend="scan_async", async_depth=2, epsilon=1e9,
+                participation=0.6, straggler_period=3, max_cohort=4)
+    fn = jax.jit(engine.make_round_fn(LOSS, fed))
+    state = engine.init_state(PARAMS, fed, C)
+    pm = np.asarray(PM).astype(bool)
+    for r in range(5):
+        prev_backlog = np.asarray(state.backlog)
+        state, stats = fn(state, DATA, PM, W, jax.random.PRNGKey(r),
+                          jnp.int32(r))
+        gates = np.asarray(stats["gates"])
+        assert set(np.unique(gates)) <= {0.0, 1.0}
+        assert gates.sum() <= fed.max_cohort
+        assert gates[pm].sum() >= 1.0            # priority never starves out
+        bl = np.asarray(state.backlog)
+        assert np.all(bl[gates > 0] == 0)        # aggregated clients reset
+        assert np.all(bl >= 0) and np.all(bl <= prev_backlog + 1)
+
+
+# ================================================= checkpoint / resume
+def test_async_checkpoint_resume_mid_flight(tmp_path):
+    """Interrupt an async run with cohorts still in flight; the resumed run
+    must be bit-identical to the uninterrupted one — in-flight deltas,
+    their validity mask, params, moments, PRNG stream, stats."""
+    path = str(tmp_path / "async.msgpack")
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=8, local_epochs=2,
+                    epsilon=0.3, lr=0.1, warmup_frac=0.0, batch_size=32,
+                    align_stat="loss", server_opt="yogi", server_lr=0.3,
+                    max_cohort=5, backend="scan_async", async_depth=2,
+                    staleness_decay=0.9)
+    full = run_federation(LOSS, PARAMS, fed, FEDN, eval_every=4)
+
+    half = run_federation(LOSS, PARAMS, fed.replace(rounds=5), FEDN,
+                          eval_every=4)
+    # the interrupted state really is mid-flight: both slots occupied
+    assert float(jnp.sum(half.state.inflight["valid"])) == 2.0
+    save_federation_state(path, half.state, half.rng, 5)
+    like = engine.init_state(PARAMS, fed, C)
+    state, rng, step = load_federation_state(path, like)
+    assert step == 5
+    # the in-flight cohort buffer survived the round-trip bit-identically
+    for a, b in zip(jax.tree.leaves(half.state.inflight),
+                    jax.tree.leaves(state.inflight)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    resumed = run_federation(LOSS, None, fed, FEDN, eval_every=4,
+                             state=state, rng=rng, start_round=step)
+    for a, b in zip(jax.tree.leaves(full.state),
+                    jax.tree.leaves(resumed.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(full.global_loss[5:]),
+                                  np.asarray(resumed.global_loss))
+
+
+def test_checkpoint_layout_mismatch_raises_helpfully(tmp_path):
+    """Restoring an async checkpoint with the wrong async_depth (different
+    in-flight layout) fails with an actionable error, not a bare assert."""
+    path = str(tmp_path / "st.msgpack")
+    fed = _base(backend="scan_async", async_depth=2)
+    st = engine.init_state(PARAMS, fed, C)
+    save_federation_state(path, st, jax.random.PRNGKey(0), 3)
+    with pytest.raises(ValueError, match="async_depth"):
+        load_federation_state(
+            path, engine.init_state(PARAMS, _base(backend="scan_async",
+                                                  async_depth=3), C))
+    with pytest.raises(ValueError, match="async_depth"):
+        load_federation_state(path, engine.init_state(PARAMS, _base(), C))
+
+
+# ================================================= sharded pod rounds
+def test_sharded_async_rounds_pipeline():
+    """Both pod modes run the same staleness state machine: params frozen
+    while the pipe warms up, moving once the first cohort lands, and the
+    depth-0 spatial round stays bit-identical to the sync spatial round."""
+    from repro.configs import get_smoke
+    from repro.fl import sharded
+    from repro.models import get_model
+    from tests.test_sharded import _batch
+
+    cfg = get_smoke("qwen1_5_0_5b").replace(remat=False)
+    model = get_model(cfg)
+    batch = _batch()
+    p0 = model.init(jax.random.PRNGKey(0))
+    sync_fed = FedConfig(local_epochs=1, epsilon=1e9, lr=0.05)
+    async_fed = sync_fed.replace(async_depth=1, staleness_decay=1.0,
+                                 backend="scan_async")
+
+    s_sync, _ = jax.jit(sharded.make_spatial_round(model, sync_fed, 4))(
+        engine.init_state(p0, sync_fed, 4), batch)
+
+    for mk in (sharded.make_spatial_round, sharded.make_temporal_round):
+        step = jax.jit(mk(model, async_fed, 4))
+        st = engine.init_state(p0, async_fed, 4)
+        st, t0 = step(st, batch, 0)
+        for a, b in zip(jax.tree.leaves(st.params), jax.tree.leaves(p0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert float(t0["applied_valid"]) == 0.0
+        st, t1 = step(st, batch, 1)
+        assert float(t1["applied_valid"]) == 1.0
+        changed = any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(st.params), jax.tree.leaves(p0)))
+        assert changed
+        if mk is sharded.make_spatial_round:
+            # round 0 buffered exactly the sync round's delta (decay 1, so
+            # round 1 applied it unscaled): params == one sync round
+            for a, b in zip(jax.tree.leaves(st.params),
+                            jax.tree.leaves(s_sync.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-6)
+
+
+def test_federation_state_specs_cover_inflight():
+    """The pjit lowering seam: spec tree structure matches the async state
+    structure, and every delta slot inherits its param's layout behind the
+    leading ring-buffer axis."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.sharding.specs import auto_param_specs, federation_state_specs
+
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    pspecs = auto_param_specs(jax.eval_shape(lambda: params), mesh)
+    fed = FedConfig(server_opt="yogi", async_depth=2, backend="scan_async")
+    shapes = jax.eval_shape(lambda: engine.init_state(params, fed, C))
+    specs = federation_state_specs(fed, pspecs)
+    is_p = lambda x: isinstance(x, P)
+    assert (jax.tree.structure(shapes)
+            == jax.tree.structure(specs, is_leaf=is_p))
+    for psp, dsp in zip(jax.tree.leaves(pspecs, is_leaf=is_p),
+                        jax.tree.leaves(specs.inflight["delta"],
+                                        is_leaf=is_p)):
+        assert tuple(dsp) == (None,) + tuple(psp)
+    # sync configs keep the old layout
+    assert federation_state_specs(FedConfig(), pspecs).inflight == ()

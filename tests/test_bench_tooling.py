@@ -1,5 +1,10 @@
-"""Benchmark entrypoint tooling: a raising suite must fail the run with a
-nonzero exit instead of being silently swallowed."""
+"""Benchmark entrypoint tooling: a raising (or silently empty) suite must
+fail the run with a nonzero exit instead of being swallowed, and the
+scripts/check_bench.py CI gate must catch rounds/sec regressions while
+letting new rows through."""
+import importlib.util
+import json
+import os
 import sys
 import types
 
@@ -41,3 +46,160 @@ def test_bench_runner_exits_zero_when_clean(monkeypatch, tmp_path):
     monkeypatch.setattr(sys, "argv", ["run.py"])
     monkeypatch.chdir(tmp_path)
     assert br.main() is None
+
+
+def test_bench_runner_exits_nonzero_on_empty_output(monkeypatch, tmp_path,
+                                                    capsys):
+    """A suite that returns NO rows produces an empty output artifact —
+    that must fail the run just like a raising suite does."""
+    import benchmarks.run as br
+
+    _fake_suite("benchmarks._empty", lambda fast=True: [])
+    monkeypatch.setattr(br, "SUITES", [("empty", "benchmarks._empty")])
+    monkeypatch.setattr(sys, "argv", ["run.py"])
+    monkeypatch.chdir(tmp_path)
+    with pytest.raises(SystemExit) as exc:
+        br.main()
+    assert exc.value.code == 1
+    assert "EmptyOutput" in capsys.readouterr().out
+
+
+def test_bench_runner_resolves_module_attr_suites(monkeypatch, tmp_path,
+                                                  capsys):
+    """SUITES entries may name a non-default entry point as module:attr —
+    how bench_round.py --quick is registered (round_pipeline_quick)."""
+    import benchmarks.run as br
+
+    mod = types.ModuleType("benchmarks._multi")
+    mod.run = lambda fast=True: (_ for _ in ()).throw(AssertionError("wrong fn"))
+    mod.run_quick = lambda fast=True: [{"ok": 1}]
+    sys.modules["benchmarks._multi"] = mod
+    monkeypatch.setattr(br, "SUITES",
+                        [("multi_quick", "benchmarks._multi:run_quick")])
+    monkeypatch.setattr(sys, "argv", ["run.py"])
+    monkeypatch.chdir(tmp_path)
+    assert br.main() is None
+    assert "multi_quick," in capsys.readouterr().out
+
+
+def test_bench_runner_skips_opt_in_suites_unless_only(monkeypatch, tmp_path,
+                                                      capsys):
+    """Opt-in suites (local smoke entry points) run only under --only."""
+    import benchmarks.run as br
+
+    _fake_suite("benchmarks._optin", lambda fast=True: [{"ok": 1}])
+    monkeypatch.setattr(br, "SUITES", [("smoke_only", "benchmarks._optin")])
+    monkeypatch.setattr(br, "OPT_IN_SUITES", {"smoke_only"})
+    monkeypatch.setattr(sys, "argv", ["run.py"])
+    monkeypatch.chdir(tmp_path)
+    assert br.main() is None
+    assert "smoke_only," not in capsys.readouterr().out
+    # a SUBSTRING --only must not drag the opt-in suite in...
+    monkeypatch.setattr(sys, "argv", ["run.py", "--only", "smoke"])
+    assert br.main() is None
+    assert "smoke_only," not in capsys.readouterr().out
+    # ...only its exact name does
+    monkeypatch.setattr(sys, "argv", ["run.py", "--only", "smoke_only"])
+    assert br.main() is None
+    assert "smoke_only," in capsys.readouterr().out
+
+
+# ===================================================== check_bench CI gate
+def _check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", os.path.join(os.path.dirname(__file__), "..",
+                                    "scripts", "check_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+CB = _check_bench()
+
+
+def _rows(*rps):
+    return [{"path": f"p{i}", "clients": 64, "rounds_per_sec": r}
+            for i, r in enumerate(rps)]
+
+
+def _gate(tmp_path, baseline, fresh, *extra):
+    b, f = tmp_path / "base.json", tmp_path / "fresh.json"
+    b.write_text(json.dumps(baseline))
+    f.write_text(json.dumps(fresh))
+    return CB.main([str(b), str(f), *extra])
+
+
+def test_check_bench_green_on_identical(tmp_path):
+    assert _gate(tmp_path, _rows(4.0, 8.0), _rows(4.0, 8.0)) == 0
+
+
+def test_check_bench_tolerates_small_regression(tmp_path):
+    # 10% down is inside the default 15% tolerance
+    assert _gate(tmp_path, _rows(4.0), _rows(3.6)) == 0
+
+
+def test_check_bench_fails_on_large_regression(tmp_path):
+    # 20% down on one row fails the gate even when the other row improved
+    assert _gate(tmp_path, _rows(4.0, 8.0), _rows(3.2, 9.0)) == 1
+    # custom tolerance rescues it
+    assert _gate(tmp_path, _rows(4.0, 8.0), _rows(3.2, 9.0),
+                 "--tolerance", "0.3") == 0
+
+
+def test_check_bench_normalizes_common_mode_slowdown(tmp_path):
+    """A uniformly slower box (different CI hardware than the machine that
+    committed the baseline) must stay green: with >= 3 rows the gate judges
+    each row against the median ratio."""
+    assert _gate(tmp_path, _rows(4.0, 8.0, 2.0, 6.0),
+                 _rows(2.0, 4.0, 1.0, 3.0)) == 0
+    # ...but --absolute restores raw gating for same-machine use
+    assert _gate(tmp_path, _rows(4.0, 8.0, 2.0, 6.0),
+                 _rows(2.0, 4.0, 1.0, 3.0), "--absolute") == 1
+
+
+def test_check_bench_catches_row_falling_behind_the_fleet(tmp_path):
+    """One row 40% down while its peers hold: fails even though a uniform
+    factor would have excused it."""
+    assert _gate(tmp_path, _rows(4.0, 8.0, 2.0, 6.0),
+                 _rows(4.0, 8.0, 2.0, 3.6)) == 1
+
+
+def test_check_bench_uniform_speedup_not_penalized(tmp_path):
+    """Normalization caps at 1.0: rows that merely stayed flat while others
+    sped up are NOT failed."""
+    assert _gate(tmp_path, _rows(4.0, 8.0, 2.0, 6.0),
+                 _rows(6.0, 12.0, 3.0, 6.0)) == 0
+
+
+def test_check_bench_allows_new_rows(tmp_path):
+    fresh = _rows(4.0) + [{"path": "brand_new", "rounds_per_sec": 0.1}]
+    assert _gate(tmp_path, _rows(4.0), fresh) == 0
+
+
+def test_check_bench_fails_on_vanished_rows(tmp_path):
+    assert _gate(tmp_path, _rows(4.0, 8.0), _rows(4.0)) == 1
+
+
+def test_check_bench_ignores_metricless_rows(tmp_path):
+    base = _rows(4.0) + [{"path": "convergence", "rounds_to_target": 7}]
+    fresh = _rows(4.0) + [{"path": "convergence", "rounds_to_target": 12}]
+    assert _gate(tmp_path, base, fresh) == 0
+
+
+def test_check_bench_matches_rows_by_key_not_position(tmp_path):
+    base = [{"path": "a", "max_cohort": 16, "rounds_per_sec": 4.0},
+            {"path": "a", "max_cohort": 32, "rounds_per_sec": 2.0}]
+    fresh = list(reversed(json.loads(json.dumps(base))))
+    assert _gate(tmp_path, base, fresh) == 0
+
+
+def test_check_bench_rejects_unreadable_input(tmp_path):
+    b = tmp_path / "base.json"
+    b.write_text("[]")
+    f = tmp_path / "fresh.json"
+    f.write_text(json.dumps(_rows(1.0)))
+    with pytest.raises(SystemExit) as exc:
+        CB.load_rows(str(b))
+    assert exc.value.code == 2
+    with pytest.raises(SystemExit):
+        CB.main([str(tmp_path / "missing.json"), str(f)])

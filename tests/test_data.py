@@ -1,6 +1,5 @@
 """Data-pipeline invariants: SYNTH generator, uniclass shards, token streams."""
 import numpy as np
-import pytest
 
 from repro.data.shards import make_benchmark_federation
 from repro.data.synth import _noise_level, make_synth_federation

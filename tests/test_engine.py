@@ -96,7 +96,9 @@ def test_flatten_stacked_shape_and_order():
 
 
 # ===================================================== backend equivalence
-def _round_pair(fed, seed=0, r=1):
+def _round_per_backend(fed, seed=0, r=1):
+    """One round per registered backend (scan_async runs at depth 0, i.e.
+    its synchronous degenerate), all from the same state."""
     state = engine.init_state(INIT(jax.random.PRNGKey(0)), fed, C)
     outs = []
     for backend in engine.BACKENDS:
@@ -112,14 +114,16 @@ def test_backends_identical_per_strategy(selection):
                     epsilon=0.5, warmup_frac=0.0, align_stat="loss",
                     selection=selection, topk=2, sim_threshold=0.0,
                     welfare_floor=0.05)
-    (pv, sv), (pt, st) = _round_pair(fed)
-    np.testing.assert_array_equal(np.asarray(sv["gates"]),
-                                  np.asarray(st["gates"]))
-    np.testing.assert_allclose(np.asarray(sv["local_losses"]),
-                               np.asarray(st["local_losses"]), atol=1e-6)
-    # the full carried state (params, moments, backlog, EMAs) must agree
-    for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pt)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    (pv, sv), *others = _round_per_backend(fed)
+    for pt, st in others:
+        np.testing.assert_array_equal(np.asarray(sv["gates"]),
+                                      np.asarray(st["gates"]))
+        np.testing.assert_allclose(np.asarray(sv["local_losses"]),
+                                   np.asarray(st["local_losses"]), atol=1e-6)
+        # the full carried state (params, moments, backlog, EMAs) must agree
+        for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pt)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
 
 
 def test_backends_identical_under_participation_and_stragglers():
@@ -127,11 +131,13 @@ def test_backends_identical_under_participation_and_stragglers():
                     epsilon=1e9, warmup_frac=0.0, align_stat="loss",
                     participation=0.6, straggler_period=3)
     for seed in range(3):
-        (pv, sv), (pt, st) = _round_pair(fed, seed=seed, r=seed)
-        np.testing.assert_array_equal(np.asarray(sv["gates"]),
-                                      np.asarray(st["gates"]))
-        for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pt)):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+        (pv, sv), *others = _round_per_backend(fed, seed=seed, r=seed)
+        for pt, st in others:
+            np.testing.assert_array_equal(np.asarray(sv["gates"]),
+                                          np.asarray(st["gates"]))
+            for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pt)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-6)
 
 
 def test_unknown_backend_and_strategy_raise():

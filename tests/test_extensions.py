@@ -63,10 +63,8 @@ def test_server_momentum_changes_trajectory_and_trains():
 def test_bf16_delta_aggregation_close_to_f32():
     """agg_dtype=bfloat16 quantizes client deltas on the wire; the result
     must stay close to exact f32 aggregation after one round."""
-    from repro.configs import get_smoke
     from repro.fl import engine, sharded
-    from repro.models import get_model
-    from tests.test_sharded import _batch, CFG, MODEL
+    from tests.test_sharded import _batch, MODEL
 
     fed32 = FedConfig(local_epochs=2, epsilon=1e9, lr=0.05)
     fed16 = fed32.replace(agg_dtype="bfloat16")

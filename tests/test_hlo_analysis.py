@@ -2,7 +2,6 @@
 compiled programs (the roofline's correctness depends on it)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_text

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.optim import adam, adamw, sgd
-from repro.optim.schedules import (constant_schedule, cosine_schedule,
+from repro.optim.schedules import (cosine_schedule,
                                    paper_decay_schedule)
 
 

@@ -3,7 +3,6 @@ partial participation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import FedConfig
 from repro.core.round import init_state, make_round_fn

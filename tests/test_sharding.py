@@ -9,8 +9,7 @@ from repro.configs import ARCH_IDS, get_config, get_smoke
 from repro.configs.base import FedConfig
 from repro.models import get_model
 from repro.sharding.specs import (auto_batch_specs, auto_param_specs,
-                                  auto_tree_specs, dp_axes,
-                                  federation_state_specs)
+                                  auto_tree_specs, federation_state_specs)
 
 MESH = AbstractMesh((("data", 16), ("model", 16)))
 MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))

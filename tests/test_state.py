@@ -238,11 +238,13 @@ def test_engine_grad_sim_sketch_backends_identical():
     for backend in engine.BACKENDS:
         fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
         outs.append(fn(state, DATA, PM, W, jax.random.PRNGKey(0), jnp.int32(1)))
-    (sv, tv), (st_, tt) = outs
-    np.testing.assert_array_equal(np.asarray(tv["gates"]),
-                                  np.asarray(tt["gates"]))
-    for a, b in zip(jax.tree.leaves(sv), jax.tree.leaves(st_)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    (sv, tv), *others = outs
+    for st_, tt in others:
+        np.testing.assert_array_equal(np.asarray(tv["gates"]),
+                                      np.asarray(tt["gates"]))
+        for a, b in zip(jax.tree.leaves(sv), jax.tree.leaves(st_)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
 
 
 def test_sketched_cosines_close_to_exact():

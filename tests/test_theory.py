@@ -1,10 +1,8 @@
 """Theorem-1 validation on the exactly-solvable quadratic PFL testbed."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.theory import (QuadraticPFL, empirical_theta_rho,
+from repro.core.theory import (empirical_theta_rho,
                                make_quadratic_pfl, run_fedalign_gd,
                                theorem1_bound, theorem1_constants)
 
