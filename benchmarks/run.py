@@ -46,8 +46,10 @@ def derived_summary(name: str, rows) -> str:
         if name.startswith(("fig1", "fig2", "fig4", "fig5", "fig6")):
             fa = [r["final_acc"] for r in rows if r["selection"] == "fedalign"]
             base = [r["final_acc"] for r in rows if r["selection"] != "fedalign"]
-            return (f"fedalign_mean_acc={sum(fa)/len(fa):.4f};"
-                    f"baseline_mean_acc={sum(base)/len(base):.4f}")
+            return (
+                f"fedalign_mean_acc={sum(fa) / len(fa):.4f};"
+                f"baseline_mean_acc={sum(base) / len(base):.4f}"
+            )
         if name.startswith("fig3"):
             wins = sum(r["fedalign_beats_local"] for r in rows)
             return f"fedalign_beats_local={wins}/{len(rows)}"
@@ -61,18 +63,20 @@ def derived_summary(name: str, rows) -> str:
             worst = max(r["max_err_vs_oracle"] for r in rows)
             return f"max_oracle_err={worst:.2e}"
         if name.startswith("round_pipeline"):
-            best = max(r["speedup_vs_dense"] for r in rows
-                       if r["path"] == "cohort")
-            ov = next((r["overhead_frac"] for r in rows
-                       if r["path"] == "state_threading_overhead"), None)
-            adam = next((r["slowdown_vs_sgd"] for r in rows
-                         if r["path"] == "server_opt:adam"), None)
-            asy = next((r["async_speedup_vs_sync"] for r in rows
-                        if r["path"].startswith("async:depth")
-                        and r["async_depth"]), None)
-            return (f"best_cohort_speedup={best:.2f}x;"
-                    f"state_overhead={ov};adam_slowdown={adam};"
-                    f"async_depth_speedup={asy}")
+            by_path = {r["path"]: r for r in rows}
+            best = max(r["speedup_vs_dense"] for r in rows if r["path"] == "cohort")
+            ov = by_path.get("state_threading_overhead", {}).get("overhead_frac")
+            adam = by_path.get("server_opt:adam", {}).get("slowdown_vs_sgd")
+            asy = None
+            for r in rows:
+                if r["path"].startswith(("async:fifo:", "async:ready:")) and r.get("async_depth"):
+                    asy = r["async_speedup_vs_sync"]
+                    break
+            return (
+                f"best_cohort_speedup={best:.2f}x;"
+                f"state_overhead={ov};adam_slowdown={adam};"
+                f"async_depth_speedup={asy}"
+            )
         if name.startswith("roofline"):
             ok = [r for r in rows if r.get("status") == "ok"]
             if not ok:
@@ -134,8 +138,7 @@ def main() -> None:
         except OSError as e:
             # a suite whose output file cannot be written is a failure,
             # not a quiet gap in the artifact directory
-            print(f"# {name}: could not write {out_path}: {e}",
-                  file=sys.stderr)
+            print(f"# {name}: could not write {out_path}: {e}", file=sys.stderr)
             if name not in failures:
                 failures.append(name)
     if failures:

@@ -32,11 +32,16 @@ def _decode(obj):
     return obj
 
 
-def save_pytree(path: str, tree: Any, step: int | None = None) -> None:
+def save_pytree(path: str, tree: Any, step: int | None = None,
+                meta: dict | None = None) -> None:
+    """``meta`` is an optional plain-msgpack dict of writer-side config
+    facts the reader may validate (e.g. the async-buffer knobs whose
+    mismatch would NOT change any leaf shape — see
+    ``fl.simulator.save_federation_state``)."""
     leaves, treedef = jax.tree.flatten(tree)
     host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
     payload = {"treedef": str(treedef), "step": step,
-               "leaves": host_leaves}
+               "leaves": host_leaves, "meta": meta}
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
@@ -46,12 +51,20 @@ def save_pytree(path: str, tree: Any, step: int | None = None) -> None:
 
 def load_pytree(path: str, like: Any):
     """Restore into the structure of ``like`` (shape/dtype-checked).
+    Returns ``(tree, step, meta)`` — ``meta`` is whatever dict the writer
+    passed to ``save_pytree`` (None for older checkpoints).
 
     Mismatches raise ``ValueError`` with the offending layout spelled out:
     the usual cause is restoring with a config whose state layout differs
     from the one that wrote the checkpoint (different ``server_opt`` moment
-    tree, ``num_clients``, or — for async runs — ``async_depth``, which
-    sizes the in-flight cohort buffer's leading [D] axis)."""
+    tree, ``num_clients``, ``async_depth`` — which sizes the in-flight
+    cohort buffer's leading [D] axis and its per-slot age/valid vectors —
+    or ``adaptive_staleness``, which allocates the drift-reference
+    ``last_delta`` sketch leaf). Knobs whose mismatch changes NO leaf
+    shape (``async_mode``/``min_lag`` — a fifo resume of a ready-mode
+    buffer would reinterpret the slot ages) can't be caught here; the
+    writer records them in the payload ``meta`` and
+    ``fl.simulator.load_federation_state(fed=...)`` validates them."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), object_hook=_decode, strict_map_key=False)
     leaves, treedef = jax.tree.flatten(like)
@@ -61,7 +74,8 @@ def load_pytree(path: str, like: Any):
             f"checkpoint {path!r} holds {len(new_leaves)} leaves but the "
             f"requested structure has {len(leaves)} — was it written with a "
             "different config (server_opt moment layout, async_depth "
-            "in-flight buffer, num_clients)?")
+            "in-flight buffer, adaptive_staleness last_delta sketch, "
+            "num_clients)?")
     out = []
     for i, (old, new) in enumerate(zip(leaves, new_leaves)):
         if tuple(new.shape) != tuple(old.shape):
@@ -69,7 +83,9 @@ def load_pytree(path: str, like: Any):
                 f"checkpoint {path!r} leaf {i} has shape "
                 f"{tuple(new.shape)} but the requested structure expects "
                 f"{tuple(old.shape)} — config/state layout mismatch "
-                "(e.g. a resume with a different async_depth or client "
-                "count than the run that wrote the checkpoint)")
+                "(e.g. a resume with a different async_depth, "
+                "adaptive_staleness/sketch_dim, or client count than the "
+                "run that wrote the checkpoint)")
         out.append(jnp.asarray(new, dtype=old.dtype))
-    return jax.tree.unflatten(treedef, out), payload.get("step")
+    return (jax.tree.unflatten(treedef, out), payload.get("step"),
+            payload.get("meta"))

@@ -230,11 +230,46 @@ class FedConfig:
                                       # synchronous: scan_async is then
                                       # bit-identical to vmap_spatial
     staleness_decay: float = 1.0      # per-round discount on stale deltas:
-                                      # a delta applied with staleness D is
-                                      # scaled by staleness_decay ** D
+                                      # a delta applied with staleness s is
+                                      # scaled by staleness_decay ** s
                                       # before the ServerOptimizer step
                                       # (1.0 = no discount; cf. async FL
-                                      # buffers, arXiv:2402.05050)
+                                      # buffers, arXiv:2402.05050). Under
+                                      # async_mode="fifo" s is always the
+                                      # constant async_depth; under "ready"
+                                      # s is the slot's measured age
+    async_mode: str = "fifo"          # in-flight pop policy (scan_async):
+                                      # "fifo"  — strict fixed-lag pipe:
+                                      #   every delta ages exactly
+                                      #   async_depth rounds (the PR 4
+                                      #   pipeline, bit-identical)
+                                      # "ready" — FedBuff-style variable
+                                      #   lag: any slot whose age reached
+                                      #   min_lag is applied, oldest first,
+                                      #   possibly several per round; the
+                                      #   buffer only fills to min_lag in
+                                      #   steady state, async_depth is its
+                                      #   capacity
+    min_lag: int = 1                  # async_mode="ready": minimum rounds a
+                                      # buffered delta must age before it
+                                      # may be applied (its readiness
+                                      # threshold). Must satisfy
+                                      # 1 <= min_lag <= async_depth (a
+                                      # delta can never pop the round it
+                                      # was pushed, so 0 would silently
+                                      # mean 1); a full buffer with no
+                                      # ready slot force-pops the oldest
+                                      # (FedBuff overflow rule)
+    adaptive_staleness: bool = False  # discount stale deltas by MEASURED
+                                      # drift instead of age alone: each
+                                      # applied delta is scaled by
+                                      # staleness_decay**age *
+                                      # max(0, cos(delta, last applied
+                                      # delta)), with the cosine estimated
+                                      # on sketch_dim CountSketches (the
+                                      # last_delta leaf in FederationState).
+                                      # False keeps the constant schedule
+                                      # (the pinned PR 4 fallback)
     max_cohort: int = 0               # static training-cohort budget K for
                                       # gate-before-train strategies (those
                                       # not needing client deltas): gates are

@@ -143,11 +143,15 @@ def apply_server_opt(fed, global_params, opt_state, agg_delta, *, scale=1.0):
     FedAvgM recursion m <- beta m + delta, w <- w + server_lr m.
 
     ``scale`` pre-multiplies the delta (in f32, after the wire-dtype cast):
-    the staleness discount of the ``scan_async`` backend
-    (``staleness_decay ** async_depth``) enters the optimizer here, so a
+    the staleness discount of the ``scan_async`` backend enters the
+    optimizer here — one call PER POPPED in-flight slot, each with that
+    slot's own scale (the constant ``staleness_decay ** async_depth``
+    under the fifo pipe; ``staleness_decay ** age``, optionally times the
+    measured-drift cosine, under the variable-lag ``ready`` buffer) — so a
     stale delta's momentum/second-moment contribution is discounted too,
-    not just its parameter step. The default 1.0 skips the multiply
-    entirely — the synchronous path is untouched."""
+    not just its parameter step. ``scale`` may be a traced scalar (the
+    measured-age discounts are); only the python-literal 1.0 skips the
+    multiply entirely — the synchronous path is untouched."""
     opt = server_optimizer(fed)
     if isinstance(scale, (int, float)) and float(scale) == 1.0:
         grads = jax.tree.map(lambda d: -d.astype(jnp.float32), agg_delta)

@@ -36,16 +36,24 @@ Two orthogonal seams:
     scan_async    — overlapped cohorts: spatial (vmap) execution, but the
                     round's aggregated delta is NOT applied at the round
                     barrier. The cohort gathered at round t trains against
-                    w_t while rounds t+1..t+D-1 evaluate/gate without
-                    waiting for it; its delta lands at round t + D
-                    (``FedConfig.async_depth``) scaled by the staleness
-                    discount ``staleness_decay ** D``. The D in-flight
-                    deltas are ordinary ``FederationState`` leaves
-                    (``state.inflight``, a ring buffer), so the jitted
-                    ``lax.scan`` driver, checkpoint/resume, and the pjit
-                    lowering carry them like any other cross-round state.
-                    ``async_depth=0`` degenerates to the synchronous
-                    round, bit-identical to vmap_spatial.
+                    w_t while later rounds evaluate/gate without waiting
+                    for it; its delta lands when the in-flight buffer's pop
+                    policy says it is ready (``FedConfig.async_mode``:
+                    "fifo" — exactly ``async_depth`` rounds late, the
+                    strict pipe; "ready" — FedBuff-style variable lag, any
+                    slot aged >= ``min_lag`` pops, oldest first), scaled by
+                    its staleness discount (``staleness_decay ** age``,
+                    optionally times the measured-drift cosine under
+                    ``adaptive_staleness``). The in-flight deltas, their
+                    per-slot ages, and the drift-reference sketch are
+                    ordinary ``FederationState`` leaves (``state.inflight``
+                    / ``state.last_delta``), so the jitted ``lax.scan``
+                    driver, checkpoint/resume, and the pjit lowering carry
+                    them like any other cross-round state. ``async_depth=0``
+                    degenerates to the synchronous round, bit-identical to
+                    vmap_spatial; ``async_mode="fifo"`` with
+                    ``adaptive_staleness=False`` is bit-identical to the
+                    fixed-depth PR 4 pipeline.
 
   The two synchronous backends produce identical rounds (same PRNG
   fan-out, same gating, same aggregation) — only the schedule over
@@ -112,12 +120,22 @@ class FederationState:
     * ``incl_ema`` — [C] f32 EMA of the effective inclusion gates — the
       cross-round participation share welfare fairness reads.
     * ``inflight`` — the ``scan_async`` in-flight cohort buffer, or ``()``
-      when ``fed.async_depth == 0``. A dict of two leaves:
+      when ``fed.async_depth == 0``. A dict of three leaves:
       ``inflight["delta"]`` stacks the D = ``fed.async_depth`` aggregated
       cohort deltas awaiting application (params-shaped leaves with a
-      leading [D] axis, wire dtype ``fed.agg_dtype``, oldest at index 0)
-      and ``inflight["valid"]`` is the [D] f32 occupancy mask (0 while the
-      pipeline warms up and the slot holds no real cohort yet).
+      leading [D] axis, wire dtype ``fed.agg_dtype``, oldest at index 0),
+      ``inflight["valid"]`` is the [D] f32 occupancy mask (valid slots are
+      a PREFIX: 0 once the slot has been popped or never filled), and
+      ``inflight["age"]`` is the [D] i32 per-slot age — rounds the slot's
+      delta has waited since it was pushed. Ages are nonincreasing along
+      the ring (slot 0 is oldest), which is what lets the readiness pop
+      compact the buffer with one roll.
+    * ``last_delta`` — [``fed.sketch_dim``] f32 CountSketch of the most
+      recent delta that actually LANDED (nonzero post-clamp scale;
+      ``delta_sketch`` under the fixed ``drift_sketch_key`` projection),
+      or ``()`` unless ``fed.adaptive_staleness`` asks for drift-measured
+      discounts. Kept as a sketch so the extra cross-round state is
+      sketch_dim-sized, never params-sized.
     """
     params: Any
     opt_state: Any
@@ -125,6 +143,7 @@ class FederationState:
     util_ema: Any
     incl_ema: Any
     inflight: Any = ()
+    last_delta: Any = ()
 
     def replace(self, **kw) -> "FederationState":
         return dataclasses.replace(self, **kw)
@@ -133,8 +152,26 @@ class FederationState:
 jax.tree_util.register_dataclass(
     FederationState,
     data_fields=["params", "opt_state", "backlog", "util_ema", "incl_ema",
-                 "inflight"],
+                 "inflight", "last_delta"],
     meta_fields=[])
+
+
+def check_async_config(fed):
+    """Validate the scan_async knobs whose bad values would corrupt the
+    in-flight buffer silently (clamped indices) instead of failing."""
+    if fed.async_depth <= 0:
+        return
+    if fed.async_mode not in ("fifo", "ready"):
+        raise ValueError(f"unknown FedConfig.async_mode {fed.async_mode!r}; "
+                         "known: 'fifo' (fixed-lag pipe) | 'ready' "
+                         "(variable-lag readiness buffer)")
+    if fed.async_mode == "ready" and not 1 <= fed.min_lag <= fed.async_depth:
+        raise ValueError(
+            f"FedConfig.min_lag={fed.min_lag} outside [1, async_depth="
+            f"{fed.async_depth}]: a delta can never age past the buffer "
+            "capacity (no slot would ever become ready), and it can never "
+            "pop before its first birthday either — the push happens after "
+            "the pop phase, so min_lag=0 would silently behave as 1")
 
 
 def init_inflight(params, fed):
@@ -152,13 +189,24 @@ def init_inflight(params, fed):
         "delta": jax.tree.map(
             lambda p: jnp.zeros((D,) + tuple(p.shape), ad), params),
         "valid": jnp.zeros((D,), jnp.float32),
+        "age": jnp.zeros((D,), jnp.int32),
     }
+
+
+def init_last_delta(fed):
+    """Zero reference sketch for the drift-adaptive discount, or ``()``
+    when ``adaptive_staleness`` is off (layout fixed by the config)."""
+    if fed.async_depth > 0 and fed.adaptive_staleness:
+        return jnp.zeros((int(fed.sketch_dim),), jnp.float32)
+    return ()
 
 
 def init_state(params, fed, num_clients: Optional[int] = None) -> FederationState:
     """Fresh FederationState for a federation of ``num_clients`` (defaults
     to ``fed.num_clients``): zero moments, zero backlog, zero EMAs, and an
-    empty in-flight buffer when ``fed.async_depth > 0``."""
+    empty in-flight buffer (plus zero drift-reference sketch under
+    ``adaptive_staleness``) when ``fed.async_depth > 0``."""
+    check_async_config(fed)
     C = int(num_clients if num_clients is not None else fed.num_clients)
     return FederationState(
         params=params,
@@ -166,7 +214,8 @@ def init_state(params, fed, num_clients: Optional[int] = None) -> FederationStat
         backlog=jnp.zeros((C,), jnp.int32),
         util_ema=jnp.zeros((C,), jnp.float32),
         incl_ema=jnp.zeros((C,), jnp.float32),
-        inflight=init_inflight(params, fed))
+        inflight=init_inflight(params, fed),
+        last_delta=init_last_delta(fed))
 
 
 # ============================================================ selection seam
@@ -401,72 +450,194 @@ def server_delta(fed, global_params, client_params, weights, gates):
                            fed=fed)
 
 
-def staleness_discount(fed) -> float:
-    """Static scale applied to a delta that aged ``fed.async_depth`` rounds
-    in the in-flight buffer: ``staleness_decay ** async_depth``. With the
-    fixed-depth pipeline every applied delta has exactly this staleness, so
-    the discount is a compile-time constant."""
-    return float(fed.staleness_decay) ** int(fed.async_depth)
+def staleness_discount(fed, age=None):
+    """Scale applied to a delta that waited in the in-flight buffer.
+
+    With ``age=None`` (the fifo pipe, where every applied delta aged
+    exactly ``fed.async_depth`` rounds) the discount is the compile-time
+    python constant ``staleness_decay ** async_depth`` — the PR 4
+    semantics, kept constant-folded so the fifo path stays bit-identical.
+    With a (traced) ``age`` it is the measured-staleness discount
+    ``staleness_decay ** age`` the variable-lag ``ready`` mode uses."""
+    if age is None:
+        return float(fed.staleness_decay) ** int(fed.async_depth)
+    return jnp.float32(fed.staleness_decay) ** age.astype(jnp.float32)
 
 
-def async_apply(fed, global_params, opt_state, inflight, agg_delta):
+def drift_sketch_key(fed):
+    """The ONE projection key for every drift sketch of a run.
+
+    Unlike ``sketch_key`` (grad_sim folds the round index in — each round
+    scores clients against each other, never across rounds), drift sketches
+    are compared ACROSS rounds (this pop's delta vs the last applied one),
+    so every sketch of the run must use the same CountSketch projection or
+    their cosine estimates nothing. Derived via ``fold_in_name`` (crc32),
+    so the stream is deterministic across processes."""
+    from repro.utils import fold_in_name
+    return fold_in_name(jax.random.PRNGKey(fed.seed), "async_drift_sketch")
+
+
+def drift_factor(sketch, last_sketch):
+    """max(0, cos(delta, last applied delta)) estimated on CountSketches.
+
+    The clamp at 0 means a stale delta pointing AWAY from where the model
+    is currently moving is dropped entirely rather than applied negatively.
+    Before any delta has been applied the reference sketch is all-zero —
+    no drift evidence — and the factor falls back to 1 (the constant
+    schedule alone)."""
+    dot = jnp.vdot(sketch.astype(jnp.float32), last_sketch.astype(jnp.float32))
+    n_last = jnp.sqrt(jnp.sum(last_sketch.astype(jnp.float32) ** 2))
+    n_new = jnp.sqrt(jnp.sum(sketch.astype(jnp.float32) ** 2))
+    cos = dot / jnp.maximum(n_new * n_last, 1e-12)
+    return jnp.where(n_last > 0, jnp.maximum(cos, 0.0), 1.0)
+
+
+def _apply_stale(fed, carry, delta, age):
+    """Apply ONE popped in-flight delta through the ServerOptimizer with
+    its staleness scale. ``carry = (params, opt_state, last_delta)``; runs
+    inside ``lax.cond`` on the slot's readiness, so non-popping rounds
+    leave params, moments (adam's t included), and the drift reference
+    untouched."""
+    params, opt_state, last = carry
+    # fifo: every pop has aged exactly async_depth rounds -> the python-
+    # constant discount (bit-identical to the PR 4 pipeline). ready: the
+    # slot's measured age.
+    scale = (staleness_discount(fed) if fed.async_mode == "fifo"
+             else staleness_discount(fed, age))
+    if fed.adaptive_staleness:
+        sk = delta_sketch(delta, drift_sketch_key(fed), int(fed.sketch_dim))
+        scale = scale * drift_factor(sk, last)
+        # the reference advances only when the delta actually moved the
+        # model (scale > 0) — raw sketch, direction not scale. A clamped
+        # delta must NOT become the reference: with an oscillating stream
+        # (+d, -d, +d, ...) it would flip the reference each pop and zero
+        # every later update, freezing training while stats still report
+        # pops; keeping the last LANDED direction damps the oscillation
+        # and lets aligned deltas through.
+        last = jnp.where(scale > 0, sk, last)
+        # a fully-clamped pop is DROPPED, optimizer included: scale 0
+        # through apply_server_opt would still decay momentum (moving
+        # params along the stale residual) and tick adam's t — the same
+        # moments-untouched invariant warm-up rounds honour applies here
+        new_params, new_opt = jax.lax.cond(
+            scale > 0,
+            lambda s: apply_server_opt(fed, params, opt_state, delta,
+                                       scale=s),
+            lambda s: (params, opt_state),
+            scale)
+        return new_params, new_opt, last
+    new_params, new_opt = apply_server_opt(fed, params, opt_state, delta,
+                                           scale=scale)
+    return new_params, new_opt, last
+
+
+def async_apply(fed, global_params, opt_state, inflight, agg_delta,
+                last_delta=()):
     """One tick of the scan_async application state machine.
 
-    Pops the OLDEST in-flight cohort delta (index 0 of the ring buffer),
-    applies it through the configured ServerOptimizer scaled by the
-    staleness discount — under ``lax.cond`` on the slot's validity, so
-    pipeline warm-up rounds (the first D rounds, before any cohort has
-    aged D rounds) leave params AND optimizer moments untouched — then
-    shifts the buffer and pushes this round's fresh ``agg_delta`` into the
-    youngest slot.
+    1. Every valid slot ages one round.
+    2. The READY slots are popped oldest-first and each applied through the
+       configured ServerOptimizer with its own staleness scale
+       (``_apply_stale``), under ``lax.cond`` per slot — rounds where
+       nothing is ready (pipeline warm-up) leave params AND optimizer
+       moments untouched. Readiness: ``async_mode="fifo"`` — the slot that
+       aged exactly ``async_depth`` rounds (at most one per round, the
+       strict PR 4 pipe); ``"ready"`` — every slot whose age reached
+       ``min_lag`` (prefix of the ring, possibly several per round). A
+       FULL buffer with no ready slot force-pops the oldest (the FedBuff
+       overflow rule) so the fresh delta always has a slot.
+    3. The buffer compacts (popped slots are a prefix, so one roll) and
+       this round's fresh ``agg_delta`` is pushed behind the survivors at
+       age 0.
 
-    Returns ``(new_params, new_opt_state, new_inflight, applied_valid)``.
+    Returns ``(new_params, new_opt_state, new_inflight, new_last_delta,
+    info)`` with ``info = {"applied_valid": popped count (f32),
+    "applied_age": oldest applied age (i32, 0 when nothing landed)}``.
     The buffer leaves keep their config-fixed [D, ...] shapes, so the
     whole transition is a legal ``lax.scan`` carry step."""
-    oldest = jax.tree.map(lambda buf: buf[0], inflight["delta"])
-    valid0 = inflight["valid"][0]
-    disc = staleness_discount(fed)
-    new_params, new_opt = jax.lax.cond(
-        valid0 > 0,
-        lambda: apply_server_opt(fed, global_params, opt_state, oldest,
-                                 scale=disc),
-        lambda: (global_params, opt_state))
+    valid = inflight["valid"] > 0
+    D = int(valid.shape[0])
+    age = inflight["age"] + valid.astype(jnp.int32)
+    occ = jnp.sum(valid.astype(jnp.int32))
+    carry = (global_params, opt_state, last_delta)
+    if fed.async_mode == "fifo":
+        # single-pop pipe: at most slot 0 can ever be ready (one push per
+        # round keeps ages distinct), so the trace holds ONE conditional
+        # optimizer apply — not D unrolled copies. The occ >= D term is
+        # the same capacity guard the ready branch's force-pop provides.
+        ready = jnp.zeros((D,), bool).at[0].set(
+            valid[0] & ((age[0] >= int(fed.async_depth)) | (occ >= D)))
+        delta0 = jax.tree.map(lambda b: b[0], inflight["delta"])
+        carry = jax.lax.cond(
+            ready[0],
+            lambda c: _apply_stale(fed, c, delta0, age[0]),
+            lambda c: c,
+            carry)
+    else:
+        thr = int(fed.min_lag)
+        # prefix-closed readiness: ages are nonincreasing along the ring,
+        # so "every slot with age >= thr" IS a prefix — the cumprod makes
+        # that robust to hand-built states instead of assuming it
+        ready = jnp.cumprod((valid & (age >= thr)).astype(jnp.int32)) > 0
+        force = (occ >= D) & ~ready[0] & valid[0]
+        ready = ready.at[0].set(ready[0] | force)
+        for i in range(D):                 # static unroll: D is small
+            delta_i = jax.tree.map(lambda b, i=i: b[i], inflight["delta"])
+            carry = jax.lax.cond(
+                ready[i],
+                lambda c, d=delta_i, i=i: _apply_stale(fed, c, d, age[i]),
+                lambda c: c,
+                carry)
+    new_params, new_opt, new_last = carry
+
+    k = jnp.sum(ready.astype(jnp.int32))
+    pos = occ - k                          # fresh delta lands behind survivors
+    idx = jnp.arange(D)
+
+    def shift_push(buf, d):
+        return jax.lax.dynamic_update_slice_in_dim(
+            jnp.roll(buf, -k, axis=0), d.astype(buf.dtype)[None], pos, axis=0)
+
     new_inflight = {
-        "delta": jax.tree.map(
-            lambda buf, d: jnp.concatenate(
-                [buf[1:], d.astype(buf.dtype)[None]], axis=0),
-            inflight["delta"], agg_delta),
-        "valid": jnp.concatenate(
-            [inflight["valid"][1:], jnp.ones((1,), jnp.float32)]),
+        "delta": jax.tree.map(shift_push, inflight["delta"], agg_delta),
+        "valid": (idx <= pos).astype(jnp.float32),
+        "age": jnp.where(idx < pos, jnp.roll(age, -k), 0),
     }
-    return new_params, new_opt, new_inflight, valid0
+    info = {"applied_valid": k.astype(jnp.float32),
+            "applied_age": jnp.max(jnp.where(ready, age, 0))}
+    return new_params, new_opt, new_inflight, new_last, info
 
 
 def drain_inflight(fed, state: FederationState) -> FederationState:
     """Flush a scan_async pipeline at end of run: apply every still-valid
-    in-flight cohort delta oldest-first through the ServerOptimizer (each
-    with the same ``staleness_discount`` it would have received in-stream)
-    and return the state with an emptied buffer. A real async server does
+    in-flight cohort delta oldest-first through the ServerOptimizer — each
+    with the discount it would have received in-stream (the constant
+    ``staleness_decay ** async_depth`` under fifo, its measured age under
+    ``ready``, times the drift factor under ``adaptive_staleness``) — and
+    return the state with an emptied buffer. A real async server does
     exactly this at shutdown — straggler cohorts are absorbed, not
     dropped. No-op for synchronous states (``inflight == ()``)."""
     if not isinstance(state.inflight, dict):
         return state
-    disc = staleness_discount(fed)
-    params, opt_state = state.params, state.opt_state
-    D = int(state.inflight["valid"].shape[0])
+    valid = state.inflight["valid"]
+    age = state.inflight["age"]
+    carry = (state.params, state.opt_state, state.last_delta)
+    D = int(valid.shape[0])
     for i in range(D):                     # static unroll: D is small
-        delta_i = jax.tree.map(lambda b: b[i], state.inflight["delta"])
-        params, opt_state = jax.lax.cond(
-            state.inflight["valid"][i] > 0,
-            lambda po, d=delta_i: apply_server_opt(fed, po[0], po[1], d,
-                                                   scale=disc),
-            lambda po: po,
-            (params, opt_state))
+        delta_i = jax.tree.map(lambda b, i=i: b[i], state.inflight["delta"])
+        carry = jax.lax.cond(
+            valid[i] > 0,
+            lambda c, d=delta_i, i=i: _apply_stale(fed, c, d, age[i]),
+            lambda c: c,
+            carry)
+    params, opt_state, last = carry
     empty = {
         "delta": jax.tree.map(jnp.zeros_like, state.inflight["delta"]),
-        "valid": jnp.zeros_like(state.inflight["valid"]),
+        "valid": jnp.zeros_like(valid),
+        "age": jnp.zeros_like(age),
     }
-    return state.replace(params=params, opt_state=opt_state, inflight=empty)
+    return state.replace(params=params, opt_state=opt_state, inflight=empty,
+                         last_delta=last)
 
 
 def delta_sketch(delta, key, dim: int):
@@ -610,12 +781,17 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
     ``fed.grad_sim_sketch``).
 
     ``backend="scan_async"`` with ``fed.async_depth = D > 0`` defers the
-    APPLICATION of the round's aggregated delta by D rounds through the
-    ``FederationState.inflight`` ring buffer (``async_apply``): round t's
-    cohort trains against w_t, rounds t+1..t+D-1 gate without waiting for
-    it, and its delta lands at t+D scaled by ``staleness_decay ** D``.
-    At D = 0 the async round degenerates to the synchronous one and is
-    bit-identical to ``vmap_spatial``."""
+    APPLICATION of the round's aggregated delta through the
+    ``FederationState.inflight`` buffer (``async_apply``): round t's
+    cohort trains against w_t, later rounds gate without waiting for it,
+    and its delta lands once the ``fed.async_mode`` pop policy declares it
+    ready — after exactly D rounds ("fifo") or once it aged
+    ``fed.min_lag`` rounds ("ready", oldest-first, possibly several per
+    round) — scaled by its staleness discount (constant
+    ``staleness_decay ** D`` under fifo, measured ``staleness_decay **
+    age`` under ready, times the drift cosine when
+    ``fed.adaptive_staleness``). At D = 0 the async round degenerates to
+    the synchronous one and is bit-identical to ``vmap_spatial``."""
     backend = backend or fed.backend
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")
@@ -625,6 +801,7 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
             f"'scan_async' backend; {backend!r} applies every delta at its "
             "own round barrier and would silently ignore the in-flight "
             "buffer (set async_depth=0 or backend='scan_async')")
+    check_async_config(fed)
     eval_clients, train_clients = _BACKENDS[backend]
     strategy = get_strategy(fed.selection)
     solver = local_solver(loss_fn, fed)
@@ -724,15 +901,17 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
                                      weights, gates)
 
         # (6) apply — at the round barrier (sync, and scan_async at depth
-        # 0), or D rounds late through the in-flight buffer (scan_async)
+        # 0), or through the in-flight buffer's readiness policy
+        # (scan_async: fixed fifo lag, or variable-lag "ready" pops)
         if async_depth > 0:
-            new_global, opt_state, inflight, applied_valid = async_apply(
+            new_global, opt_state, inflight, last_delta, ainfo = async_apply(
                 fed, global_params, state.opt_state, state.inflight,
-                agg_delta)
+                agg_delta, last_delta=state.last_delta)
         else:
             new_global, opt_state = apply_server_opt(
                 fed, global_params, state.opt_state, agg_delta)
             inflight = state.inflight
+            last_delta = state.last_delta
 
         # cross-round state: backlog ledger + inclusion EMA follow the
         # EFFECTIVE gates the aggregation honoured
@@ -742,7 +921,8 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
         incl_ema = inclusion_update(fed, state.incl_ema, gates)
         new_state = FederationState(params=new_global, opt_state=opt_state,
                                     backlog=backlog, util_ema=util_ema,
-                                    incl_ema=incl_ema, inflight=inflight)
+                                    incl_ema=incl_ema, inflight=inflight,
+                                    last_delta=last_delta)
 
         npri = (1.0 - priority_mask.astype(jnp.float32))
         included_mass = jnp.sum(npri * weights * gates)
@@ -760,9 +940,12 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
         }
         if async_depth > 0:
             # async-only keys (python-level branch: the depth-0 trace stays
-            # literally the vmap_spatial trace)
-            stats["staleness"] = jnp.int32(async_depth)
-            stats["applied_valid"] = applied_valid
+            # literally the vmap_spatial trace). "staleness" is the MEASURED
+            # age of the oldest delta applied this round — 0 on rounds where
+            # nothing landed (pipeline warm-up included), so loss-curve
+            # tooling never attributes warm-up rounds to stale updates.
+            stats["staleness"] = ainfo["applied_age"]
+            stats["applied_valid"] = ainfo["applied_valid"]
             stats["inflight_occupancy"] = jnp.sum(inflight["valid"])
         return new_state, stats
 

@@ -24,10 +24,14 @@ overflow backlog, the welfare utility EMAs, and the ``scan_async``
 in-flight cohort buffer thread through pod rounds exactly as through the
 in-silico simulator. ``fed.async_depth = D > 0`` runs BOTH pod modes with
 overlapped cohorts: the round aggregates as usual but its delta enters the
-``FederationState.inflight`` ring buffer and the delta that aged D rounds
-is applied instead, staleness-discounted (``engine.async_apply`` — the
-same state machine as the engine's ``scan_async`` backend, so pod rounds
-and the simulator stay drift-free).
+``FederationState.inflight`` buffer and whichever buffered deltas the
+``fed.async_mode`` pop policy declares ready (the slot that aged exactly D
+rounds under "fifo"; every slot aged >= ``min_lag``, oldest first, under
+the FedBuff-style "ready") are applied instead, each staleness-discounted
+by its own age — and by its measured drift under
+``fed.adaptive_staleness`` (``engine.async_apply`` — the same state
+machine as the engine's ``scan_async`` backend, so pod rounds and the
+simulator stay drift-free).
 
 The server statistic F(w_t) is computed on a server-held global batch
 (paper §3.1: "the server transmits ... also its associated loss"), so the
@@ -108,37 +112,42 @@ def _gate_ctx(fed, state, util_ema, local_losses, server_loss, pm, w,
 
 
 def _next_state(fed, state, new_params, opt_state, sel_gates, eff_gates,
-                util_ema, inflight=None):
+                util_ema, inflight=None, last_delta=None):
     """Advance the cross-round carry with THE engine update rules."""
     return engine.FederationState(
         params=new_params, opt_state=opt_state,
         backlog=engine.backlog_update(state.backlog, sel_gates, eff_gates),
         util_ema=util_ema,
         incl_ema=engine.inclusion_update(fed, state.incl_ema, eff_gates),
-        inflight=state.inflight if inflight is None else inflight)
+        inflight=state.inflight if inflight is None else inflight,
+        last_delta=state.last_delta if last_delta is None else last_delta)
 
 
 def _apply_delta(fed, state, params, agg_delta):
     """Apply an aggregated global delta the way the engine would: at the
-    round barrier when ``fed.async_depth == 0``, or D rounds late through
-    the FederationState in-flight ring buffer (``engine.async_apply``, THE
-    staleness state machine — no pod/simulator drift) when the pod round
-    runs overlapped cohorts. Returns (new_params, opt_state, inflight,
-    applied_valid | None)."""
+    round barrier when ``fed.async_depth == 0``, or through the
+    FederationState in-flight buffer's pop policy (``engine.async_apply``,
+    THE staleness state machine — fifo pipe or variable-lag readiness
+    pops, no pod/simulator drift) when the pod round runs overlapped
+    cohorts. Returns (new_params, opt_state, inflight, last_delta,
+    info | None)."""
     if fed.async_depth > 0:
         return engine.async_apply(fed, params, state.opt_state,
-                                  state.inflight, agg_delta)
+                                  state.inflight, agg_delta,
+                                  last_delta=state.last_delta)
     new_params, opt_state = apply_server_opt(fed, params, state.opt_state,
                                              agg_delta)
-    return new_params, opt_state, state.inflight, None
+    return new_params, opt_state, state.inflight, state.last_delta, None
 
 
-def _async_stats(fed, stats, applied_valid, inflight):
+def _async_stats(fed, stats, info, inflight):
     """Async-only stat keys (python-level branch: synchronous pod rounds
-    keep their exact stats structure)."""
+    keep their exact stats structure). "staleness" reports the MEASURED
+    age of the oldest delta applied this round — 0 when nothing landed
+    (warm-up rounds), never the constant pipeline depth."""
     if fed.async_depth > 0:
-        stats["staleness"] = jnp.int32(fed.async_depth)
-        stats["applied_valid"] = applied_valid
+        stats["staleness"] = info["applied_age"]
+        stats["applied_valid"] = info["applied_valid"]
         stats["inflight_occupancy"] = jnp.sum(inflight["valid"])
     return stats
 
@@ -158,6 +167,7 @@ def make_spatial_round(model, fed, num_clients: int):
     """
     E = fed.local_epochs
     lr = fed.lr
+    engine.check_async_config(fed)
     strategy = engine.get_strategy(fed.selection)
     use_cohort = fed.max_cohort > 0 and not strategy.needs_deltas
 
@@ -212,10 +222,11 @@ def make_spatial_round(model, fed, num_clients: int):
                 fed.selection)
             agg_delta = engine.server_delta(fed, params, client_params, w,
                                             gates)
-        new_params, opt_state, inflight, applied = _apply_delta(
+        new_params, opt_state, inflight, last_delta, applied = _apply_delta(
             fed, state, params, agg_delta)
         new_state = _next_state(fed, state, new_params, opt_state,
-                                sel_gates, gates, util_ema, inflight=inflight)
+                                sel_gates, gates, util_ema, inflight=inflight,
+                                last_delta=last_delta)
         stats = _async_stats(fed, {
             "server_loss": server_loss,
             "local_losses": local_losses,
@@ -245,6 +256,7 @@ def make_temporal_round(model, fed, cohort: int):
     """
     E = fed.local_epochs
     lr = fed.lr
+    engine.check_async_config(fed)
     strategy = engine.get_strategy(fed.selection)
     if strategy.needs_deltas and not fed.grad_sim_sketch:
         raise ValueError(
@@ -311,10 +323,11 @@ def make_temporal_round(model, fed, cohort: int):
         agg_delta = jax.tree.map(
             lambda n, p: n / jnp.maximum(den, 1e-30) - p.astype(jnp.float32),
             num, params)
-        new_params, opt_state, inflight, applied = _apply_delta(
+        new_params, opt_state, inflight, last_delta, applied = _apply_delta(
             fed, state, params, agg_delta)
         new_state = _next_state(fed, state, new_params, opt_state,
-                                gates, gates, util_ema, inflight=inflight)
+                                gates, gates, util_ema, inflight=inflight,
+                                last_delta=last_delta)
         stats = _async_stats(fed, {
             "server_loss": server_loss,
             "local_losses": local_losses,

@@ -73,19 +73,46 @@ def evaluate(loss_fn, params, x, y, batch=4096):
     return float(out[0]), float(out[1])
 
 
-def save_federation_state(path: str, state, rng, round_idx: int) -> None:
+def _async_fingerprint(fed) -> Optional[dict]:
+    """The scan_async knobs whose resume mismatch changes NO leaf shape —
+    a fifo resume of a ready-mode buffer (or a different min_lag) would
+    silently reinterpret the slot ages, so they ride the checkpoint as
+    validatable metadata instead."""
+    if fed is None or fed.async_depth <= 0:
+        return None
+    return {"async_mode": fed.async_mode, "min_lag": int(fed.min_lag),
+            "adaptive_staleness": bool(fed.adaptive_staleness)}
+
+
+def save_federation_state(path: str, state, rng, round_idx: int,
+                          fed=None) -> None:
     """Checkpoint the FULL cross-round carry — FederationState (params,
     server-optimizer moments, backlog, utility EMAs) AND the driver PRNG
-    key — as one msgpack pytree (checkpoint/io.py)."""
-    save_pytree(path, {"state": state, "rng": rng}, step=int(round_idx))
+    key — as one msgpack pytree (checkpoint/io.py). Pass ``fed`` so async
+    runs also record their buffer-policy fingerprint
+    (``_async_fingerprint``) for resume-time validation."""
+    save_pytree(path, {"state": state, "rng": rng}, step=int(round_idx),
+                meta=_async_fingerprint(fed))
 
 
-def load_federation_state(path: str, like_state):
+def load_federation_state(path: str, like_state, fed=None):
     """Restore (state, rng, next_round) saved by ``save_federation_state``.
     ``like_state`` fixes the pytree structure/shapes (``init_state`` with
-    the run's config produces one)."""
-    tree, step = load_pytree(path, {"state": like_state,
-                                    "rng": jax.random.PRNGKey(0)})
+    the run's config produces one). Pass ``fed`` to ALSO validate the
+    shape-invisible async knobs against the writer's recorded fingerprint:
+    resuming a ready-mode buffer under fifo (or a different min_lag) would
+    silently pop the restored slot ages on the wrong schedule, so a
+    mismatch raises instead."""
+    tree, step, meta = load_pytree(path, {"state": like_state,
+                                          "rng": jax.random.PRNGKey(0)})
+    want = _async_fingerprint(fed)
+    if want is not None and meta is not None and meta != want:
+        raise ValueError(
+            f"checkpoint {path!r} was written with async buffer policy "
+            f"{meta} but this config resumes with {want} — the in-flight "
+            "slot ages would be popped on the wrong schedule. Resume with "
+            "the writer's async_mode/min_lag/adaptive_staleness (or drain "
+            "the buffer before switching policies)")
     return tree["state"], tree["rng"], step
 
 
@@ -108,8 +135,11 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
     boundary checkpoints like the optimizer moments do — a mid-flight
     resume restores the pipeline bit-identically. ``drain_inflight=True``
     additionally flushes still-in-flight cohort deltas into the params
-    after the final round (``engine.drain_inflight``); the default leaves
-    them in ``hist.state.inflight``, exactly as a checkpoint would."""
+    after the final round (``engine.drain_inflight``) — and, when
+    ``checkpoint_path`` is set, rewrites the final checkpoint with the
+    drained state so resuming it can never re-apply the flushed deltas;
+    the default leaves them in ``hist.state.inflight``, exactly as a
+    checkpoint would."""
     round_fn = make_round_fn(loss_fn, fed)
     data = {"x": jnp.asarray(federation.x), "y": jnp.asarray(federation.y)}
     pm = jnp.asarray(federation.priority_mask)
@@ -164,11 +194,20 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
             else:
                 hist.log(s)
         if checkpoint_path is not None:
-            save_federation_state(checkpoint_path, state, rng, b + 1)
+            save_federation_state(checkpoint_path, state, rng, b + 1, fed=fed)
         start = b + 1
     if drain_inflight:
         from repro.fl import engine
+        had_buffer = isinstance(state.inflight, dict)
         state = engine.drain_inflight(fed, state)
+        if checkpoint_path is not None and had_buffer:
+            # the final chunk-boundary checkpoint above predates the drain:
+            # resuming from it and draining again would re-apply the same
+            # in-flight cohort deltas. Rewrite it with the DRAINED state
+            # (same next-round step), so a resume sees an empty buffer and
+            # a second drain is a no-op.
+            save_federation_state(checkpoint_path, state, rng, fed.rounds,
+                                  fed=fed)
     hist.params = state.params
     hist.state = state
     hist.rng = rng

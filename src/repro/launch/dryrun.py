@@ -321,14 +321,31 @@ def main():
     ap.add_argument("--async-depth", type=int, default=0,
                     help="lower the train rounds with scan_async overlapped "
                          "cohorts: the in-flight delta buffer (async_depth "
-                         "stacked param-shaped deltas) joins the lowered "
+                         "stacked param-shaped deltas, plus per-slot "
+                         "age/validity vectors) joins the lowered "
                          "FederationState")
+    ap.add_argument("--async-mode", default="fifo", choices=["fifo", "ready"],
+                    help="in-flight pop policy: strict fixed-lag pipe, or "
+                         "FedBuff-style variable-lag readiness buffer "
+                         "(pops every slot aged >= --min-lag, oldest "
+                         "first)")
+    ap.add_argument("--min-lag", type=int, default=1,
+                    help="ready mode: rounds a buffered delta must age "
+                         "before it may be applied (1 <= min_lag <= "
+                         "async_depth)")
+    ap.add_argument("--adaptive-staleness", action="store_true",
+                    help="discount applied deltas by measured drift "
+                         "(staleness_decay**age * max(0, cos vs the last "
+                         "applied delta)); adds the [sketch_dim] "
+                         "last_delta sketch leaf to the lowered state")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
     fed = DRYRUN_FED
     if args.async_depth > 0:
-        fed = fed.replace(async_depth=args.async_depth, backend="scan_async")
+        fed = fed.replace(async_depth=args.async_depth, backend="scan_async",
+                          async_mode=args.async_mode, min_lag=args.min_lag,
+                          adaptive_staleness=args.adaptive_staleness)
 
     archs = ARCH_IDS if args.arch == "all" else [ALIASES.get(args.arch, args.arch)]
     shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
@@ -342,6 +359,10 @@ def main():
                 tag += f"__{args.variant}"
             if args.async_depth > 0:
                 tag += f"__async{args.async_depth}"
+                if args.async_mode != "fifo":
+                    tag += f"__{args.async_mode}{args.min_lag}"
+                if args.adaptive_staleness:
+                    tag += "__adaptive"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
                 print(f"[skip-existing] {tag}")

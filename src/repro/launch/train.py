@@ -52,7 +52,10 @@ def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
         misalign_max=1.0, log_every=1, seed=0, verbose=True, **fed_kw):
     """``fed_kw`` passes any further FedConfig knob straight through —
     e.g. ``async_depth=2, staleness_decay=0.5, backend="scan_async"`` to
-    drive the pod rounds with overlapped cohorts, or ``server_opt``."""
+    drive the pod rounds with overlapped cohorts (plus
+    ``async_mode="ready", min_lag=1`` for the FedBuff-style variable-lag
+    buffer and ``adaptive_staleness=True`` for the drift-measured
+    discount), or ``server_opt``."""
     cfg = get_smoke(arch) if smoke else get_config(arch)
     assert not cfg.encdec, "use examples/whisper for enc-dec training"
     model = get_model(cfg)

@@ -217,14 +217,22 @@ def federation_state_specs(fed, param_specs):
     else:                                   # adam / yogi: m, v, step counter
         opt_specs = {"m": param_specs, "v": param_specs, "t": rep}
     if fed.async_depth > 0:
+        # per-slot ages ([D] i32) replicate like the validity mask: every
+        # pod reads them in the readiness pop
         inflight_specs = {
             "delta": jax.tree.map(
                 lambda sp: P(*([None] + list(sp))), param_specs,
                 is_leaf=lambda x: isinstance(x, P)),
             "valid": rep,
+            "age": rep,
         }
     else:
         inflight_specs = ()
+    # the drift-reference sketch is [sketch_dim] — a few KB — so it
+    # replicates; only the delta slots are params-sized and sharded
+    last_delta_specs = (rep if fed.async_depth > 0 and fed.adaptive_staleness
+                        else ())
     return FederationState(params=param_specs, opt_state=opt_specs,
                            backlog=rep, util_ema=rep, incl_ema=rep,
-                           inflight=inflight_specs)
+                           inflight=inflight_specs,
+                           last_delta=last_delta_specs)

@@ -106,16 +106,41 @@ def test_inflight_layout_follows_config():
     assert st0.inflight == ()
     fed = _base(async_depth=3, agg_dtype="bfloat16", backend="scan_async")
     st = engine.init_state(PARAMS, fed, C)
-    assert set(st.inflight) == {"delta", "valid"}
+    assert set(st.inflight) == {"delta", "valid", "age"}
     assert st.inflight["valid"].shape == (3,)
+    assert st.inflight["age"].shape == (3,)
+    assert st.inflight["age"].dtype == jnp.int32
     for p, d in zip(jax.tree.leaves(PARAMS),
                     jax.tree.leaves(st.inflight["delta"])):
         assert d.shape == (3,) + p.shape
         assert d.dtype == jnp.bfloat16          # the delta wire dtype
+    # the drift-reference sketch leaf exists iff adaptive_staleness asks
+    assert st.last_delta == ()
+    ad = engine.init_state(
+        PARAMS, fed.replace(adaptive_staleness=True, sketch_dim=128), C)
+    assert ad.last_delta.shape == (128,)
+    assert ad.last_delta.dtype == jnp.float32
     # registered pytree: the buffer rides flatten/unflatten like any leaf
     leaves, treedef = jax.tree.flatten(st)
     assert isinstance(jax.tree.unflatten(treedef, leaves),
                       engine.FederationState)
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="async_mode"):
+        engine.init_state(PARAMS, _base(backend="scan_async", async_depth=2,
+                                        async_mode="lifo"), C)
+    with pytest.raises(ValueError, match="min_lag"):
+        engine.init_state(PARAMS, _base(backend="scan_async", async_depth=2,
+                                        async_mode="ready", min_lag=3), C)
+    # min_lag=0 would silently behave as 1 (push happens after the pop
+    # phase) — rejected rather than documented away
+    with pytest.raises(ValueError, match="min_lag"):
+        engine.init_state(PARAMS, _base(backend="scan_async", async_depth=2,
+                                        async_mode="ready", min_lag=0), C)
+    # fifo ignores min_lag entirely — an out-of-range value must not trip it
+    engine.init_state(PARAMS, _base(backend="scan_async", async_depth=2,
+                                    async_mode="fifo", min_lag=9), C)
 
 
 # ================================================= pipeline semantics
@@ -136,7 +161,10 @@ def test_pipeline_applies_deltas_depth_rounds_late():
                             jax.tree.leaves(PARAMS)))
         assert frozen == (r < D), f"round {r}"
         assert float(stats["applied_valid"]) == (0.0 if r < D else 1.0)
-        assert int(stats["staleness"]) == D
+        # the staleness stat is the MEASURED age of the applied slot: 0 on
+        # warm-up rounds where nothing landed (the PR 5 stats fix), D once
+        # the pipe flows
+        assert int(stats["staleness"]) == (0 if r < D else D)
         assert float(stats["inflight_occupancy"]) == min(r + 1, D)
         # warm-up rounds must not tick the adam step counter either
         assert int(state.opt_state["t"]) == max(0, r - D + 1)
@@ -184,6 +212,280 @@ def test_drain_inflight_flushes_stragglers():
 def test_drain_is_noop_for_sync_state():
     st = engine.init_state(PARAMS, _base(), C)
     assert engine.drain_inflight(_base(), st) is st
+
+
+def _const_delta(v):
+    return jax.tree.map(lambda p: jnp.full(p.shape, v, p.dtype), PARAMS)
+
+
+# ================================================= fifo == PR 4 fixed lag
+def test_fifo_matches_fixed_lag_replay():
+    """The generalized readiness machine in fifo mode IS the fixed-depth
+    pipe: replaying the pushed deltas through an independent python FIFO
+    (pop after exactly D rounds, constant ``staleness_decay ** D``
+    discount, same ServerOptimizer) reproduces the params round for
+    round."""
+    from repro.core.aggregation import apply_server_opt, server_optimizer
+
+    D = 2
+    fed = _base(backend="scan_async", async_depth=D, staleness_decay=0.5,
+                server_opt="momentum", server_momentum=0.5, epsilon=1e9)
+    fn = jax.jit(engine.make_round_fn(LOSS, fed))
+    state = engine.init_state(PARAMS, fed, C)
+    ref_params, ref_opt = PARAMS, server_optimizer(fed).init(PARAMS)
+    disc = engine.staleness_discount(fed)
+    pipe = []
+    for r in range(6):
+        if len(pipe) == D:
+            ref_params, ref_opt = apply_server_opt(fed, ref_params, ref_opt,
+                                                   pipe.pop(0), scale=disc)
+        state, _ = fn(state, DATA, PM, W, jax.random.PRNGKey(r), jnp.int32(r))
+        occ = int(np.asarray(state.inflight["valid"]).sum())
+        pipe.append(jax.tree.map(lambda b, occ=occ: b[occ - 1],
+                                 state.inflight["delta"]))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(ref_params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-7, err_msg=f"round {r}")
+
+
+def test_ready_with_lag_equal_depth_matches_fifo():
+    """ready(min_lag=D) pops on exactly the fifo schedule — bit-identical
+    at decay 1 (no discount arithmetic), tight-tolerance at decay 0.5
+    (traced decay**age vs the constant-folded discount)."""
+    for decay, exact in ((1.0, True), (0.5, False)):
+        fed_f = _base(backend="scan_async", async_depth=2,
+                      staleness_decay=decay)
+        fed_r = fed_f.replace(async_mode="ready", min_lag=2)
+        (sf, tf) = _run(fed_f, "scan_async", rounds=5)
+        (sr, tr) = _run(fed_r, "scan_async", rounds=5)
+        np.testing.assert_array_equal(np.asarray(tf["gates"]),
+                                      np.asarray(tr["gates"]))
+        for a, b in zip(jax.tree.leaves(sf), jax.tree.leaves(sr)):
+            if exact:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            else:
+                np.testing.assert_allclose(np.asarray(a, np.float64),
+                                           np.asarray(b, np.float64),
+                                           atol=1e-6)
+
+
+# ================================================= variable-lag readiness
+def test_ready_applies_at_min_lag_not_depth():
+    """min_lag=2 in a depth-4 buffer: the first delta lands at round 2 (age
+    2), not round 4, and steady-state occupancy is min_lag, not D."""
+    D, L = 4, 2
+    fed = _base(backend="scan_async", async_depth=D, async_mode="ready",
+                min_lag=L, staleness_decay=1.0, epsilon=1e9)
+    fn = jax.jit(engine.make_round_fn(LOSS, fed))
+    state = engine.init_state(PARAMS, fed, C)
+    for r in range(L + 2):
+        state, stats = fn(state, DATA, PM, W, jax.random.PRNGKey(r),
+                          jnp.int32(r))
+        frozen = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(state.params),
+                            jax.tree.leaves(PARAMS)))
+        assert frozen == (r < L), f"round {r}"
+        assert float(stats["applied_valid"]) == (0.0 if r < L else 1.0)
+        assert int(stats["staleness"]) == (0 if r < L else L)
+        assert float(stats["inflight_occupancy"]) == min(r + 1, L)
+
+
+def test_ready_multi_pop_applies_all_ready_slots():
+    """A backlogged buffer (heterogeneous ages, all past min_lag) drains in
+    ONE round, oldest first, each delta with its own measured-age
+    discount — the FedBuff-style catch-up the fifo pipe cannot do."""
+    D = 4
+    fed = _base(backend="scan_async", async_depth=D, async_mode="ready",
+                min_lag=1, staleness_decay=0.5, epsilon=1e9)
+    state = engine.init_state(PARAMS, fed, C)
+    inflight = {
+        "delta": jax.tree.map(lambda *xs: jnp.stack(xs), _const_delta(1.0),
+                              _const_delta(2.0), _const_delta(3.0),
+                              _const_delta(4.0)),
+        "valid": jnp.ones((D,), jnp.float32),
+        "age": jnp.asarray([3, 2, 1, 0], jnp.int32),
+    }
+    fresh = _const_delta(0.0)
+    p, _, nf, _, info = engine.async_apply(fed, PARAMS, state.opt_state,
+                                           inflight, fresh)
+    assert float(info["applied_valid"]) == 4.0
+    assert int(info["applied_age"]) == 4          # the oldest popped slot
+    # sgd server at lr 1: params moved by sum_i decay**age_i * delta_i with
+    # ages incremented to (4, 3, 2, 1) at pop time
+    expect = sum(0.5 ** a * v for a, v in zip((4, 3, 2, 1), (1, 2, 3, 4)))
+    for pl, p0 in zip(jax.tree.leaves(p), jax.tree.leaves(PARAMS)):
+        np.testing.assert_allclose(np.asarray(pl), np.asarray(p0) + expect,
+                                   rtol=1e-6)
+    # only the fresh push survives, at age 0
+    np.testing.assert_array_equal(np.asarray(nf["valid"]), [1, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(nf["age"]), [0, 0, 0, 0])
+
+
+def test_full_buffer_force_pops_oldest():
+    """No ready slot but the buffer is full: the oldest is force-popped
+    (FedBuff overflow) so the fresh delta always has a slot — nothing is
+    silently dropped or overwritten."""
+    D = 2
+    fed = _base(backend="scan_async", async_depth=D, async_mode="ready",
+                min_lag=2, staleness_decay=1.0, epsilon=1e9)
+    state = engine.init_state(PARAMS, fed, C)
+    # hand-built pathological state: full buffer, ages too young to be
+    # ready even after this round's increment... except the forced slot 0
+    inflight = {
+        "delta": jax.tree.map(lambda *xs: jnp.stack(xs), _const_delta(1.0),
+                              _const_delta(2.0)),
+        "valid": jnp.ones((D,), jnp.float32),
+        "age": jnp.asarray([0, 0], jnp.int32),
+    }
+    p, _, nf, _, info = engine.async_apply(fed, PARAMS, state.opt_state,
+                                           inflight, _const_delta(4.0))
+    assert float(info["applied_valid"]) == 1.0
+    assert int(info["applied_age"]) == 1
+    for pl, p0 in zip(jax.tree.leaves(p), jax.tree.leaves(PARAMS)):
+        np.testing.assert_allclose(np.asarray(pl), np.asarray(p0) + 1.0,
+                                   rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(nf["valid"]), [1, 1])
+    np.testing.assert_array_equal(np.asarray(nf["age"]), [1, 0])
+    # ...and the survivor really is the old slot-1 delta
+    for dl in jax.tree.leaves(jax.tree.map(lambda b: b[0], nf["delta"])):
+        np.testing.assert_allclose(np.asarray(dl), 2.0)
+
+
+def test_ready_drain_discounts_by_measured_age():
+    """Drain under the variable-lag buffer scales each straggler by its
+    CURRENT age, not the pipe depth."""
+    D = 3
+    fed = _base(backend="scan_async", async_depth=D, async_mode="ready",
+                min_lag=2, staleness_decay=0.5, epsilon=1e9)
+    state = engine.init_state(PARAMS, fed, C)
+    state = state.replace(inflight={
+        "delta": jax.tree.map(lambda *xs: jnp.stack(xs), _const_delta(1.0),
+                              _const_delta(2.0), _const_delta(9.0)),
+        "valid": jnp.asarray([1.0, 1.0, 0.0]),
+        "age": jnp.asarray([1, 0, 0], jnp.int32),
+    })
+    out = engine.drain_inflight(fed, state)
+    expect = 0.5 ** 1 * 1.0 + 0.5 ** 0 * 2.0      # invalid slot 2 ignored
+    for pl, p0 in zip(jax.tree.leaves(out.params), jax.tree.leaves(PARAMS)):
+        np.testing.assert_allclose(np.asarray(pl), np.asarray(p0) + expect,
+                                   rtol=1e-6)
+    assert float(jnp.sum(out.inflight["valid"])) == 0.0
+    assert float(jnp.sum(out.inflight["age"])) == 0.0
+
+
+# ================================================= adaptive drift discount
+def test_adaptive_discount_cos_clamp_and_fallback():
+    """The drift factor max(0, cos) against the last applied delta: 1 when
+    no reference exists yet (zero sketch), ~1 for an aligned delta, exactly
+    0 for an opposed one (the clamp — stale misaligned deltas are dropped,
+    never applied negatively)."""
+    fed = _base(backend="scan_async", async_depth=1, adaptive_staleness=True,
+                staleness_decay=1.0, sketch_dim=128, epsilon=1e9)
+    state = engine.init_state(PARAMS, fed, C)
+    d = _const_delta(0.25)
+    sk = engine.delta_sketch(d, engine.drift_sketch_key(fed), fed.sketch_dim)
+    inflight = {"delta": jax.tree.map(lambda x: x[None], d),
+                "valid": jnp.ones((1,), jnp.float32),
+                "age": jnp.zeros((1,), jnp.int32)}
+    zero_ref = jnp.zeros((fed.sketch_dim,), jnp.float32)
+    fresh = _const_delta(0.0)
+
+    for ref, factor in ((zero_ref, 1.0), (sk, 1.0), (-sk, 0.0)):
+        p, _, _, last, info = engine.async_apply(
+            fed, PARAMS, state.opt_state, inflight, fresh, last_delta=ref)
+        assert float(info["applied_valid"]) == 1.0    # popped either way
+        for pl, p0 in zip(jax.tree.leaves(p), jax.tree.leaves(PARAMS)):
+            np.testing.assert_allclose(np.asarray(pl),
+                                       np.asarray(p0) + factor * 0.25,
+                                       atol=1e-6)
+        if factor > 0:
+            # the reference advances to the delta that landed
+            np.testing.assert_allclose(np.asarray(last), np.asarray(sk),
+                                       rtol=1e-5)
+        else:
+            # a clamped delta must NOT become the reference — otherwise an
+            # oscillating stream (+d, -d, +d, ...) flips the reference
+            # every pop and zeroes every later update
+            np.testing.assert_array_equal(np.asarray(last), np.asarray(ref))
+
+
+@pytest.mark.parametrize("server_opt", ["none", "momentum", "adam"])
+def test_adaptive_oscillating_stream_keeps_moving(server_opt):
+    """Alternating +d/-d pops: the opposed ones are clamped but the
+    aligned ones keep landing — the drift reference never latches onto a
+    direction that was dropped, so training cannot silently freeze. A
+    clamped pop is dropped OPTIMIZER INCLUDED: under momentum/adam it
+    must not decay moments or tick adam's t (which would move params
+    along the stale residual on a round that claims to drop the delta)."""
+    fed = _base(backend="scan_async", async_depth=1, adaptive_staleness=True,
+                staleness_decay=1.0, sketch_dim=128, epsilon=1e9,
+                server_opt=server_opt)
+    state = engine.init_state(PARAMS, fed, C)
+    d = _const_delta(0.25)
+    neg = jax.tree.map(lambda x: -x, d)
+    params, opt, last = PARAMS, state.opt_state, state.last_delta
+    moved = []
+    for delta in (d, neg, d, neg, d):
+        inflight = {"delta": jax.tree.map(lambda x: x[None], delta),
+                    "valid": jnp.ones((1,), jnp.float32),
+                    "age": jnp.zeros((1,), jnp.int32)}
+        new_params, new_opt, _, last, _ = engine.async_apply(
+            fed, params, opt, inflight, _const_delta(0.0), last_delta=last)
+        stepped = any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(new_params),
+                            jax.tree.leaves(params)))
+        if not stepped:
+            # a dropped pop leaves the optimizer moments untouched too
+            for a, b in zip(jax.tree.leaves(new_opt), jax.tree.leaves(opt)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        moved.append(stepped)
+        params, opt = new_params, new_opt
+    # first +d lands (no reference yet); every -d is clamped; every later
+    # +d still lands because the reference stayed on the landed direction
+    assert moved == [True, False, True, False, True]
+
+
+def test_drift_sketch_deterministic_and_linear():
+    """The drift projection is ONE fixed key per run (fold_in_name/crc32 —
+    process-deterministic), shared by every sketch the cosine ever
+    compares; CountSketch linearity makes cos(sketch(d), sketch(-d))
+    exactly -1, which the factor clamps to 0."""
+    fed = _base(backend="scan_async", async_depth=1, adaptive_staleness=True)
+    np.testing.assert_array_equal(np.asarray(engine.drift_sketch_key(fed)),
+                                  np.asarray(engine.drift_sketch_key(fed)))
+    d = _const_delta(0.3)
+    s1 = engine.delta_sketch(d, engine.drift_sketch_key(fed), 64)
+    s2 = engine.delta_sketch(d, engine.drift_sketch_key(fed), 64)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    neg = engine.delta_sketch(jax.tree.map(lambda x: -x, d),
+                              engine.drift_sketch_key(fed), 64)
+    np.testing.assert_allclose(np.asarray(neg), -np.asarray(s1), rtol=1e-6)
+    assert float(engine.drift_factor(s1, s1)) == pytest.approx(1.0)
+    assert float(engine.drift_factor(s1, neg)) == 0.0
+    # a fresh run (different seed) projects differently
+    other = engine.drift_sketch_key(fed.replace(seed=123))
+    assert not np.array_equal(np.asarray(engine.drift_sketch_key(fed)),
+                              np.asarray(other))
+
+
+def test_adaptive_fifo_runs_and_checkpoints(tmp_path):
+    """adaptive_staleness composes with the fifo pipe: the run advances,
+    the last_delta sketch leaf is populated after the first apply, and the
+    full state (sketch included) round-trips bit-identically."""
+    fed = _base(backend="scan_async", async_depth=2, staleness_decay=0.9,
+                adaptive_staleness=True, sketch_dim=64, epsilon=1e9)
+    state, _ = _run(fed, "scan_async", r=0, rounds=4)
+    assert float(jnp.sum(jnp.abs(state.last_delta))) > 0.0
+    path = str(tmp_path / "adaptive.msgpack")
+    save_federation_state(path, state, jax.random.PRNGKey(7), 4)
+    got, _, step = load_federation_state(
+        path, engine.init_state(PARAMS, fed, C))
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ================================================= masks under staggering
@@ -259,6 +561,66 @@ def test_async_checkpoint_resume_mid_flight(tmp_path):
                                   np.asarray(resumed.global_loss))
 
 
+def test_ready_checkpoint_resume_heterogeneous_ages(tmp_path):
+    """Mid-flight resume of a VARIABLE-lag adaptive pipeline: the
+    interrupted buffer holds slots of different ages (and a live drift
+    sketch), and the resumed run is bit-identical to the uninterrupted
+    one."""
+    path = str(tmp_path / "ready.msgpack")
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=8, local_epochs=2,
+                    epsilon=0.3, lr=0.1, warmup_frac=0.0, batch_size=32,
+                    align_stat="loss", server_opt="adam", server_lr=0.3,
+                    max_cohort=5, backend="scan_async", async_depth=4,
+                    async_mode="ready", min_lag=2, staleness_decay=0.9,
+                    adaptive_staleness=True, sketch_dim=64)
+    full = run_federation(LOSS, PARAMS, fed, FEDN, eval_every=4)
+
+    half = run_federation(LOSS, PARAMS, fed.replace(rounds=5), FEDN,
+                          eval_every=4)
+    # the interrupted buffer really is heterogeneous: two slots in flight
+    # at DIFFERENT ages (steady-state occupancy is min_lag, not depth)
+    np.testing.assert_array_equal(np.asarray(half.state.inflight["valid"]),
+                                  [1, 1, 0, 0])
+    np.testing.assert_array_equal(np.asarray(half.state.inflight["age"]),
+                                  [1, 0, 0, 0])
+    assert float(jnp.sum(jnp.abs(half.state.last_delta))) > 0.0
+    save_federation_state(path, half.state, half.rng, 5)
+    state, rng, step = load_federation_state(
+        path, engine.init_state(PARAMS, fed, C))
+    for a, b in zip(jax.tree.leaves(half.state), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    resumed = run_federation(LOSS, None, fed, FEDN, eval_every=4,
+                             state=state, rng=rng, start_round=step)
+    for a, b in zip(jax.tree.leaves(full.state),
+                    jax.tree.leaves(resumed.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_after_drain_does_not_reapply(tmp_path):
+    """The drain/checkpoint double-apply hazard (PR 5 bugfix): with
+    ``drain_inflight=True`` and a checkpoint path, the final checkpoint
+    must hold the DRAINED state — resuming it and draining again must be a
+    no-op, not a second application of the same cohort deltas."""
+    path = str(tmp_path / "drained.msgpack")
+    fed = _base(backend="scan_async", async_depth=2, staleness_decay=0.9,
+                rounds=4, epsilon=1e9)
+    hist = run_federation(LOSS, PARAMS, fed, FEDN, eval_every=2,
+                          checkpoint_path=path, drain_inflight=True)
+    state, rng, step = load_federation_state(
+        path, engine.init_state(PARAMS, fed, C))
+    assert step == fed.rounds
+    # pre-fix this holds the un-drained buffer (occupancy 2): resuming and
+    # draining would re-apply both in-flight deltas
+    assert float(jnp.sum(state.inflight["valid"])) == 0.0
+    resumed = run_federation(LOSS, None, fed, FEDN, eval_every=2,
+                             state=state, rng=rng, start_round=step,
+                             drain_inflight=True)
+    for a, b in zip(jax.tree.leaves(hist.state.params),
+                    jax.tree.leaves(resumed.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_checkpoint_layout_mismatch_raises_helpfully(tmp_path):
     """Restoring an async checkpoint with the wrong async_depth (different
     in-flight layout) fails with an actionable error, not a bare assert."""
@@ -272,6 +634,39 @@ def test_checkpoint_layout_mismatch_raises_helpfully(tmp_path):
                                                   async_depth=3), C))
     with pytest.raises(ValueError, match="async_depth"):
         load_federation_state(path, engine.init_state(PARAMS, _base(), C))
+    # an adaptive resume of a non-adaptive checkpoint (missing last_delta
+    # sketch leaf) is a leaf-count mismatch, named as such
+    with pytest.raises(ValueError, match="adaptive_staleness"):
+        load_federation_state(
+            path, engine.init_state(PARAMS, fed.replace(
+                adaptive_staleness=True), C))
+
+
+def test_resume_with_wrong_async_mode_raises(tmp_path):
+    """async_mode/min_lag change NO leaf shape, so shape validation can't
+    catch a fifo resume of a ready-mode buffer — the checkpoint carries
+    the writer's buffer-policy fingerprint and the loader (given the
+    resume config) refuses a mismatch instead of silently popping the
+    restored slot ages on the wrong schedule."""
+    path = str(tmp_path / "policy.msgpack")
+    fed_w = _base(backend="scan_async", async_depth=2, async_mode="ready",
+                  min_lag=1)
+    st = engine.init_state(PARAMS, fed_w, C)
+    save_federation_state(path, st, jax.random.PRNGKey(0), 3, fed=fed_w)
+    like = engine.init_state(PARAMS, fed_w, C)
+    # matching config: fine, fingerprint round-trips
+    _, _, step = load_federation_state(path, like, fed=fed_w)
+    assert step == 3
+    for bad in (fed_w.replace(async_mode="fifo"),
+                fed_w.replace(min_lag=2)):
+        with pytest.raises(ValueError, match="async"):
+            load_federation_state(path, like, fed=bad)
+    # legacy behaviour: no fed passed -> shapes-only validation, accepted
+    load_federation_state(path, like)
+    # checkpoints written WITHOUT a fingerprint (fed=None writer) stay
+    # loadable under any policy — there is nothing to validate against
+    save_federation_state(path, st, jax.random.PRNGKey(0), 3)
+    load_federation_state(path, like, fed=fed_w.replace(async_mode="fifo"))
 
 
 # ================================================= sharded pod rounds
@@ -317,6 +712,69 @@ def test_sharded_async_rounds_pipeline():
                                            atol=1e-6)
 
 
+def _pod_batch(n=16):
+    """Tiny pod-round batch over the synth federation (logreg model — pod
+    rounds only need model.loss_fn, so the full smoke LM is unnecessary
+    for a strategies x modes sweep)."""
+    return {
+        "clients": {"x": DATA["x"][:, :n], "y": DATA["y"][:, :n]},
+        "server": {"x": DATA["x"][0, :n], "y": DATA["y"][0, :n]},
+        "priority_mask": PM,
+        "weights": W,
+    }
+
+
+class _TinyPodModel:
+    init = staticmethod(INIT)
+    loss_fn = staticmethod(LOSS)
+
+
+@pytest.mark.parametrize("selection", STRATEGIES)
+def test_pod_modes_fifo_and_depth0_parity(selection):
+    """Re-pin across EVERY strategy x both pod modes: the depth-0 async
+    config is bit-identical to the synchronous pod round, and the fifo
+    depth-1 pipe buffers round 0 (params frozen, staleness stat masked)
+    then lands the identical delta at round 1."""
+    from repro.fl import sharded
+
+    base = FedConfig(num_clients=C, num_priority=3, local_epochs=1,
+                     epsilon=1e9, lr=0.1, warmup_frac=0.0, topk=2,
+                     welfare_floor=0.05, selection=selection,
+                     grad_sim_sketch=True, sketch_dim=64)
+    batch = _pod_batch()
+    for mk in (sharded.make_spatial_round, sharded.make_temporal_round):
+        s0 = engine.init_state(PARAMS, base, C)
+        s_sync, t_sync = jax.jit(mk(_TinyPodModel, base, C))(s0, batch, 0)
+
+        fed0 = base.replace(backend="scan_async", async_depth=0)
+        s_a, t_a = jax.jit(mk(_TinyPodModel, fed0, C))(
+            engine.init_state(PARAMS, fed0, C), batch, 0)
+        np.testing.assert_array_equal(np.asarray(t_sync["gates"]),
+                                      np.asarray(t_a["gates"]))
+        assert "staleness" not in t_a          # sync stats structure
+        for a, b in zip(jax.tree.leaves(s_sync), jax.tree.leaves(s_a)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        fed1 = base.replace(backend="scan_async", async_depth=1,
+                            staleness_decay=1.0)
+        step1 = jax.jit(mk(_TinyPodModel, fed1, C))
+        st = engine.init_state(PARAMS, fed1, C)
+        st, t0 = step1(st, batch, 0)
+        assert float(t0["applied_valid"]) == 0.0
+        assert int(t0["staleness"]) == 0       # nothing landed: masked
+        for a, b in zip(jax.tree.leaves(st.params), jax.tree.leaves(PARAMS)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        st, t1 = step1(st, batch, 1)
+        assert float(t1["applied_valid"]) == 1.0
+        assert int(t1["staleness"]) == 1       # the measured slot age
+        # decay 1, deterministic local steps: the buffered round-0 delta
+        # lands unscaled — params equal one synchronous round
+        for a, b in zip(jax.tree.leaves(st.params),
+                        jax.tree.leaves(s_sync.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+
 def test_federation_state_specs_cover_inflight():
     """The pjit lowering seam: spec tree structure matches the async state
     structure, and every delta slot inherits its param's layout behind the
@@ -337,5 +795,16 @@ def test_federation_state_specs_cover_inflight():
                         jax.tree.leaves(specs.inflight["delta"],
                                         is_leaf=is_p)):
         assert tuple(dsp) == (None,) + tuple(psp)
+    # the per-slot age vector replicates like the validity mask
+    assert tuple(specs.inflight["age"]) == ()
+    assert specs.last_delta == ()               # not adaptive: no sketch
+    # adaptive runs add the replicated drift-reference sketch spec
+    fed_a = fed.replace(adaptive_staleness=True)
+    shapes_a = jax.eval_shape(lambda: engine.init_state(params, fed_a, C))
+    specs_a = federation_state_specs(fed_a, pspecs)
+    assert (jax.tree.structure(shapes_a)
+            == jax.tree.structure(specs_a, is_leaf=is_p))
+    assert tuple(specs_a.last_delta) == ()
     # sync configs keep the old layout
     assert federation_state_specs(FedConfig(), pspecs).inflight == ()
+    assert federation_state_specs(FedConfig(), pspecs).last_delta == ()

@@ -69,7 +69,9 @@ def test_checkpoint_roundtrip(tmp_path):
     params = jax.tree.map(lambda x: x + 1.5, params)
     path = str(tmp_path / "ckpt.msgpack")
     save_pytree(path, params, step=7)
-    restored, step = load_pytree(path, jax.tree.map(jnp.zeros_like, params))
+    restored, step, meta = load_pytree(path,
+                                       jax.tree.map(jnp.zeros_like, params))
     assert step == 7
+    assert meta is None                  # no writer metadata recorded
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
