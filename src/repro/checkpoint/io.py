@@ -62,9 +62,11 @@ def load_pytree(path: str, like: Any):
     or ``adaptive_staleness``, which allocates the drift-reference
     ``last_delta`` sketch leaf). Knobs whose mismatch changes NO leaf
     shape (``async_mode``/``min_lag`` — a fifo resume of a ready-mode
-    buffer would reinterpret the slot ages) can't be caught here; the
-    writer records them in the payload ``meta`` and
-    ``fl.simulator.load_federation_state(fed=...)`` validates them."""
+    buffer would reinterpret the slot ages — or ``aggregator``, whose
+    mismatch silently feeds the restored optimizer moments a differently
+    reduced delta stream) can't be caught here; the writer records them in
+    the payload ``meta`` and ``fl.simulator.load_federation_state(fed=...)``
+    validates them."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), object_hook=_decode, strict_map_key=False)
     leaves, treedef = jax.tree.flatten(like)

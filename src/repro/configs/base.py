@@ -295,6 +295,41 @@ class FedConfig:
                                       # rounds in FederationState.opt_state
     server_lr: float = 1.0
     server_momentum: float = 0.9
+    aggregator: str = "mean"          # Aggregator registry name
+                                      # (core/aggregation.py): how the gated
+                                      # client deltas are REDUCED, always in
+                                      # the one fused fedagg kernel launch:
+                                      # mean (paper eq. (15), default) |
+                                      # trimmed_mean | median (coordinate-
+                                      # wise robust order statistics,
+                                      # unweighted over included clients) |
+                                      # dp (per-client L2 clip + Gaussian
+                                      # noise, DP-FedAvg) | cosine_filter
+                                      # (drop delta-sketch outliers, then
+                                      # mean)
+    trim_frac: float = 0.1            # trimmed_mean: fraction of the n
+                                      # included clients trimmed from EACH
+                                      # side per coordinate
+                                      # (floor(trim_frac * n); must be
+                                      # < 0.5). Robust to up to
+                                      # floor(trim_frac * n) Byzantine
+                                      # clients
+    dp_clip: float = 1.0              # dp: per-client delta L2 clip bound S
+                                      # (the DP sensitivity); clients over
+                                      # the bound are scaled down, never up
+    dp_noise: float = 0.0             # dp: noise multiplier z — per-
+                                      # coordinate sigma is
+                                      # z * dp_clip / inclusion_mass on the
+                                      # renormalized mean. 0 = clip-only;
+                                      # (eps, delta) accounting over rounds
+                                      # is the caller's job (docs/engine.md)
+    outlier_cos: float = 0.0          # cosine_filter: clients whose sketch-
+                                      # estimated delta-direction cosine to
+                                      # the gated mean direction falls
+                                      # BELOW this are gated out for the
+                                      # round (0 drops anti-correlated
+                                      # deltas; sketches are sketch_dim
+                                      # CountSketches)
     server_b1: float = 0.9            # adam/yogi first-moment decay
     server_b2: float = 0.99           # adam/yogi second-moment decay
                                       # (FedOpt paper default)

@@ -10,13 +10,24 @@ client axis sharded over (pod, data) exactly one all-reduce: FedALIGN's
 entire server-side communication. Accumulation is f32 regardless of leaf
 dtype, so fused and per-leaf outputs agree to the cast.
 
-This module also owns the **ServerOptimizer registry**: the fused
-aggregated delta is a pseudo-gradient, and ``aggregate_updates`` applies
-the configured server-side update rule (FedOpt, Reddi et al.,
-arXiv:2003.00295) to it — ``sgd`` (FedAvg), ``momentum`` (FedAvgM),
-``adam`` (FedAdam), ``yogi`` (FedYogi) — reusing the update rules from
-``optim/optimizers.py``. Optimizer moments live in
-``fl.engine.FederationState.opt_state`` and thread through the round scan.
+This module also owns two registries:
+
+- the **ServerOptimizer registry**: the fused aggregated delta is a
+  pseudo-gradient, and ``aggregate_updates`` applies the configured
+  server-side update rule (FedOpt, Reddi et al., arXiv:2003.00295) to it —
+  ``sgd`` (FedAvg), ``momentum`` (FedAvgM), ``adam`` (FedAdam), ``yogi``
+  (FedYogi) — reusing the update rules from ``optim/optimizers.py``.
+  Optimizer moments live in ``fl.engine.FederationState.opt_state`` and
+  thread through the round scan.
+- the **Aggregator registry** (``FedConfig.aggregator``): how the gated
+  client deltas are REDUCED before the server step. ``mean`` is the paper
+  rule above; ``trimmed_mean`` / ``median`` are the coordinate-wise
+  Byzantine-robust order statistics (Yin et al., arXiv:1803.01498),
+  ``dp`` is DP-FedAvg clip+noise (McMahan et al., arXiv:1710.06963), and
+  ``cosine_filter`` zeroes the gates of delta-sketch outliers before the
+  plain mean. A registered aggregator is a PREPARE function producing
+  gate/weight rewrites and in-kernel operands — the reduction itself stays
+  one fused fedagg kernel launch per round for every variant.
 """
 from __future__ import annotations
 
@@ -27,6 +38,37 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 from repro.optim import optimizers as _opt
+from repro.utils import fold_in_name
+
+
+def check_client_weights(weights, *, where="client weights"):
+    """Validate CONCRETE client weights at the aggregation boundary.
+
+    A negative p_k silently sign-flips that client's contribution (the
+    renormalized mean subtracts it); a NaN/inf poisons the whole aggregate.
+    Neither is ever a legitimate data fraction, so both fail loudly here.
+    Traced values (inside jit) pass through unchecked — jitted callers
+    validate at their host-side entry points (fl/simulator, launch/train)
+    where the weights are still concrete.
+    """
+    if isinstance(weights, jax.core.Tracer):
+        return weights
+    import numpy as np
+    w = np.asarray(weights)
+    if not np.all(np.isfinite(w)):
+        bad = np.flatnonzero(~np.isfinite(w))
+        raise ValueError(
+            f"{where} must be finite: clients {bad.tolist()} are NaN/inf. "
+            "Check the shard spec / data-fraction computation that produced "
+            "them — a NaN weight poisons every aggregated parameter.")
+    if np.any(w < 0):
+        bad = np.flatnonzero(w < 0)
+        raise ValueError(
+            f"{where} must be non-negative: clients {bad.tolist()} have "
+            f"negative weight (min {w.min()}). A negative data fraction "
+            "sign-flips that client's update in the renormalized mean; fix "
+            "the shard spec instead of aggregating with it.")
+    return weights
 
 
 def flatten_stacked(client_params, dtype=jnp.float32):
@@ -38,24 +80,55 @@ def flatten_stacked(client_params, dtype=jnp.float32):
 
 
 def aggregate_clients(client_params, weights, gates, *, use_pallas=False,
-                      fused=True, interpret=False):
+                      fused=True, interpret=False, aggregator="mean",
+                      fed=None, key=None):
     """client_params: pytree with leading client axis C on every leaf.
 
     fused=True (default): one fedagg call on the [C, M_total] flattening;
     fused=False: one fedagg call per leaf (the pre-fusion path, kept as the
-    parity reference and for incremental/per-leaf sharded layouts)."""
+    parity reference and for incremental/per-leaf sharded layouts).
+
+    ``aggregator`` names a registered Aggregator (mean | trimmed_mean |
+    median | dp | cosine_filter). Non-mean aggregators read their knobs off
+    ``fed`` and interpret the client rows as DELTAS (clip norms, outlier
+    cosines); ``dp`` additionally needs a PRNG ``key`` for its per-round
+    noise draw. Whatever the variant, the reduction stays one fedagg call
+    (fused) or one per leaf — the robust work happens inside the kernel,
+    plus an O(C * sketch_dim) gate pre-pass for cosine_filter."""
+    check_client_weights(weights)
     leaves, treedef = jax.tree.flatten(client_params)
     if not leaves:
         return client_params
     C = leaves[0].shape[0]
 
+    name = resolve_aggregator(aggregator)
+    if name != "mean":
+        if fed is None:
+            raise ValueError(
+                f"aggregator={name!r} reads its knobs (trim_frac/dp_clip/"
+                "dp_noise/outlier_cos/sketch_dim) off a FedConfig: pass fed=")
+        weights, gates, kernel_kw, noise = get_aggregator(name)(
+            fed, client_params, weights, gates, key)
+    else:
+        kernel_kw, noise = {}, None
+
     if not fused:
-        def agg_leaf(leaf):
-            flat = leaf.reshape(C, -1)
-            out = kops.fedagg(flat, weights, gates, use_pallas=use_pallas,
-                              interpret=interpret)
-            return out.reshape(leaf.shape[1:])
-        return jax.tree.map(agg_leaf, client_params)
+        # per-leaf path: the dp noise vector is ONE [M_total] draw sliced at
+        # each leaf's offset, so per-leaf == fused bit-for-bit per coordinate
+        sizes = [leaf.size // C for leaf in leaves]
+        offs, off = [], 0
+        for size in sizes:
+            offs.append(off)
+            off += size
+        agg_leaves = []
+        for leaf, size, off in zip(leaves, sizes, offs):
+            kw = dict(kernel_kw)
+            if noise is not None:
+                kw["noise"] = noise[off:off + size]
+            out = kops.fedagg(leaf.reshape(C, -1), weights, gates,
+                              use_pallas=use_pallas, interpret=interpret, **kw)
+            agg_leaves.append(out.reshape(leaf.shape[1:]))
+        return jax.tree.unflatten(treedef, agg_leaves)
 
     # keep a uniform leaf dtype on the wire (bf16 deltas stay bf16 in the
     # [C, M_total] buffer and its collective); mixed-dtype trees go f32.
@@ -65,13 +138,191 @@ def aggregate_clients(client_params, weights, gates, *, use_pallas=False,
     sizes = [leaf.size // C for leaf in leaves]
     buf = flatten_stacked(client_params, dtype=buf_dtype)
     out = kops.fedagg(buf, weights, gates, use_pallas=use_pallas,
-                      interpret=interpret)
+                      interpret=interpret, noise=noise, **kernel_kw)
     agg_leaves, off = [], 0
     for leaf, size in zip(leaves, sizes):
         agg_leaves.append(
             out[off:off + size].reshape(leaf.shape[1:]).astype(leaf.dtype))
         off += size
     return jax.tree.unflatten(treedef, agg_leaves)
+
+
+# ================================================================ aggregators
+AGGREGATORS: dict[str, Callable] = {}
+
+
+def register_aggregator(name: str, *, needs_key=False, in_kernel=True):
+    """Register a client-delta Aggregator under ``name``.
+
+    The registered callable is a PREPARE step
+    ``prepare(fed, client_deltas, weights, gates, key)
+        -> (weights, gates, kernel_kw, noise)``
+    run once per round before the fused fedagg call: it may rewrite the
+    weight/gate vectors (cosine_filter), attach extra in-kernel operands
+    (dp's per-client clip scales), and return a [M_total] noise vector that
+    the fused/per-leaf dispatcher slices per leaf. ``kernel_kw`` is passed
+    straight to ``kernels.ops.fedagg`` — the reduction itself runs inside
+    the kernel (``in_kernel`` aggregators add zero extra HBM passes over
+    the [C, M_total] buffer). ``needs_key=True`` marks stochastic
+    aggregators: the round loop derives a per-round key
+    (``aggregator_key``) only for those, so deterministic traces are
+    untouched."""
+    def deco(prepare):
+        prepare.agg_name = name
+        prepare.needs_key = needs_key
+        prepare.in_kernel = in_kernel
+        AGGREGATORS[name] = prepare
+        return prepare
+    return deco
+
+
+def resolve_aggregator(name) -> str:
+    """Canonical registry name ('none' / None is the plain gated mean)."""
+    return "mean" if name in (None, "none") else name
+
+
+def get_aggregator(name: str) -> Callable:
+    name = resolve_aggregator(name)
+    try:
+        return AGGREGATORS[name]
+    except KeyError:
+        raise ValueError(f"unknown aggregator {name!r}; "
+                         f"registered: {sorted(AGGREGATORS)}") from None
+
+
+def aggregator_key(fed, round_idx):
+    """Per-round PRNG key for stochastic aggregators (dp's noise draw).
+
+    Derived from ``fed.seed`` via ``fold_in_name`` (crc32 — deterministic
+    across processes) + the round index, and computed IDENTICALLY by the
+    engine round and both sharded pod rounds, so every backend draws the
+    same noise and stays bit-comparable."""
+    base = fold_in_name(jax.random.PRNGKey(fed.seed), "aggregator_noise")
+    return jax.random.fold_in(base, round_idx)
+
+
+def inclusion_mass(fed, weights, gates):
+    """The configured aggregator's denominator mass for a round — the
+    aggregate can be nonzero iff this is > 0 (the zero-inclusion
+    ServerOptimizer skip keys off it). mean/dp/cosine_filter renormalize
+    by sum p_k I_k; trimmed_mean/median are unweighted order statistics
+    over the included clients, so their mass is the included COUNT (a
+    zero-weight included client still moves the median)."""
+    name = resolve_aggregator(getattr(fed, "aggregator", "mean"))
+    if name in ("trimmed_mean", "median"):
+        return jnp.sum((gates > 0).astype(jnp.float32))
+    return jnp.sum(weights.astype(jnp.float32) * gates.astype(jnp.float32))
+
+
+def check_aggregator_config(fed):
+    """Validate the aggregator knobs whose bad values would corrupt the
+    aggregate silently (like check_async_config for the async knobs)."""
+    name = resolve_aggregator(fed.aggregator)
+    get_aggregator(name)
+    if name == "trimmed_mean" and not 0.0 <= fed.trim_frac < 0.5:
+        raise ValueError(
+            f"FedConfig.trim_frac={fed.trim_frac} outside [0, 0.5): trimming "
+            "half or more from each side leaves no survivors for any n")
+    if name == "dp":
+        if fed.dp_clip <= 0:
+            raise ValueError(
+                f"FedConfig.dp_clip={fed.dp_clip} must be > 0: the clip bound "
+                "is the DP sensitivity; 0 would zero every client delta")
+        if fed.dp_noise < 0:
+            raise ValueError(
+                f"FedConfig.dp_noise={fed.dp_noise} must be >= 0 "
+                "(noise multiplier z; 0 = clip-only)")
+    if name == "cosine_filter":
+        if not -1.0 <= fed.outlier_cos <= 1.0:
+            raise ValueError(
+                f"FedConfig.outlier_cos={fed.outlier_cos} outside [-1, 1]: "
+                "it is compared against cosine similarities")
+        if fed.sketch_dim <= 0:
+            raise ValueError(
+                "cosine_filter scores clients on sketch_dim CountSketches; "
+                f"FedConfig.sketch_dim={fed.sketch_dim} must be > 0")
+
+
+def _delta_sq_norms(client_deltas):
+    """Per-client squared L2 norm over the WHOLE delta pytree -> [C] f32."""
+    leaves = jax.tree.leaves(client_deltas)
+    C = leaves[0].shape[0]
+    tot = jnp.zeros((C,), jnp.float32)
+    for leaf in leaves:
+        x = leaf.reshape(C, -1).astype(jnp.float32)
+        tot = tot + jnp.sum(x * x, axis=1)
+    return tot
+
+
+@register_aggregator("mean")
+def _agg_mean(fed, client_deltas, weights, gates, key):
+    # the paper's renormalized gated weighted mean — the kernel default
+    return weights, gates, {}, None
+
+
+@register_aggregator("trimmed_mean")
+def _agg_trimmed(fed, client_deltas, weights, gates, key):
+    return weights, gates, dict(aggregator="trimmed_mean",
+                                trim_frac=float(fed.trim_frac)), None
+
+
+@register_aggregator("median")
+def _agg_median(fed, client_deltas, weights, gates, key):
+    return weights, gates, dict(aggregator="median"), None
+
+
+@register_aggregator("dp", needs_key=True)
+def _agg_dp(fed, client_deltas, weights, gates, key):
+    """DP-FedAvg: clip each client delta to L2 <= dp_clip (a per-client
+    multiplicative factor folded into the kernel's weighted contraction),
+    add N(0, (dp_noise * dp_clip / inclusion_mass)^2) per coordinate.
+
+    The noise is drawn OUTSIDE the kernel (one [M_total] jax.random draw
+    per round) so the Pallas kernel and the jnp lowering see the very same
+    vector — the in-kernel TPU PRNG would break CPU/TPU parity. Accounting
+    caveat: dp_noise is the raw noise multiplier z; composing (eps, delta)
+    over rounds (moments accountant) is out of scope here."""
+    if key is None:
+        raise ValueError(
+            "aggregator='dp' draws per-round Gaussian noise and needs the "
+            "round key: thread key=aggregator_key(fed, round_idx) through "
+            "aggregate_clients/aggregate_delta")
+    norms = jnp.sqrt(_delta_sq_norms(client_deltas))
+    row_scale = jnp.minimum(1.0, fed.dp_clip / jnp.maximum(norms, 1e-12))
+    M = sum(leaf.size for leaf in jax.tree.leaves(client_deltas))
+    C = jax.tree.leaves(client_deltas)[0].shape[0]
+    noise = jax.random.normal(key, (M // C,), jnp.float32)
+    kw = dict(aggregator="dp", row_scale=row_scale,
+              noise_scale=float(fed.dp_noise) * float(fed.dp_clip))
+    return weights, gates, kw, noise
+
+
+@register_aggregator("cosine_filter", in_kernel=False)
+def _agg_cosine(fed, client_deltas, weights, gates, key):
+    """Zero the gate of clients whose delta DIRECTION disagrees with the
+    cohort: cosines are estimated on sketch_dim CountSketches (one O(M)
+    pass per client, reusing engine.delta_sketch), so the similarity pass
+    is O(C * sketch_dim) — never [C, C] on full deltas. The reference is
+    the gated weighted mean of the per-client NORMALIZED sketches (the
+    mean direction): normalizing first means a norm-boosted Byzantine
+    client cannot buy reference mass, which a raw-delta mean would grant
+    it. Clients with cos < fed.outlier_cos are dropped for the round; the
+    reduction then proceeds as the plain gated mean (same single kernel
+    launch, this is purely a gate rewrite)."""
+    from repro.fl.engine import delta_sketch
+    skey = fold_in_name(jax.random.PRNGKey(fed.seed), "aggregator_cosine_sketch")
+    sk = jax.vmap(lambda d: delta_sketch(d, skey, fed.sketch_dim))(client_deltas)
+    norms = jnp.sqrt(jnp.sum(sk * sk, axis=1))
+    dirs = sk / jnp.maximum(norms, 1e-12)[:, None]
+    wg = (weights * gates).astype(jnp.float32)
+    # mask excluded rows before the weighted mean: a non-finite delta
+    # behind gate 0 sketches to NaN and 0 * NaN would poison the reference
+    ref = (jnp.einsum("c,cd->d", wg, jnp.where((wg > 0)[:, None], dirs, 0.0))
+           / jnp.maximum(jnp.sum(wg), 1e-30))
+    ref = ref / jnp.maximum(jnp.sqrt(jnp.sum(ref * ref)), 1e-12)
+    cos = dirs @ ref
+    keep = (cos >= fed.outlier_cos).astype(gates.dtype)
+    return weights, gates * keep, {}, None
 
 
 # ========================================================= server optimizers
@@ -162,26 +413,32 @@ def apply_server_opt(fed, global_params, opt_state, agg_delta, *, scale=1.0):
 
 
 def aggregate_delta(global_params, client_params, weights, gates, *,
-                    fed, interpret=False):
+                    fed, interpret=False, key=None):
     """Delta-form gated aggregation WITHOUT the server step:
 
         d <- agg(cast(w_k - w, fed.agg_dtype))      (ONE fused fedagg call)
 
-    Returns the aggregated global delta (leaves in ``fed.agg_dtype``).
-    This is the seam the ``scan_async`` backend buffers: an in-flight
-    cohort is exactly one of these deltas awaiting its (staleness-
-    discounted) ``apply_server_opt`` some rounds later. ``client_params``
+    Returns the aggregated global delta (leaves in ``fed.agg_dtype``),
+    reduced by the configured ``fed.aggregator`` (``key`` feeds stochastic
+    aggregators — pass ``aggregator_key(fed, round_idx)`` when
+    ``get_aggregator(fed.aggregator).needs_key``). This is the seam the
+    ``scan_async`` backend buffers: an in-flight cohort is exactly one of
+    these deltas awaiting its (staleness-discounted) ``apply_server_opt``
+    some rounds later — the robust/private reduction happens at PUSH time,
+    so every aggregator commutes with the async buffer. ``client_params``
     may live in cohort space [K, ...] (zero gates drop padding slots)."""
     ad = jnp.dtype(fed.agg_dtype)
     deltas = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
                           client_params, global_params)
     return aggregate_clients(deltas, weights, gates,
                              use_pallas=fed.use_pallas,
-                             fused=fed.fused_agg, interpret=interpret)
+                             fused=fed.fused_agg, interpret=interpret,
+                             aggregator=getattr(fed, "aggregator", "mean"),
+                             fed=fed, key=key)
 
 
 def aggregate_updates(global_params, client_params, weights, gates, *,
-                      fed, opt_state=(), interpret=False):
+                      fed, opt_state=(), interpret=False, key=None):
     """Delta-form gated aggregation + the configured server optimizer:
 
         d  <- aggregate_delta(...)                  (ONE fused fedagg call)
@@ -190,5 +447,5 @@ def aggregate_updates(global_params, client_params, weights, gates, *,
     Returns (new_params, new_opt_state). ``fed.agg_dtype`` selects the
     reduced-precision delta wire format; accumulation is f32 either way."""
     agg = aggregate_delta(global_params, client_params, weights, gates,
-                          fed=fed, interpret=interpret)
+                          fed=fed, interpret=interpret, key=key)
     return apply_server_opt(fed, global_params, opt_state, agg)

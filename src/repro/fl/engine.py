@@ -90,8 +90,11 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import (aggregate_delta, apply_server_opt,
-                                    flatten_stacked, server_optimizer)
+from repro.core.aggregation import (aggregate_delta, aggregator_key,
+                                    apply_server_opt, check_aggregator_config,
+                                    flatten_stacked, get_aggregator,
+                                    inclusion_mass, resolve_aggregator,
+                                    server_optimizer)
 from repro.core.alignment import epsilon_at, global_loss_from_locals
 from repro.optim.schedules import make_schedule
 from repro.utils import tree_axpy
@@ -435,19 +438,24 @@ def inclusion_update(fed, incl_ema, eff_gates):
     return beta * incl_ema + (1.0 - beta) * eff_gates.astype(jnp.float32)
 
 
-def server_delta(fed, global_params, client_params, weights, gates):
+def server_delta(fed, global_params, client_params, weights, gates, *,
+                 key=None):
     """(6a) renormalized gated delta aggregation: one fused fedagg on the
     gated client deltas, honouring ``fed.agg_dtype``'s reduced-precision
     wire format, WITHOUT the ServerOptimizer step. The synchronous round
     applies the result immediately (``apply_server_opt``); the
     ``scan_async`` round pushes it into the in-flight buffer instead
-    (``async_apply``). ``client_params``/``weights``/``gates`` may live in
-    cohort space [K, ...]: zero gates drop padding slots, so the result
-    matches the dense [C, ...] aggregation whenever every included client
-    made the cohort. THE aggregation-routing seam — the sharded pod rounds
-    call it too (core/aggregation.aggregate_delta)."""
+    (``async_apply``) — the reduction runs at PUSH time, so every
+    registered ``fed.aggregator`` (robust, dp, cosine-filtered) commutes
+    with the buffer for free. ``key`` feeds stochastic aggregators
+    (``aggregator_key(fed, round_idx)`` for dp noise).
+    ``client_params``/``weights``/``gates`` may live in cohort space
+    [K, ...]: zero gates drop padding slots, so the result matches the
+    dense [C, ...] aggregation whenever every included client made the
+    cohort. THE aggregation-routing seam — the sharded pod rounds call it
+    too (core/aggregation.aggregate_delta)."""
     return aggregate_delta(global_params, client_params, weights, gates,
-                           fed=fed)
+                           fed=fed, key=key)
 
 
 def staleness_discount(fed, age=None):
@@ -761,7 +769,8 @@ _BACKENDS = {
 
 
 # ============================================================ the round
-def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> Callable:
+def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
+                  delta_transform: Optional[Callable] = None) -> Callable:
     """loss_fn(params, batch) -> (loss, metrics); batch = {'x','y'} (or tokens).
 
     Returns round_fn(state, data, priority_mask, weights, rng, round_idx)
@@ -769,6 +778,14 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
     ``init_state``). ``data`` leaves have leading client axis [C, n, ...].
     ``backend`` defaults to ``fed.backend``; both backends produce
     identical rounds.
+
+    ``delta_transform(client_params, global_params, client_idx) ->
+    client_params`` is an adversarial-injection seam for benchmarks/tests
+    ONLY: it rewrites the trained client params right before aggregation
+    (``client_idx`` carries client IDENTITIES, so cohort-space rounds can
+    target specific clients). The Byzantine attack rows in
+    benchmarks/bench_round.py use it to model scaled-delta attackers that
+    the loss-gap gate cannot see; production rounds leave it None.
 
     Round order depends on the strategy. Strategies that gate from the eval
     pre-pass alone (``not needs_deltas``) run **eval -> gates -> train**:
@@ -802,6 +819,10 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
             "own round barrier and would silently ignore the in-flight "
             "buffer (set async_depth=0 or backend='scan_async')")
     check_async_config(fed)
+    check_aggregator_config(fed)
+    # stochastic aggregators (dp) get a per-round key; deterministic ones
+    # keep a key-free trace (python-level branch, not a traced cond)
+    agg_needs_key = get_aggregator(fed.aggregator).needs_key
     eval_clients, train_clients = _BACKENDS[backend]
     strategy = get_strategy(fed.selection)
     solver = local_solver(loss_fn, fed)
@@ -845,6 +866,8 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
         rng, lkey = jax.random.split(rng)
         lkeys = jax.random.split(lkey, C)
 
+        akey = aggregator_key(fed, round_idx) if agg_needs_key else None
+
         def make_ctx(delta_cos=None):
             return SelectionContext(
                 align_vals=align_vals, global_align=g_align, eps=eps,
@@ -870,19 +893,33 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
                     solver, global_params,
                     jax.tree.map(lambda a: a[cohort_idx], data),
                     lkeys[cohort_idx], lr, gates=cohort_gates)
+                if delta_transform is not None:
+                    cohort_params = delta_transform(cohort_params,
+                                                    global_params, cohort_idx)
+                agg_w, agg_g = weights[cohort_idx], cohort_gates
                 agg_delta = server_delta(fed, global_params, cohort_params,
-                                         weights[cohort_idx], cohort_gates)
+                                         agg_w, agg_g, key=akey)
             else:
                 # (5) dense: everyone trains, but the scan backend still
                 # cond-skips gated-out clients (no epochs for gate 0)
                 client_params = train_clients(solver, global_params, data,
                                               lkeys, lr, gates=gates)
+                if delta_transform is not None:
+                    client_params = delta_transform(client_params,
+                                                    global_params,
+                                                    jnp.arange(C))
+                agg_w, agg_g = weights, gates
                 agg_delta = server_delta(fed, global_params, client_params,
-                                         weights, gates)
+                                         agg_w, agg_g, key=akey)
         else:
             # (5) train-first: the statistic needs the client updates
             sel_gates = None
             client_params = train_clients(solver, global_params, data, lkeys, lr)
+            if delta_transform is not None:
+                # before the delta statistic on purpose: a realistic attacker
+                # influences grad_sim scores with the very delta it submits
+                client_params = delta_transform(client_params, global_params,
+                                                jnp.arange(C))
             deltas = jax.tree.map(lambda ck, g: ck - g[None],
                                   client_params, global_params)
             if fed.grad_sim_sketch:
@@ -897,8 +934,9 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
                                                weights, priority_mask)
             # (4) gates from the selection strategy (core/alignment rule et al.)
             gates = compute_gates(make_ctx(delta_cos), fed.selection)
+            agg_w, agg_g = weights, gates
             agg_delta = server_delta(fed, global_params, client_params,
-                                     weights, gates)
+                                     agg_w, agg_g, key=akey)
 
         # (6) apply — at the round barrier (sync, and scan_async at depth
         # 0), or through the in-flight buffer's readiness policy
@@ -908,8 +946,18 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None) -> C
                 fed, global_params, state.opt_state, state.inflight,
                 agg_delta, last_delta=state.last_delta)
         else:
-            new_global, opt_state = apply_server_opt(
-                fed, global_params, state.opt_state, agg_delta)
+            # zero-inclusion rounds (every gate 0 — e.g. participation
+            # sampling missed everyone outside warm-up) must be true no-ops:
+            # running the optimizer on the all-zero delta would still decay
+            # momentum and tick adam/yogi's step count. Skip the whole
+            # ServerOptimizer apply when the aggregator's inclusion mass is
+            # zero, leaving params AND moments bit-identical.
+            mass = inclusion_mass(fed, agg_w, agg_g)
+            new_global, opt_state = jax.lax.cond(
+                mass > 0,
+                lambda: apply_server_opt(fed, global_params, state.opt_state,
+                                         agg_delta),
+                lambda: (global_params, state.opt_state))
             inflight = state.inflight
             last_delta = state.last_delta
 

@@ -63,7 +63,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import apply_server_opt, flatten_stacked
+from repro.core.aggregation import (aggregator_key, apply_server_opt,
+                                    check_aggregator_config, flatten_stacked,
+                                    get_aggregator, inclusion_mass,
+                                    resolve_aggregator)
 from repro.core.alignment import epsilon_at
 from repro.fl import engine
 from repro.utils import tree_axpy, tree_sub
@@ -123,20 +126,30 @@ def _next_state(fed, state, new_params, opt_state, sel_gates, eff_gates,
         last_delta=state.last_delta if last_delta is None else last_delta)
 
 
-def _apply_delta(fed, state, params, agg_delta):
+def _apply_delta(fed, state, params, agg_delta, mass=None):
     """Apply an aggregated global delta the way the engine would: at the
     round barrier when ``fed.async_depth == 0``, or through the
     FederationState in-flight buffer's pop policy (``engine.async_apply``,
     THE staleness state machine — fifo pipe or variable-lag readiness
     pops, no pod/simulator drift) when the pod round runs overlapped
-    cohorts. Returns (new_params, opt_state, inflight, last_delta,
-    info | None)."""
+    cohorts. ``mass`` is the aggregator's inclusion mass for the round
+    (``aggregation.inclusion_mass`` / the temporal round's streamed
+    denominator): when given, a zero-mass round skips the ServerOptimizer
+    entirely — params AND moments stay bit-identical instead of momentum
+    decaying on an all-zero delta. Returns (new_params, opt_state,
+    inflight, last_delta, info | None)."""
     if fed.async_depth > 0:
         return engine.async_apply(fed, params, state.opt_state,
                                   state.inflight, agg_delta,
                                   last_delta=state.last_delta)
-    new_params, opt_state = apply_server_opt(fed, params, state.opt_state,
-                                             agg_delta)
+    if mass is None:
+        new_params, opt_state = apply_server_opt(fed, params, state.opt_state,
+                                                 agg_delta)
+    else:
+        new_params, opt_state = jax.lax.cond(
+            mass > 0,
+            lambda: apply_server_opt(fed, params, state.opt_state, agg_delta),
+            lambda: (params, state.opt_state))
     return new_params, opt_state, state.inflight, state.last_delta, None
 
 
@@ -168,6 +181,8 @@ def make_spatial_round(model, fed, num_clients: int):
     E = fed.local_epochs
     lr = fed.lr
     engine.check_async_config(fed)
+    check_aggregator_config(fed)
+    agg_needs_key = get_aggregator(fed.aggregator).needs_key
     strategy = engine.get_strategy(fed.selection)
     use_cohort = fed.max_cohort > 0 and not strategy.needs_deltas
 
@@ -179,6 +194,7 @@ def make_spatial_round(model, fed, num_clients: int):
         C = pm.shape[0]
 
         server_loss, _ = model.loss_fn(params, batch["server"])
+        akey = aggregator_key(fed, round_idx) if agg_needs_key else None
 
         if use_cohort:
             # eval -> gates -> gather-train: only K cohort slots pay E steps
@@ -195,8 +211,9 @@ def make_spatial_round(model, fed, num_clients: int):
             cohort_params = jax.vmap(
                 lambda cb: _train_steps(model, params, cb, lr, E))(
                 jax.tree.map(lambda a: a[idx], client_batch))
+            agg_w, agg_g = w[idx], cg
             agg_delta = engine.server_delta(fed, params, cohort_params,
-                                            w[idx], cg)
+                                            agg_w, agg_g, key=akey)
         else:
             client_params, local_losses = jax.vmap(
                 lambda cb: _local_steps(model, params, cb, lr, E))(client_batch)
@@ -220,10 +237,12 @@ def make_spatial_round(model, fed, num_clients: int):
                 _gate_ctx(fed, state, util_ema, local_losses, server_loss,
                           pm, w, delta_cos, round_idx=round_idx),
                 fed.selection)
-            agg_delta = engine.server_delta(fed, params, client_params, w,
-                                            gates)
+            agg_w, agg_g = w, gates
+            agg_delta = engine.server_delta(fed, params, client_params,
+                                            agg_w, agg_g, key=akey)
         new_params, opt_state, inflight, last_delta, applied = _apply_delta(
-            fed, state, params, agg_delta)
+            fed, state, params, agg_delta,
+            mass=inclusion_mass(fed, agg_w, agg_g))
         new_state = _next_state(fed, state, new_params, opt_state,
                                 sel_gates, gates, util_ema, inflight=inflight,
                                 last_delta=last_delta)
@@ -253,10 +272,25 @@ def make_temporal_round(model, fed, cohort: int):
     deterministic local steps of the included clients to accumulate their
     gated updates. Cost: one extra pass of E local steps for included
     clients — the price of scoring without materializing per-client deltas.
+
+    **Robust/private aggregators gather the client axis.** The streaming
+    weighted-sum carry above only exists for the (linear) gated mean;
+    coordinate-wise trimmed_mean/median are order statistics ACROSS
+    clients, dp clips on whole-delta norms, and cosine_filter compares
+    client directions — none decompose into a running sum. With
+    ``fed.aggregator != "mean"`` the scan therefore stacks every client's
+    trained params as its ys output — a deliberate resharding that
+    materializes [C, ...] leaves (asserted below), the one place the
+    temporal round pays spatial-round memory — and routes them through
+    ``engine.server_delta`` (the same fused fedagg call as the spatial
+    round, so the two pod modes stay bit-comparable per aggregator).
     """
     E = fed.local_epochs
     lr = fed.lr
     engine.check_async_config(fed)
+    check_aggregator_config(fed)
+    robust_gather = resolve_aggregator(fed.aggregator) != "mean"
+    agg_needs_key = get_aggregator(fed.aggregator).needs_key
     strategy = engine.get_strategy(fed.selection)
     if strategy.needs_deltas and not fed.grad_sim_sketch:
         raise ValueError(
@@ -298,33 +332,64 @@ def make_temporal_round(model, fed, cohort: int):
             _gate_ctx(fed, state, util_ema, local_losses, server_loss, pm, w,
                       delta_cos, round_idx=round_idx), fed.selection)
 
-        def per_client(carry, inp):
-            acc_num, acc_den = carry
-            cbatch, w_k, gate = inp
-            # gates are fixed before the scan, so gated-out streamed clients
-            # skip their E local steps entirely (cond, not select: scan
-            # bodies are traced once and branch at run time)
-            p_k = jax.lax.cond(
-                gate > 0,
-                lambda b: _train_steps(model, params, b, lr, E),
-                lambda b: params, cbatch)
-            wg = w_k * gate
-            acc_num = jax.tree.map(
-                lambda a, pk: a + wg * pk.astype(jnp.float32), acc_num, p_k)
-            return (acc_num, acc_den + wg), None
+        if robust_gather:
+            # robust/private aggregators need every client's delta at once
+            # (order statistics / whole-delta norms / direction cosines):
+            # stack the trained params as scan ys — the documented [C, ...]
+            # resharding — and reduce through THE fused fedagg seam.
+            def per_client_stack(carry, inp):
+                cbatch, gate = inp
+                p_k = jax.lax.cond(
+                    gate > 0,
+                    lambda b: _train_steps(model, params, b, lr, E),
+                    lambda b: params, cbatch)
+                return carry, p_k
 
-        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (num, den), _ = jax.lax.scan(
-            per_client, (zeros, jnp.float32(0)),
-            (batch["clients"], w, gates))
-        # streamed aggregation accumulates f32 in the carry; the aggregated
-        # DELTA then feeds the same ServerOptimizer step as the fused path
-        # (or the in-flight buffer, when the round runs overlapped cohorts)
-        agg_delta = jax.tree.map(
-            lambda n, p: n / jnp.maximum(den, 1e-30) - p.astype(jnp.float32),
-            num, params)
+            _, stacked = jax.lax.scan(per_client_stack, 0,
+                                      (batch["clients"], gates))
+            C = w.shape[0]
+            for s, p in zip(jax.tree.leaves(stacked), jax.tree.leaves(params)):
+                assert s.shape == (C,) + p.shape, (
+                    "temporal robust aggregation must gather the client axis: "
+                    f"expected {(C,) + p.shape}, got {s.shape}")
+            akey = aggregator_key(fed, round_idx) if agg_needs_key else None
+            agg_delta = engine.server_delta(fed, params, stacked, w, gates,
+                                            key=akey)
+            mass = inclusion_mass(fed, w, gates)
+        else:
+            def per_client(carry, inp):
+                acc_num, acc_den = carry
+                cbatch, w_k, gate = inp
+                # gates are fixed before the scan, so gated-out streamed
+                # clients skip their E local steps entirely (cond, not
+                # select: scan bodies are traced once and branch at run time)
+                p_k = jax.lax.cond(
+                    gate > 0,
+                    lambda b: _train_steps(model, params, b, lr, E),
+                    lambda b: params, cbatch)
+                wg = w_k * gate
+                acc_num = jax.tree.map(
+                    lambda a, pk: a + wg * pk.astype(jnp.float32), acc_num, p_k)
+                return (acc_num, acc_den + wg), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (num, den), _ = jax.lax.scan(
+                per_client, (zeros, jnp.float32(0)),
+                (batch["clients"], w, gates))
+            # streamed aggregation accumulates f32 in the carry; the
+            # aggregated DELTA then feeds the same ServerOptimizer step as
+            # the fused path (or the in-flight buffer, when the round runs
+            # overlapped cohorts). A zero-mass round yields an EXACT zero
+            # delta (num/1e-30 - params would be -params, wiping the model).
+            mass = den
+            agg_delta = jax.tree.map(
+                lambda n, p: jnp.where(
+                    den > 0,
+                    n / jnp.maximum(den, 1e-30) - p.astype(jnp.float32), 0.0),
+                num, params)
         new_params, opt_state, inflight, last_delta, applied = _apply_delta(
-            fed, state, params, agg_delta)
+            fed, state, params, agg_delta, mass=mass)
         new_state = _next_state(fed, state, new_params, opt_state,
                                 gates, gates, util_ema, inflight=inflight,
                                 last_delta=last_delta)

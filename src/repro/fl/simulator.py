@@ -73,15 +73,25 @@ def evaluate(loss_fn, params, x, y, batch=4096):
     return float(out[0]), float(out[1])
 
 
-def _async_fingerprint(fed) -> Optional[dict]:
-    """The scan_async knobs whose resume mismatch changes NO leaf shape —
-    a fifo resume of a ready-mode buffer (or a different min_lag) would
-    silently reinterpret the slot ages, so they ride the checkpoint as
-    validatable metadata instead."""
-    if fed is None or fed.async_depth <= 0:
+def _state_fingerprint(fed) -> Optional[dict]:
+    """The run knobs whose resume mismatch changes NO leaf shape — a fifo
+    resume of a ready-mode buffer (or a different min_lag) would silently
+    reinterpret the slot ages, and a resume under a different aggregator
+    silently changes what the restored optimizer moments mean — so they
+    ride the checkpoint as validatable metadata instead. Only non-default
+    knobs are recorded (an empty fingerprint is omitted), keeping old
+    checkpoints loadable."""
+    if fed is None:
         return None
-    return {"async_mode": fed.async_mode, "min_lag": int(fed.min_lag),
-            "adaptive_staleness": bool(fed.adaptive_staleness)}
+    fp = {}
+    if fed.async_depth > 0:
+        fp.update(async_mode=fed.async_mode, min_lag=int(fed.min_lag),
+                  adaptive_staleness=bool(fed.adaptive_staleness))
+    from repro.core.aggregation import resolve_aggregator
+    agg = resolve_aggregator(getattr(fed, "aggregator", "mean"))
+    if agg != "mean":
+        fp["aggregator"] = agg
+    return fp or None
 
 
 def save_federation_state(path: str, state, rng, round_idx: int,
@@ -89,30 +99,37 @@ def save_federation_state(path: str, state, rng, round_idx: int,
     """Checkpoint the FULL cross-round carry — FederationState (params,
     server-optimizer moments, backlog, utility EMAs) AND the driver PRNG
     key — as one msgpack pytree (checkpoint/io.py). Pass ``fed`` so async
-    runs also record their buffer-policy fingerprint
-    (``_async_fingerprint``) for resume-time validation."""
+    runs record their buffer-policy fingerprint and non-mean aggregators
+    their registry name (``_state_fingerprint``) for resume-time
+    validation."""
     save_pytree(path, {"state": state, "rng": rng}, step=int(round_idx),
-                meta=_async_fingerprint(fed))
+                meta=_state_fingerprint(fed))
 
 
 def load_federation_state(path: str, like_state, fed=None):
     """Restore (state, rng, next_round) saved by ``save_federation_state``.
     ``like_state`` fixes the pytree structure/shapes (``init_state`` with
     the run's config produces one). Pass ``fed`` to ALSO validate the
-    shape-invisible async knobs against the writer's recorded fingerprint:
+    shape-invisible knobs against the writer's recorded fingerprint:
     resuming a ready-mode buffer under fifo (or a different min_lag) would
-    silently pop the restored slot ages on the wrong schedule, so a
-    mismatch raises instead."""
+    silently pop the restored slot ages on the wrong schedule, and resuming
+    a robust/dp run under a different aggregator silently changes the
+    semantics of the restored moments — a mismatch raises instead.
+    Checkpoints written before fingerprints existed carry no metadata and
+    load unvalidated."""
     tree, step, meta = load_pytree(path, {"state": like_state,
                                           "rng": jax.random.PRNGKey(0)})
-    want = _async_fingerprint(fed)
-    if want is not None and meta is not None and meta != want:
-        raise ValueError(
-            f"checkpoint {path!r} was written with async buffer policy "
-            f"{meta} but this config resumes with {want} — the in-flight "
-            "slot ages would be popped on the wrong schedule. Resume with "
-            "the writer's async_mode/min_lag/adaptive_staleness (or drain "
-            "the buffer before switching policies)")
+    if fed is not None and meta is not None:
+        want = _state_fingerprint(fed) or {}
+        if meta != want:
+            raise ValueError(
+                f"checkpoint {path!r} was written with run fingerprint "
+                f"{meta} but this config resumes with {want or '{}'} — "
+                "async slot ages would pop on the wrong schedule and/or the "
+                "optimizer moments would be fed by a different aggregator. "
+                "Resume with the writer's async_mode/min_lag/"
+                "adaptive_staleness/aggregator (or drain the buffer before "
+                "switching policies)")
     return tree["state"], tree["rng"], step
 
 
@@ -140,10 +157,15 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
     drained state so resuming it can never re-apply the flushed deltas;
     the default leaves them in ``hist.state.inflight``, exactly as a
     checkpoint would."""
+    from repro.core.aggregation import check_client_weights
     round_fn = make_round_fn(loss_fn, fed)
     data = {"x": jnp.asarray(federation.x), "y": jnp.asarray(federation.y)}
     pm = jnp.asarray(federation.priority_mask)
-    w = jnp.asarray(federation.weights)
+    # the last host-side boundary where the weights are still concrete:
+    # inside the jitted round they are tracers and a bad p_k (negative/NaN
+    # from a broken shard spec) would sign-flip/poison silently
+    w = jnp.asarray(check_client_weights(federation.weights,
+                                         where="Federation.weights"))
     C = int(pm.shape[0])
     if state is None:
         state = init_state(init_params, fed, C)

@@ -1,53 +1,240 @@
-"""Pallas TPU kernel for FedALIGN's gated weighted client aggregation.
+"""Pallas TPU kernels for FedALIGN's gated client aggregation.
 
-This is the paper's server step (eq. (15)): given C client updates (flattened
-to [C, M]), data fractions p_k and inclusion gates I_k, compute
+The base reduction is the paper's server step (eq. (15)): given C client
+updates (flattened to [C, M]), data fractions p_k and inclusion gates I_k,
 
     out[m] = sum_k p_k I_k u[k, m] / sum_k p_k I_k
 
 The parameter axis M is tiled in ``block_m`` columns; each grid cell loads a
 [C, block_m] update slab into VMEM plus the tiny weight/gate vectors, and
-emits one [block_m] output row. The reduction over clients is a [1,C]x[C,bm]
-MXU contraction. Memory-bound (arithmetic intensity ~= 1 FLOP/byte), so
-block_m is sized for DMA efficiency (multiples of 512 lanes).
+emits one [block_m] output row. The mean reduction over clients is a
+[1,C]x[C,bm] MXU contraction. Memory-bound (arithmetic intensity ~= 1
+FLOP/byte), so block_m is sized for DMA efficiency (multiples of 512 lanes).
+
+Robust / private variants are FUSED INTO THE SAME GRID CELL — the [C, bm]
+slab is already in VMEM, so a coordinate-wise sort/select (``trimmed_mean``,
+``median``), a per-client clip scale + noise add (``dp``), or a gate rewrite
+(``cosine_filter``, handled upstream as a gate pre-pass) costs ~0 extra HBM
+traffic versus a second pass over the parameters:
+
+- ``trimmed_mean`` / ``median`` sort each column over the client axis with a
+  bitonic compare/exchange network (C padded to a power of two; excluded
+  clients keyed to +inf so the n included values occupy positions [0, n))
+  and reduce the surviving order statistics. Both are UNWEIGHTED over the
+  included clients (the Byzantine-robust convention of coordinate-wise
+  trimmed mean / median, Yin et al., arXiv:1803.01498) — p_k weighting
+  would let one heavy client dominate the order statistics it is supposed
+  to be protected from.
+- ``dp`` applies a per-client multiplicative clip scale (computed upstream
+  from whole-model L2 norms) inside the weighted contraction and adds
+  pre-generated Gaussian noise scaled by ``noise_scale / den`` — DP-FedAvg
+  (McMahan et al., arXiv:1710.06963) on the renormalized gated mean. The
+  noise vector is generated OUTSIDE the kernel with jax.random so the
+  Pallas and jnp lowerings are bit-comparable (the in-kernel TPU PRNG
+  would diverge from the CPU path).
+
+Every variant returns an EXACT zero vector when no client is included
+(zero inclusion mass) — the old 0/1e-30 guard is kept only as a
+divide-safety net, never observed. Gated-out rows are masked before the
+reduction so a non-finite update from an excluded client cannot leak
+through 0 * NaN.
+
+TPU caveat (ROADMAP): CI exercises interpret mode on CPU; the sort-network
+variants lower through jnp primitives (take_along_axis / min / max / where)
+that Mosaic supports, but like every kernel here they are unvalidated on
+real hardware.
 """
 from __future__ import annotations
 
+import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
-def _kernel(u_ref, w_ref, g_ref, o_ref):
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def sort_cols_jnp(x):
+    """Ascending sort along axis 0 of [C, M] — the jnp-lowering twin of the
+    kernel's ``_sort_cols``: the SAME bitonic compare/exchange schedule,
+    unrolled in python with STATIC row permutations (illegal inside a
+    pallas kernel, which cannot capture the [P] index constants). Static
+    perms let XLA lower each exchange to vectorized row moves; the
+    fori_loop form costs ~1.5x more here, and XLA's own comparator sort
+    (jnp.sort) ~6x — it quicksorts every column at ~100 ns/compare, which
+    dominated whole training rounds at M ~ 2e4. Bit-identical to both
+    ``_sort_cols`` and jnp.sort (total order on floats; ties carry no
+    payload)."""
+    C = x.shape[0]
+    P = _next_pow2(C)
+    if P != C:
+        pad = jnp.full((P - C,) + x.shape[1:], jnp.inf, x.dtype)
+        x = jnp.concatenate([x, pad], axis=0)
+    idx = np.arange(P)
+    k = 2
+    while k <= P:
+        j = k // 2
+        while j >= 1:
+            px = x[idx ^ j]
+            lo = jnp.minimum(x, px)
+            hi = jnp.maximum(x, px)
+            take_lo = jnp.asarray((idx & k == 0) == (idx & j == 0))[:, None]
+            x = jnp.where(take_lo, lo, hi)
+            j //= 2
+        k *= 2
+    return x[:C]
+
+
+def _sort_cols(x):
+    """Ascending sort along axis 0 (clients) of a [C, bm] f32 block.
+
+    Bitonic compare/exchange network: rows are padded to a power of two
+    with +inf, every stage is a static-shape permute + min/max/where, so
+    the whole sort stays inside the grid cell (no HBM round-trip) and is
+    bit-identical to the jnp lowering's ``sort_cols_jnp``.
+    """
+    C = x.shape[0]
+    P = _next_pow2(C)
+    if P != C:
+        pad = jnp.full((P - C,) + x.shape[1:], jnp.inf, x.dtype)
+        x = jnp.concatenate([x, pad], axis=0)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (P, 1), 0)
+    # walk the (k, j) stage schedule with fori_loops (k and j derived from
+    # the loop indices by shifts) so the traced graph holds ONE
+    # compare/exchange body. Unrolling the log^2(P) stages instead makes
+    # XLA's CPU pipeline blow up on the gather chain (minutes at P=16,
+    # effectively forever at P=64); pallas kernels cannot capture a
+    # precomputed schedule array, hence the arithmetic form.
+    one = jnp.int32(1)
+
+    def pass_body(pi, x):                 # pass p = pi + 1: k = 2^p
+        k = jnp.left_shift(one, pi + 1)
+
+        def sub_body(qi, x):              # j = 2^(p-1), 2^(p-2), ..., 1
+            j = jnp.left_shift(one, pi - qi)
+            px = jnp.take_along_axis(
+                x, jnp.broadcast_to(idx ^ j, x.shape), axis=0)
+            lo = jnp.minimum(x, px)
+            hi = jnp.maximum(x, px)
+            asc = (idx & k) == 0          # direction of this bitonic block
+            first = (idx & j) == 0        # lower partner of the pair
+            return jnp.where(asc == first, lo, hi)
+
+        return jax.lax.fori_loop(0, pi + 1, sub_body, x)
+
+    n_passes = P.bit_length() - 1         # log2(P) static
+    return jax.lax.fori_loop(0, n_passes, pass_body, x)[:C]
+
+
+def _included_stats(g):
+    """Inclusion mask [C] bool and included count n (traced i32 scalar)."""
+    inc = g > 0
+    return inc, jnp.sum(inc.astype(jnp.int32))
+
+
+def _mean_kernel(u_ref, w_ref, g_ref, o_ref):
     wg = (w_ref[...] * g_ref[...]).astype(jnp.float32)        # [C]
-    den = jnp.maximum(jnp.sum(wg), 1e-30)
-    u = u_ref[...].astype(jnp.float32)                        # [C, bm]
+    den = jnp.sum(wg)
+    u = jnp.where((wg > 0)[:, None], u_ref[...].astype(jnp.float32), 0.0)
     num = jax.lax.dot_general(wg[None, :], u, (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)[0]
-    o_ref[...] = (num / den).astype(o_ref.dtype)
+    out = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
-def fedagg_pallas(updates, weights, gates, *, block_m=2048, interpret=False):
-    """updates: [C, M]; weights, gates: [C] -> [M]."""
+def _dp_kernel(noise_scale, u_ref, w_ref, g_ref, s_ref, n_ref, o_ref):
+    wg = (w_ref[...] * g_ref[...]).astype(jnp.float32)        # [C]
+    den = jnp.sum(wg)
+    # clip scales, masked on excluded rows: a NaN delta in a gated-out
+    # client makes its row_scale NaN and 0 * NaN would leak through
+    wgs = jnp.where(wg > 0, wg * s_ref[...].astype(jnp.float32), 0.0)
+    u = jnp.where((wg > 0)[:, None], u_ref[...].astype(jnp.float32), 0.0)
+    num = jax.lax.dot_general(wgs[None, :], u, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)[0]
+    safe = jnp.maximum(den, 1e-30)
+    noisy = num / safe + n_ref[...].astype(jnp.float32) * (noise_scale / safe)
+    o_ref[...] = jnp.where(den > 0, noisy, 0.0).astype(o_ref.dtype)
+
+
+def _trimmed_kernel(trim_frac, u_ref, w_ref, g_ref, o_ref):
+    del w_ref                                                  # unweighted
+    inc, n = _included_stats(g_ref[...])
+    u = jnp.where(inc[:, None], u_ref[...].astype(jnp.float32), jnp.inf)
+    s = _sort_cols(u)                                          # [C, bm]
+    t = (jnp.float32(trim_frac) * n.astype(jnp.float32)).astype(jnp.int32)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], 1), 0)
+    keep = (idx >= t) & (idx < n - t)                          # survivors
+    cnt = n - 2 * t
+    total = jnp.sum(jnp.where(keep, s, 0.0), axis=0)
+    out = jnp.where(cnt > 0, total / jnp.maximum(cnt, 1).astype(jnp.float32), 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _median_kernel(u_ref, w_ref, g_ref, o_ref):
+    del w_ref                                                  # unweighted
+    inc, n = _included_stats(g_ref[...])
+    u = jnp.where(inc[:, None], u_ref[...].astype(jnp.float32), jnp.inf)
+    s = _sort_cols(u)
+    lo, hi = (n - 1) // 2, n // 2                              # even n: average
+    idx = jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], 1), 0)
+    med = 0.5 * (jnp.sum(jnp.where(idx == lo, s, 0.0), axis=0)
+                 + jnp.sum(jnp.where(idx == hi, s, 0.0), axis=0))
+    o_ref[...] = jnp.where(n > 0, med, 0.0).astype(o_ref.dtype)
+
+
+def fedagg_pallas(updates, weights, gates, *, block_m=2048, interpret=False,
+                  aggregator="mean", trim_frac=0.0, row_scale=None,
+                  noise=None, noise_scale=0.0):
+    """updates: [C, M]; weights, gates: [C] -> [M].
+
+    aggregator: mean | trimmed_mean | median | dp — one fused kernel launch
+    regardless of variant. ``dp`` additionally takes ``row_scale`` [C]
+    (per-client clip factors), ``noise`` [M] (standard-normal draws) and a
+    static ``noise_scale`` (sigma numerator = dp_noise * dp_clip; divided
+    by the inclusion mass inside the cell). ``cosine_filter`` is a gate
+    pre-pass upstream and lands here as plain ``mean``."""
     C, M = updates.shape
     block_m = min(block_m, M)
     pad = (-M) % block_m
     if pad:
         updates = jnp.pad(updates, ((0, 0), (0, pad)))
+        if noise is not None:
+            noise = jnp.pad(noise, (0, pad))
     Mp = M + pad
     nm = Mp // block_m
 
+    vec_spec = pl.BlockSpec((C,), lambda im: (0,))
+    in_specs = [
+        pl.BlockSpec((C, block_m), lambda im: (0, im)),
+        vec_spec,
+        vec_spec,
+    ]
+    operands = [updates, weights, gates]
+    if aggregator == "mean":
+        kernel = _mean_kernel
+    elif aggregator == "trimmed_mean":
+        kernel = functools.partial(_trimmed_kernel, float(trim_frac))
+    elif aggregator == "median":
+        kernel = _median_kernel
+    elif aggregator == "dp":
+        if row_scale is None or noise is None:
+            raise ValueError("aggregator='dp' needs row_scale [C] and noise [M]")
+        kernel = functools.partial(_dp_kernel, float(noise_scale))
+        in_specs += [vec_spec, pl.BlockSpec((block_m,), lambda im: (im,))]
+        operands += [row_scale, noise]
+    else:
+        raise ValueError(f"unknown in-kernel aggregator {aggregator!r}")
+
     out = pl.pallas_call(
-        _kernel,
+        kernel,
         grid=(nm,),
-        in_specs=[
-            pl.BlockSpec((C, block_m), lambda im: (0, im)),
-            pl.BlockSpec((C,), lambda im: (0,)),
-            pl.BlockSpec((C,), lambda im: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m,), lambda im: (im,)),
         out_shape=jax.ShapeDtypeStruct((Mp,), updates.dtype),
         interpret=interpret,
-    )(updates, weights, gates)
+    )(*operands)
     return out[:M]

@@ -117,23 +117,86 @@ def decode_attention(q, k_cache, v_cache, *, kv_len, scale=None,
 # ===================================================================== fedagg
 def _fedagg_jnp(updates, weights, gates):
     wg = (weights * gates).astype(jnp.float32)
-    num = jnp.einsum("c,cm->m", wg, updates.astype(jnp.float32))
-    den = jnp.maximum(jnp.sum(wg), 1e-30)
-    return (num / den).astype(updates.dtype)
+    den = jnp.sum(wg)
+    u = jnp.where((wg > 0)[:, None], updates.astype(jnp.float32), 0.0)
+    num = jnp.einsum("c,cm->m", wg, u)
+    out = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0)
+    return out.astype(updates.dtype)
+
+
+def _fedagg_dp_jnp(updates, weights, gates, row_scale, noise, noise_scale):
+    wg = (weights * gates).astype(jnp.float32)
+    den = jnp.sum(wg)
+    u = jnp.where((wg > 0)[:, None], updates.astype(jnp.float32), 0.0)
+    # mask the clip scales too: an excluded client's NaN delta makes its
+    # row_scale NaN, and 0 * NaN would re-poison the masked row
+    wgs = jnp.where(wg > 0, wg * row_scale.astype(jnp.float32), 0.0)
+    num = jnp.einsum("c,cm->m", wgs, u)
+    safe = jnp.maximum(den, 1e-30)
+    noisy = num / safe + noise.astype(jnp.float32) * (noise_scale / safe)
+    return jnp.where(den > 0, noisy, 0.0).astype(updates.dtype)
+
+
+def _fedagg_sorted_jnp(updates, gates, *, trim_frac=None):
+    """Coordinate-wise trimmed mean (trim_frac set) or median (None) over the
+    INCLUDED clients, unweighted — the Byzantine-robust convention (Yin et
+    al., arXiv:1803.01498). Excluded clients sort to +inf, so the n included
+    values occupy sorted positions [0, n). n == 0 -> exact zero."""
+    from repro.kernels.fedagg import sort_cols_jnp
+
+    C = updates.shape[0]
+    inc = gates > 0
+    n = jnp.sum(inc.astype(jnp.int32))
+    u = jnp.where(inc[:, None], updates.astype(jnp.float32), jnp.inf)
+    # the kernel's bitonic network (static-perm unrolling), not jnp.sort —
+    # see sort_cols_jnp for why XLA's comparator sort is ~6x slower here
+    s = sort_cols_jnp(u)
+    idx = jnp.arange(C, dtype=jnp.int32)[:, None]
+    if trim_frac is None:                                      # median
+        lo, hi = (n - 1) // 2, n // 2
+        med = 0.5 * (jnp.sum(jnp.where(idx == lo, s, 0.0), axis=0)
+                     + jnp.sum(jnp.where(idx == hi, s, 0.0), axis=0))
+        out = jnp.where(n > 0, med, 0.0)
+    else:
+        t = (jnp.float32(trim_frac) * n.astype(jnp.float32)).astype(jnp.int32)
+        keep = (idx >= t) & (idx < n - t)
+        cnt = n - 2 * t
+        total = jnp.sum(jnp.where(keep, s, 0.0), axis=0)
+        out = jnp.where(cnt > 0, total / jnp.maximum(cnt, 1).astype(jnp.float32), 0.0)
+    return out.astype(updates.dtype)
 
 
 def fedagg(updates, weights, gates, *, use_pallas=False, interpret=False,
-           block_m=2048):
-    """Gated weighted client aggregation: [C,M],[C],[C] -> [M].
+           block_m=2048, aggregator="mean", trim_frac=0.0, row_scale=None,
+           noise=None, noise_scale=0.0):
+    """Gated client aggregation: [C,M],[C],[C] -> [M].
 
     The fused aggregation path (core/aggregation.py) calls this ONCE per
     round on the whole-model [C, M_total] flattening, so M may be the full
-    parameter count; the Pallas kernel tiles M in block_m columns."""
+    parameter count; the Pallas kernel tiles M in block_m columns.
+
+    ``aggregator`` selects the in-kernel reduction (mean | trimmed_mean |
+    median | dp); all variants return an exact zero vector on a
+    zero-inclusion round and mask gated-out rows before reducing. See
+    kernels/fedagg.py for the per-variant semantics and extra operands."""
     if use_pallas:
         from repro.kernels.fedagg import fedagg_pallas
         return fedagg_pallas(updates, weights, gates, block_m=block_m,
-                             interpret=interpret)
-    return _fedagg_jnp(updates, weights, gates)
+                             interpret=interpret, aggregator=aggregator,
+                             trim_frac=trim_frac, row_scale=row_scale,
+                             noise=noise, noise_scale=noise_scale)
+    if aggregator == "mean":
+        return _fedagg_jnp(updates, weights, gates)
+    if aggregator == "trimmed_mean":
+        return _fedagg_sorted_jnp(updates, gates, trim_frac=float(trim_frac))
+    if aggregator == "median":
+        return _fedagg_sorted_jnp(updates, gates, trim_frac=None)
+    if aggregator == "dp":
+        if row_scale is None or noise is None:
+            raise ValueError("aggregator='dp' needs row_scale [C] and noise [M]")
+        return _fedagg_dp_jnp(updates, weights, gates, row_scale, noise,
+                              float(noise_scale))
+    raise ValueError(f"unknown in-kernel aggregator {aggregator!r}")
 
 
 # ==================================================================== rmsnorm

@@ -50,12 +50,71 @@ def fedagg_ref(updates, weights, gates):
     updates: [C, M]  per-client flattened parameter updates
     weights: [C]     data fractions p_k (priority mass sums to 1)
     gates:   [C]     inclusion indicators I_k in {0,1} (priority rows = 1)
-    returns: [M]     sum_k p_k g_k u_k / sum_k p_k g_k
+    returns: [M]     sum_k p_k g_k u_k / sum_k p_k g_k; exact 0 when no
+                     client is included (zero inclusion mass), with
+                     gated-out rows masked so their payload (possibly
+                     non-finite) never enters the sum
     """
     wg = (weights * gates).astype(jnp.float32)
-    num = jnp.einsum("c,cm->m", wg, updates.astype(jnp.float32))
+    u = jnp.where((wg > 0)[:, None], updates.astype(jnp.float32), 0.0)
+    num = jnp.einsum("c,cm->m", wg, u)
     den = jnp.sum(wg)
-    return (num / jnp.maximum(den, 1e-30)).astype(updates.dtype)
+    out = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0)
+    return out.astype(updates.dtype)
+
+
+def _sorted_included_ref(updates, gates):
+    """Values of included clients sorted ascending per column, plus count."""
+    inc = gates > 0
+    n = jnp.sum(inc.astype(jnp.int32))
+    u = jnp.where(inc[:, None], updates.astype(jnp.float32), jnp.inf)
+    return jnp.sort(u, axis=0), n
+
+
+def fedagg_trimmed_ref(updates, weights, gates, trim_frac):
+    """Coordinate-wise trimmed mean over included clients (unweighted,
+    Yin et al., arXiv:1803.01498): drop the floor(trim_frac * n) smallest
+    and largest values per coordinate, average the rest. n == 0 -> 0."""
+    del weights
+    C = updates.shape[0]
+    s, n = _sorted_included_ref(updates, gates)
+    t = jnp.floor(jnp.float32(trim_frac) * n.astype(jnp.float32)).astype(jnp.int32)
+    idx = jnp.arange(C, dtype=jnp.int32)[:, None]
+    keep = (idx >= t) & (idx < n - t)
+    cnt = n - 2 * t
+    total = jnp.sum(jnp.where(keep, s, 0.0), axis=0)
+    out = jnp.where(cnt > 0, total / jnp.maximum(cnt, 1).astype(jnp.float32), 0.0)
+    return out.astype(updates.dtype)
+
+
+def fedagg_median_ref(updates, weights, gates):
+    """Coordinate-wise median over included clients (unweighted); the even-n
+    median averages the two central order statistics. n == 0 -> 0."""
+    del weights
+    C = updates.shape[0]
+    s, n = _sorted_included_ref(updates, gates)
+    idx = jnp.arange(C, dtype=jnp.int32)[:, None]
+    lo, hi = (n - 1) // 2, n // 2
+    med = 0.5 * (jnp.sum(jnp.where(idx == lo, s, 0.0), axis=0)
+                 + jnp.sum(jnp.where(idx == hi, s, 0.0), axis=0))
+    return jnp.where(n > 0, med, 0.0).astype(updates.dtype)
+
+
+def fedagg_dp_ref(updates, weights, gates, row_scale, noise, noise_scale):
+    """DP-FedAvg on the renormalized gated mean (McMahan et al.,
+    arXiv:1710.06963): per-client clip factors ``row_scale`` [C] scale each
+    included row inside the weighted sum; pre-drawn standard-normal
+    ``noise`` [M] is added at sigma = noise_scale / inclusion_mass (the
+    renormalized mean divides by the mass, so the noise must too)."""
+    wg = (weights * gates).astype(jnp.float32)
+    u = jnp.where((wg > 0)[:, None], updates.astype(jnp.float32), 0.0)
+    # excluded rows mask their clip scale too (0 * NaN safety, as in ops)
+    wgs = jnp.where(wg > 0, wg * row_scale.astype(jnp.float32), 0.0)
+    num = jnp.einsum("c,cm->m", wgs, u)
+    den = jnp.sum(wg)
+    safe = jnp.maximum(den, 1e-30)
+    noisy = num / safe + noise.astype(jnp.float32) * (jnp.float32(noise_scale) / safe)
+    return jnp.where(den > 0, noisy, 0.0).astype(updates.dtype)
 
 
 # ------------------------------------------------------------------- rmsnorm

@@ -160,7 +160,7 @@ def build_train(cfg, shape, mesh, fed=DRYRUN_FED):
                      None)
     meta = {"mode": "train", "clients": C, "per_client_batch": b,
             "fsdp": fsdp, "local_steps": fed.local_epochs,
-            "server_opt": fed.server_opt}
+            "server_opt": fed.server_opt, "aggregator": fed.aggregator}
     return step, args, in_shardings, out_shardings, meta, param_shapes
 
 
@@ -338,6 +338,30 @@ def main():
                          "(staleness_decay**age * max(0, cos vs the last "
                          "applied delta)); adds the [sketch_dim] "
                          "last_delta sketch leaf to the lowered state")
+    ap.add_argument("--aggregator", default="mean",
+                    choices=["mean", "trimmed_mean", "median", "dp",
+                             "cosine_filter"],
+                    help="Aggregator registry name (core/aggregation.py): "
+                         "how the gated client deltas are reduced inside "
+                         "the one fused fedagg call. trimmed_mean/median "
+                         "lower the in-kernel sort network; the temporal "
+                         "(FSDP) round then gathers the client axis "
+                         "([C, ...] leaves) instead of streaming a "
+                         "weighted sum")
+    ap.add_argument("--trim-frac", type=float, default=0.1,
+                    help="trimmed_mean: fraction of included clients "
+                         "trimmed from EACH side per coordinate (< 0.5)")
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="dp: per-client delta L2 clip bound (the DP "
+                         "sensitivity)")
+    ap.add_argument("--dp-noise", type=float, default=0.0,
+                    help="dp: Gaussian noise multiplier z (sigma = "
+                         "z*dp_clip/inclusion_mass per coordinate; 0 = "
+                         "clip-only)")
+    ap.add_argument("--outlier-cos", type=float, default=0.0,
+                    help="cosine_filter: gate out clients whose sketch-"
+                         "estimated delta-direction cosine to the gated "
+                         "mean direction falls below this")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
@@ -346,6 +370,11 @@ def main():
         fed = fed.replace(async_depth=args.async_depth, backend="scan_async",
                           async_mode=args.async_mode, min_lag=args.min_lag,
                           adaptive_staleness=args.adaptive_staleness)
+    if args.aggregator != "mean":
+        fed = fed.replace(aggregator=args.aggregator,
+                          trim_frac=args.trim_frac, dp_clip=args.dp_clip,
+                          dp_noise=args.dp_noise,
+                          outlier_cos=args.outlier_cos)
 
     archs = ARCH_IDS if args.arch == "all" else [ALIASES.get(args.arch, args.arch)]
     shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
@@ -363,6 +392,8 @@ def main():
                     tag += f"__{args.async_mode}{args.min_lag}"
                 if args.adaptive_staleness:
                     tag += "__adaptive"
+            if args.aggregator != "mean":
+                tag += f"__{args.aggregator}"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
                 print(f"[skip-existing] {tag}")

@@ -66,6 +66,9 @@ def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
                                      n_clients=clients, n_priority=n_priority,
                                      seq_len=seq, misalign_max=misalign_max,
                                      tokens_per_client=max(8192, per_client * (seq + 1) * 4))
+    # validate while still concrete — inside the jitted round they're tracers
+    from repro.core.aggregation import check_client_weights
+    check_client_weights(fed_data["weights"], where="federation weights")
 
     round_step = jax.jit(sharded.make_round_step(model, fed, clients, fsdp=False))
     params = model.init(jax.random.PRNGKey(seed))
@@ -103,9 +106,20 @@ def main():
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--aggregator", default="mean",
+                    choices=["mean", "trimmed_mean", "median", "dp",
+                             "cosine_filter"],
+                    help="client-delta reduction (Aggregator registry)")
+    ap.add_argument("--trim-frac", type=float, default=0.1)
+    ap.add_argument("--dp-clip", type=float, default=1.0)
+    ap.add_argument("--dp-noise", type=float, default=0.0)
+    ap.add_argument("--outlier-cos", type=float, default=0.0)
     a = ap.parse_args()
+    agg_kw = {} if a.aggregator == "mean" else dict(
+        aggregator=a.aggregator, trim_frac=a.trim_frac, dp_clip=a.dp_clip,
+        dp_noise=a.dp_noise, outlier_cos=a.outlier_cos)
     run(arch=a.arch, smoke=a.smoke, rounds=a.rounds, clients=a.clients,
-        seq=a.seq, lr=a.lr)
+        seq=a.seq, lr=a.lr, **agg_kw)
 
 
 if __name__ == "__main__":

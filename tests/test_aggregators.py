@@ -1,0 +1,417 @@
+"""Aggregator registry coverage: per-variant kernel parity (jnp lowering vs
+Pallas interpret vs per-leaf split vs the naive refs), the zero-inclusion /
+zero-mass edges, client-weight validation, dp determinism, cosine_filter
+gate rewrites, checkpoint fingerprints, and cross-backend round parity for
+every robust/private variant."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import aggregation as agg
+from repro.data.synth import make_synth_federation
+from repro.fl import engine
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+INIT, APPLY = SMALL_MODELS["synth_logreg"]
+LOSS = make_loss_fn(APPLY)
+FEDN = make_synth_federation(seed=7, n_priority=3, n_nonpriority=5,
+                             samples_per_client=64)
+DATA = {"x": jnp.asarray(FEDN.x), "y": jnp.asarray(FEDN.y)}
+PM = jnp.asarray(FEDN.priority_mask)
+W = jnp.asarray(FEDN.weights)
+C = int(PM.shape[0])
+
+ROBUST = ["trimmed_mean", "median", "dp", "cosine_filter"]
+
+
+def _fed(aggregator="mean", **kw):
+    base = dict(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                epsilon=1e9, warmup_frac=0.0, align_stat="loss",
+                aggregator=aggregator, trim_frac=0.25, dp_clip=0.5,
+                dp_noise=0.25, outlier_cos=-0.5)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _tree(C=6, dtype=jnp.float32, seed=0):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    return {
+        "w1": jax.random.normal(ks[0], (C, 7, 13)).astype(dtype),
+        "b1": jax.random.normal(ks[1], (C, 13)).astype(dtype),
+        "w2": jax.random.normal(ks[2], (C, 13, 3)).astype(dtype),
+        "scale": jax.random.normal(ks[3], (C,)).astype(dtype),
+    }
+
+
+def _wg(C=6, seed=1):
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.uniform(k, (C,)) + 0.1
+    g = (jax.random.uniform(jax.random.fold_in(k, 1), (C,)) > 0.4).astype(jnp.float32)
+    g = g.at[0].set(1.0)
+    return w, g
+
+
+# ===================================================== registry contract
+def test_registry_contract():
+    for name in ["mean"] + ROBUST:
+        prep = agg.get_aggregator(name)
+        assert prep.agg_name == name
+    assert agg.resolve_aggregator(None) == "mean"
+    assert agg.resolve_aggregator("none") == "mean"
+    assert agg.get_aggregator("dp").needs_key
+    assert not agg.get_aggregator("median").needs_key
+    assert not agg.get_aggregator("cosine_filter").in_kernel
+    with pytest.raises(ValueError, match="registered"):
+        agg.get_aggregator("krum")
+
+
+def test_aggregator_config_validation():
+    with pytest.raises(ValueError, match="trim_frac"):
+        agg.check_aggregator_config(_fed("trimmed_mean", trim_frac=0.5))
+    with pytest.raises(ValueError, match="dp_clip"):
+        agg.check_aggregator_config(_fed("dp", dp_clip=0.0))
+    with pytest.raises(ValueError, match="dp_noise"):
+        agg.check_aggregator_config(_fed("dp", dp_noise=-1.0))
+    with pytest.raises(ValueError, match="outlier_cos"):
+        agg.check_aggregator_config(_fed("cosine_filter", outlier_cos=1.5))
+    # and the round factory runs the same check up front
+    with pytest.raises(ValueError, match="aggregator"):
+        engine.make_round_fn(LOSS, _fed("krum"))
+
+
+def test_dp_requires_round_key():
+    tree = _tree()
+    w, g = _wg()
+    with pytest.raises(ValueError, match="aggregator_key"):
+        agg.aggregate_clients(tree, w, g, aggregator="dp", fed=_fed("dp"))
+    with pytest.raises(ValueError, match="fed="):
+        agg.aggregate_clients(tree, w, g, aggregator="median")
+
+
+# ===================================================== multi-path parity
+@pytest.mark.parametrize("name", ["mean"] + ROBUST)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_per_leaf_pallas_agree(name, dtype):
+    """Every registered aggregator: fused [C, M_total] == per-leaf ==
+    Pallas interpret, on a mixed-size pytree."""
+    tree = _tree(dtype=dtype)
+    w, g = _wg()
+    fed = _fed(name)
+    key = agg.aggregator_key(fed, 2) if agg.get_aggregator(name).needs_key else None
+    kw = dict(aggregator=name, fed=fed, key=key)
+    fused = agg.aggregate_clients(tree, w, g, fused=True, **kw)
+    per_leaf = agg.aggregate_clients(tree, w, g, fused=False, **kw)
+    pallas = agg.aggregate_clients(tree, w, g, fused=True, use_pallas=True,
+                                   interpret=True, **kw)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    for a, b, c in zip(jax.tree.leaves(fused), jax.tree.leaves(per_leaf),
+                       jax.tree.leaves(pallas)):
+        assert a.dtype == b.dtype == c.dtype == dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=atol)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32), atol=atol)
+
+
+# ===================================================== zero-inclusion edges
+@pytest.mark.parametrize("name", ["mean"] + ROBUST)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_all_zero_gates_exact_zero(name, dtype):
+    """Zero inclusion mass -> EXACT zero delta on every path, even when an
+    excluded client's payload is NaN (the old num/1e-30 guard amplified
+    instead)."""
+    tree = _tree(dtype=dtype)
+    tree = jax.tree.map(lambda l: l.at[2].set(jnp.nan), tree)   # poison
+    w, _ = _wg()
+    g = jnp.zeros((6,))
+    fed = _fed(name)
+    key = agg.aggregator_key(fed, 0) if agg.get_aggregator(name).needs_key else None
+    kw = dict(aggregator=name, fed=fed, key=key)
+    for path in (dict(fused=True), dict(fused=False),
+                 dict(fused=True, use_pallas=True, interpret=True)):
+        out = agg.aggregate_clients(tree, w, g, **kw, **path)
+        for leaf, src in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            assert leaf.dtype == src.dtype
+            assert np.all(np.asarray(leaf, np.float32) == 0.0), (name, path)
+
+
+def test_excluded_nan_client_does_not_leak():
+    """A NaN delta behind gate 0 must not perturb the included clients'
+    aggregate (0 * NaN masking), for every aggregator."""
+    tree = _tree()
+    w, _ = _wg()
+    g = jnp.asarray([1.0, 1.0, 0.0, 1.0, 0.0, 1.0])
+    poisoned = jax.tree.map(lambda l: l.at[2].set(jnp.nan).at[4].set(jnp.inf),
+                            tree)
+    for name in ["mean"] + ROBUST:
+        fed = _fed(name)
+        key = agg.aggregator_key(fed, 1) if agg.get_aggregator(name).needs_key else None
+        kw = dict(aggregator=name, fed=fed, key=key)
+        clean = agg.aggregate_clients(tree, w, g, **kw)
+        dirty = agg.aggregate_clients(poisoned, w, g, **kw)
+        for a, b in zip(jax.tree.leaves(clean), jax.tree.leaves(dirty)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+# ===================================================== weight validation
+def test_client_weight_validation_errors():
+    with pytest.raises(ValueError, match=r"clients \[1\] are NaN/inf"):
+        agg.check_client_weights(np.asarray([0.5, np.nan, 0.5]))
+    with pytest.raises(ValueError, match=r"clients \[0, 2\] have"):
+        agg.check_client_weights(np.asarray([-0.1, 0.5, -2.0]))
+    # zero weights are legitimate (a client can own no data)
+    agg.check_client_weights(np.asarray([0.0, 1.0]))
+    # traced values pass through: validation happens at concrete boundaries
+    jax.jit(lambda w: agg.check_client_weights(w))(jnp.ones((3,)))
+    # and the aggregation entry point enforces it on concrete weights
+    tree = _tree()
+    with pytest.raises(ValueError, match="non-negative"):
+        agg.aggregate_clients(tree, jnp.asarray([1.0, -1.0, 1, 1, 1, 1]),
+                              jnp.ones((6,)))
+
+
+def test_run_federation_validates_weights():
+    from repro.fl.simulator import run_federation
+    bad = dataclasses.replace(
+        FEDN, weights=np.asarray(FEDN.weights).copy() * np.nan)
+    fed = _fed(rounds=1)
+    with pytest.raises(ValueError, match="Federation.weights"):
+        run_federation(LOSS, INIT(jax.random.PRNGKey(0)), fed, bad)
+
+
+# ===================================================== zero-inclusion rounds
+@pytest.mark.parametrize("server_opt", ["sgd", "momentum", "adam", "yogi"])
+@pytest.mark.parametrize("backend", engine.BACKENDS)
+def test_zero_inclusion_round_skips_server_opt(server_opt, backend):
+    """A sync round where EVERY gate is zero (warm-up with an empty priority
+    set) must be a true no-op: params, momentum, and adam/yogi's step count
+    bit-identical — running the optimizer on the zero delta would decay
+    momentum and tick ``t``."""
+    fed = _fed(server_opt=server_opt, warmup_frac=0.5, selection="fedalign",
+               server_lr=0.7, server_momentum=0.9)
+    fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
+    state0 = engine.init_state(INIT(jax.random.PRNGKey(0)), fed, C)
+    pm0 = jnp.zeros_like(PM)                 # no priority clients at all
+    state1, stats = fn(state0, DATA, pm0, W, jax.random.PRNGKey(0),
+                       jnp.int32(0))         # round 0 is warm-up
+    assert float(jnp.sum(stats["gates"])) == 0.0
+    for a, b in zip(jax.tree.leaves(state0.params),
+                    jax.tree.leaves(state1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(state0.opt_state),
+                    jax.tree.leaves(state1.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # sanity: a post-warm-up round with real gates DOES step
+    state2, stats2 = fn(state0, DATA, PM, W, jax.random.PRNGKey(0),
+                        jnp.int32(9))
+    assert float(jnp.sum(stats2["gates"])) > 0
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(state0.params),
+                                jax.tree.leaves(state2.params)))
+    assert moved
+
+
+@pytest.mark.parametrize("aggregator", ["median", "dp"])
+def test_zero_inclusion_skip_under_robust_aggregators(aggregator):
+    """The skip keys off the configured aggregator's own inclusion mass
+    (count for the order statistics, sum p_k I_k otherwise)."""
+    fed = _fed(aggregator, server_opt="adam", warmup_frac=0.5,
+               selection="fedalign")
+    fn = jax.jit(engine.make_round_fn(LOSS, fed))
+    state0 = engine.init_state(INIT(jax.random.PRNGKey(0)), fed, C)
+    state1, _ = fn(state0, DATA, jnp.zeros_like(PM), W,
+                   jax.random.PRNGKey(0), jnp.int32(0))
+    assert int(state1.opt_state["t"]) == 0
+    for a, b in zip(jax.tree.leaves((state0.params, state0.opt_state)),
+                    jax.tree.leaves((state1.params, state1.opt_state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_inclusion_mass_conventions():
+    w = jnp.asarray([0.0, 0.2, 0.8])
+    g = jnp.asarray([1.0, 1.0, 0.0])
+    # weighted mass for the renormalized means
+    assert float(agg.inclusion_mass(_fed("mean"), w, g)) == pytest.approx(0.2)
+    # included COUNT for the unweighted order statistics: a zero-weight
+    # included client still moves the median
+    assert float(agg.inclusion_mass(_fed("median"), w, g)) == 2.0
+    assert float(agg.inclusion_mass(_fed("trimmed_mean"), w, g)) == 2.0
+
+
+# ===================================================== dp semantics
+def test_dp_noise_deterministic_per_round_key():
+    tree = _tree()
+    w, g = _wg()
+    fed = _fed("dp", dp_noise=0.8)
+    k3 = agg.aggregator_key(fed, 3)
+    a = agg.aggregate_clients(tree, w, g, aggregator="dp", fed=fed, key=k3)
+    b = agg.aggregate_clients(tree, w, g, aggregator="dp", fed=fed, key=k3)
+    c = agg.aggregate_clients(tree, w, g, aggregator="dp", fed=fed,
+                              key=agg.aggregator_key(fed, 4))
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert any(not np.array_equal(np.asarray(la), np.asarray(lc))
+               for la, lc in zip(jax.tree.leaves(a), jax.tree.leaves(c)))
+
+
+def test_dp_clip_bounds_aggregate_norm():
+    """Clip-only dp (dp_noise=0): the aggregate is a convex combination of
+    deltas clipped to L2 <= dp_clip, so its own norm obeys the bound."""
+    tree = jax.tree.map(lambda l: l * 50.0, _tree())     # huge deltas
+    w, g = _wg()
+    fed = _fed("dp", dp_clip=0.3, dp_noise=0.0)
+    out = agg.aggregate_clients(tree, w, g, aggregator="dp", fed=fed,
+                                key=agg.aggregator_key(fed, 0))
+    norm = float(jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                              for l in jax.tree.leaves(out))))
+    assert norm <= 0.3 + 1e-5, norm
+
+
+# ===================================================== cosine_filter
+def _aligned_deltas(C=6, bad=4, factor=-25.0):
+    k = jax.random.PRNGKey(5)
+    base = {"a": jax.random.normal(k, (40,)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (25,))}
+    tree = jax.tree.map(
+        lambda x: jnp.stack([x * (1.0 + 0.02 * i) for i in range(C)]), base)
+    # one sign-flipped, norm-boosted client (model-replacement style)
+    return jax.tree.map(lambda l: l.at[bad].set(factor * l[0]), tree)
+
+
+def test_cosine_filter_zeroes_outlier_gates():
+    fed = _fed("cosine_filter", outlier_cos=0.0, sketch_dim=512)
+    deltas = _aligned_deltas(bad=4)
+    w = jnp.ones((6,)) / 6
+    g = jnp.ones((6,))
+    w2, g2, kernel_kw, noise = agg.get_aggregator("cosine_filter")(
+        fed, deltas, w, g, None)
+    assert kernel_kw == {} and noise is None
+    g2 = np.asarray(g2)
+    assert g2[4] == 0.0, g2                  # opposed client dropped
+    np.testing.assert_array_equal(g2[[0, 1, 2, 3, 5]], 1.0)
+    # end to end it is exactly the plain gated mean under the rewritten gates
+    out = agg.aggregate_clients(deltas, w, g, aggregator="cosine_filter",
+                                fed=fed)
+    want = agg.aggregate_clients(deltas, w, jnp.asarray(g2))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cosine_filter_norm_boost_cannot_buy_reference_mass():
+    """The reference direction is the mean of NORMALIZED sketches: a x1e4
+    attacker moves it no further than a x25 one, so it still gets dropped."""
+    fed = _fed("cosine_filter", outlier_cos=0.0, sketch_dim=512)
+    w = jnp.ones((6,)) / 6
+    g = jnp.ones((6,))
+    for factor in (-25.0, -1e4):
+        _, g2, _, _ = agg.get_aggregator("cosine_filter")(
+            fed, _aligned_deltas(bad=4, factor=factor), w, g, None)
+        assert np.asarray(g2)[4] == 0.0, factor
+
+
+# ===================================================== robust semantics
+def test_trimmed_and_median_resist_scaled_outlier():
+    """An included Byzantine client scaling its delta x100 drags the mean
+    but not the order statistics (and they are UNWEIGHTED: the attacker's
+    weight does not matter)."""
+    tree = _aligned_deltas(bad=4, factor=-100.0)
+    w = jnp.asarray([0.1, 0.1, 0.1, 0.1, 0.55, 0.05])    # attacker is heavy
+    g = jnp.ones((6,))
+    honest = jax.tree.map(lambda l: l[:4], tree)
+    honest_mean = jax.tree.map(lambda l: jnp.mean(l, axis=0), honest)
+
+    def dist(x, y):
+        return float(sum(jnp.sum((a - b) ** 2) ** 0.5 for a, b in
+                         zip(jax.tree.leaves(x), jax.tree.leaves(y))))
+
+    mean_out = agg.aggregate_clients(tree, w, g)
+    med_out = agg.aggregate_clients(tree, w, g, aggregator="median",
+                                    fed=_fed("median"))
+    trim_out = agg.aggregate_clients(tree, w, g, aggregator="trimmed_mean",
+                                     fed=_fed("trimmed_mean", trim_frac=0.25))
+    assert dist(med_out, honest_mean) < 0.2 * dist(mean_out, honest_mean)
+    assert dist(trim_out, honest_mean) < 0.2 * dist(mean_out, honest_mean)
+
+
+# ===================================================== round-level parity
+@pytest.mark.parametrize("aggregator", ROBUST)
+def test_round_backends_agree_per_aggregator(aggregator):
+    """vmap_spatial / scan_temporal / scan_async(depth 0) produce identical
+    carried state under every robust/private aggregator (same per-round
+    noise key, same gather semantics)."""
+    fed = _fed(aggregator, local_epochs=2)
+    state = engine.init_state(INIT(jax.random.PRNGKey(0)), fed, C)
+    outs = []
+    for backend in engine.BACKENDS:
+        fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
+        outs.append(fn(state, DATA, PM, W, jax.random.PRNGKey(0),
+                       jnp.int32(1)))
+    (pv, sv), *others = outs
+    for pt, st in others:
+        np.testing.assert_array_equal(np.asarray(sv["gates"]),
+                                      np.asarray(st["gates"]))
+        for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pt)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+
+@pytest.mark.parametrize("aggregator", ROBUST)
+def test_sharded_robust_spatial_equals_temporal(aggregator):
+    """The temporal (FSDP) round cannot stream robust aggregators through
+    its linear weighted-sum carry: it must gather the client axis and
+    route through engine.server_delta — and still match the spatial round
+    bit-for-bit in semantics."""
+    from repro.fl import sharded
+    from tests.test_sharded import MODEL, _batch
+    fed = FedConfig(local_epochs=1, epsilon=1e9, lr=0.05,
+                    aggregator=aggregator, trim_frac=0.25, dp_clip=0.5,
+                    dp_noise=0.1, outlier_cos=-0.5)
+    batch = _batch()
+    state = engine.init_state(MODEL.init(jax.random.PRNGKey(0)), fed, 4)
+    ss, ts = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))(state, batch)
+    st, tt = jax.jit(sharded.make_temporal_round(MODEL, fed, 4))(state, batch)
+    np.testing.assert_array_equal(np.asarray(ts["gates"]),
+                                  np.asarray(tt["gates"]))
+    for a, b in zip(jax.tree.leaves(ss), jax.tree.leaves(st)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-5, rtol=5e-5)
+
+
+def test_sharded_robust_cohort_matches_dense():
+    """Gather-train (max_cohort) spatial round under an order-statistic
+    aggregator: padding slots carry gate 0, so the cohort-space reduction
+    matches the dense one."""
+    from repro.fl import sharded
+    from tests.test_sharded import MODEL, _batch
+    fed = FedConfig(local_epochs=1, epsilon=1e9, lr=0.05, aggregator="median")
+    batch = _batch()
+    state = engine.init_state(MODEL.init(jax.random.PRNGKey(0)), fed, 4)
+    sd, _ = jax.jit(sharded.make_spatial_round(MODEL, fed, 4))(state, batch)
+    sc, _ = jax.jit(sharded.make_spatial_round(
+        MODEL, fed.replace(max_cohort=4), 4))(state, batch)
+    for a, b in zip(jax.tree.leaves(sd), jax.tree.leaves(sc)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-5, rtol=5e-5)
+
+
+# ===================================================== checkpoint fingerprint
+def test_checkpoint_aggregator_fingerprint(tmp_path):
+    from repro.fl.simulator import load_federation_state, save_federation_state
+    fed_m = _fed("median")
+    state = engine.init_state(INIT(jax.random.PRNGKey(0)), fed_m, C)
+    path = str(tmp_path / "ck.msgpack")
+    save_federation_state(path, state, jax.random.PRNGKey(1), 3, fed=fed_m)
+    _, _, step = load_federation_state(path, state, fed=fed_m)
+    assert step == 3
+    with pytest.raises(ValueError, match="aggregator"):
+        load_federation_state(path, state, fed=_fed("mean"))
+    # no fed -> unvalidated load (old callers keep working)
+    load_federation_state(path, state)

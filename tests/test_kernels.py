@@ -101,6 +101,46 @@ def test_fedagg_one_hot_returns_that_client():
     np.testing.assert_allclose(np.asarray(out), np.asarray(u[3]), atol=1e-6)
 
 
+@pytest.mark.parametrize("C,M", [
+    (1, 64),        # single client
+    (1, 7),         # single client, M far below the lane width
+    (4, 100),       # M not a lane multiple
+    (5, 513),       # M just past a block boundary, C not a power of two
+    (3, 2065),      # multi-block grid with a ragged tail
+])
+@pytest.mark.parametrize("agg", ["mean", "trimmed_mean", "median", "dp"])
+def test_fedagg_shape_sweep_all_aggregators(C, M, agg):
+    """fedagg_pallas (interpret) and the jnp lowering vs the naive refs on
+    awkward shapes: M not a lane multiple, M < block_m, C == 1. Every
+    registered in-kernel aggregator inherits the edge coverage."""
+    u = rand((C, M), jnp.float32, k=C * 1009 + M)
+    w = jax.random.uniform(jax.random.fold_in(KEY, C + M), (C,)) + 0.05
+    g = (jax.random.uniform(jax.random.fold_in(KEY, C + M + 1), (C,)) > 0.3
+         ).astype(jnp.float32)
+    g = g.at[0].set(1.0)                       # never empty
+    kw = {}
+    if agg == "trimmed_mean":
+        kw = dict(trim_frac=0.25)
+        want = ref.fedagg_trimmed_ref(u, w, g, 0.25)
+    elif agg == "median":
+        want = ref.fedagg_median_ref(u, w, g)
+    elif agg == "dp":
+        norms = jnp.sqrt(jnp.sum(u.astype(jnp.float32) ** 2, axis=1))
+        rs = jnp.minimum(1.0, 1.0 / jnp.maximum(norms, 1e-12))
+        nz = jax.random.normal(jax.random.fold_in(KEY, C * 7 + M), (M,))
+        kw = dict(row_scale=rs, noise=nz, noise_scale=0.7)
+        want = ref.fedagg_dp_ref(u, w, g, rs, nz, 0.7)
+    else:
+        want = ref.fedagg_ref(u, w, g)
+    got_jnp = ops.fedagg(u, w, g, aggregator=agg, **kw)
+    got_pal = fedagg_pallas(u, w, g, block_m=256, interpret=True,
+                            aggregator=agg, **kw)
+    np.testing.assert_allclose(np.asarray(got_jnp), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_pal), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
 # -------------------------------------------------------------------- rmsnorm
 @pytest.mark.parametrize("shape", [(4, 37, 128), (2, 256), (1, 5, 7, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
