@@ -702,6 +702,128 @@ def run_byzantine(fast=True):
     return _run_builders([lambda: _build_byzantine(fast=fast)])
 
 
+# ---------------------------------------------------------------------- chaos
+def _chaos_fed(crash=0.0, deadline=float("inf"), **kw):
+    """Event-clocked ready-mode pipeline with Bernoulli crash faults: the
+    PR's 'actual asynchronous-FL simulator' configuration — per-client
+    lognormal completion times drive per-slot countdown timers, crashed
+    clients lose their delta post-train and re-enqueue via the backlog."""
+    return _async_fed("ready", 4, decay=0.8, local_epochs=1, **kw).replace(
+        latency_mode="lognormal", round_deadline=deadline,
+        failure_model="crash", crash_rate=crash)
+
+
+def _build_chaos(fast=True, crash_rates=(0.0, 0.1, 0.25)):
+    """Failure-model rows (convergence/distribution only — no rounds/sec,
+    so the CI regression gate skips them; the gate DOES pin that the rows
+    keep existing).
+
+    ``chaos:staleness:*`` — the measured staleness DISTRIBUTION of the
+    event-clocked ready buffer vs crash rate: with per-slot countdown
+    timers, staleness is the simulated cohort completion time (lognormal
+    draws), not a fixed pipeline depth, and crashes thin the landed
+    cohorts without shifting the clock.
+
+    ``chaos:rounds_to_target:*`` — the convergence price of crash faults
+    at 10%/25%, with vs without a finite round_deadline: the deadline
+    force-lands slow cohorts with only their finished members' mass
+    (graceful degradation), trading per-round mass for bounded latency;
+    lost clients re-enqueue through the backlog and win ties on return."""
+    samples = 64 if fast else 256
+    data, pm, w, loss_fn, params = _setup(samples)
+    R = 24 if fast else 48
+
+    def scan_stats(fed):
+        rf = engine.make_round_fn(loss_fn, fed)
+        state0 = engine.init_state(params, fed, CLIENTS)
+
+        @jax.jit
+        def scan(state, rng):
+            def body(carry, i):
+                st, key = carry
+                key, rkey = jax.random.split(key)
+                st, stats = rf(st, data, pm, w, rkey, i)
+                return (st, key), (stats["global_loss"], stats["staleness"],
+                                   stats["applied_valid"],
+                                   stats["lost_clients"])
+
+            (_, _), out = jax.lax.scan(body, (state, rng),
+                                       jnp.arange(R, dtype=jnp.int32))
+            return out
+
+        gl, stale, valid, lost = (np.asarray(a)
+                                  for a in scan(state0, jax.random.PRNGKey(0)))
+        return gl, stale, valid, lost
+
+    def row_base(fed, path):
+        row = {
+            "path": path,
+            "clients": CLIENTS,
+            "scan_rounds": R,
+            "async_depth": fed.async_depth,
+            "async_mode": fed.async_mode,
+            "min_lag": fed.min_lag,
+            "latency_mode": fed.latency_mode,
+            "failure_model": fed.failure_model,
+            "crash_rate": fed.crash_rate,
+        }
+        if fed.round_deadline != float("inf"):
+            row["round_deadline"] = fed.round_deadline
+        return row
+
+    rows = []
+    # --- staleness distribution vs crash rate (same clock, thinner cohorts)
+    results = {}
+    for crash in crash_rates:
+        fed = _chaos_fed(crash=crash)
+        gl, stale, valid, lost = scan_stats(fed)
+        results[crash] = (gl, lost)
+        landed = stale[valid > 0]
+        assert np.isfinite(gl[-1]), (
+            f"chaos staleness run (crash={crash}) lost convergence entirely")
+        row = row_base(fed, f"chaos:staleness:crash{crash:g}")
+        row.update(
+            applied_rounds=int((valid > 0).sum()),
+            staleness_mean=round(float(landed.mean()), 3) if landed.size else None,
+            staleness_p50=float(np.percentile(landed, 50)) if landed.size else None,
+            staleness_p90=float(np.percentile(landed, 90)) if landed.size else None,
+            staleness_max=int(landed.max()) if landed.size else None,
+            lost_clients_total=int(lost.sum()),
+            final_loss=round(float(gl[-1]), 5),
+        )
+        rows.append(row)
+    # the event clock's whole point: staleness is a DISTRIBUTION (the
+    # lognormal draws spread cohort completion times), not a constant lag
+    assert rows[0]["applied_rounds"] > 0 and rows[0]["staleness_max"] >= 1
+
+    # --- rounds-to-target under crash, with vs without a deadline
+    target = float(results[0.0][0][-1]) * 1.15
+    for crash in [c for c in crash_rates if c > 0]:
+        for label, deadline in (("nodeadline", float("inf")),
+                                ("deadline", 2.0)):
+            fed = _chaos_fed(crash=crash, deadline=deadline)
+            gl, stale, valid, lost = scan_stats(fed)
+            hit = np.nonzero(gl <= target)[0]
+            row = row_base(
+                fed, f"chaos:rounds_to_target:crash{crash:g}:{label}")
+            row.update(
+                target_loss=round(target, 5),
+                final_loss=(round(float(gl[-1]), 5)
+                            if np.isfinite(gl[-1]) else None),
+                rounds_to_target=int(hit[0]) if hit.size else None,
+                lost_clients_total=int(lost.sum()),
+            )
+            rows.append(row)
+            assert np.isfinite(gl[-1]), (
+                f"crash={crash} {label}: the guard-free chaos run must "
+                "still end finite (crashes lose mass, they don't poison)")
+    return rows, [], []
+
+
+def run_chaos(fast=True):
+    return _run_builders([lambda: _build_chaos(fast=fast)])
+
+
 def _run_builders(builders):
     """Build every suite first, then time ALL gated rows in one interleaved
     session (see ``_timed_rows``), then fill the derived ratios."""
@@ -725,6 +847,7 @@ def run(fast=True):
             lambda: _build_async(fast=fast),
             lambda: _build_aggregators(fast=fast),
             lambda: _build_byzantine(fast=fast),
+            lambda: _build_chaos(fast=fast),
         ]
     )
 

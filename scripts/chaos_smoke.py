@@ -1,0 +1,93 @@
+"""CI chaos smoke: a short fault-injected federation must end sane.
+
+Runs a handful of event-clocked rounds with 10% Bernoulli crashes, a
+finite round deadline, and the divergence guard armed, then asserts the
+engine's survivor accounting held up:
+
+* the final global loss is finite (crashes lose mass, they never poison
+  the aggregate);
+* ``lost_clients`` was reported every round and at least one client was
+  actually lost over the run (the faults really fired);
+* the guard never tripped (``skipped_nonfinite`` stayed 0 — with
+  corruption off there is nothing non-finite to skip);
+* every crashed/deadline-lost selected client re-enqueued through the
+  backlog (no silently vanished work).
+
+This is a liveness/accounting check, not a perf gate — it runs the same
+``engine.make_round_fn`` path the chaos bench rows use, but in seconds.
+
+    PYTHONPATH=src python scripts/chaos_smoke.py
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.data.synth import make_synth_federation
+from repro.fl import engine
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+CLIENTS, N_PRIORITY, ROUNDS = 16, 4, 12
+
+
+def main() -> int:
+    init_fn, apply_fn = SMALL_MODELS["synth_logreg"]
+    loss_fn = make_loss_fn(apply_fn)
+    fedn = make_synth_federation(seed=3, n_priority=N_PRIORITY,
+                                 n_nonpriority=CLIENTS - N_PRIORITY,
+                                 samples_per_client=64)
+    data = {"x": fedn.x, "y": fedn.y}
+    params = init_fn(jax.random.PRNGKey(0))
+
+    fed = FedConfig(num_clients=CLIENTS, num_priority=N_PRIORITY,
+                    rounds=ROUNDS, local_epochs=1, epsilon=0.5,
+                    warmup_frac=0.0, align_stat="loss",
+                    backend="scan_async", async_depth=2, async_mode="ready",
+                    min_lag=1, staleness_decay=0.8,
+                    latency_mode="lognormal", round_deadline=2.0,
+                    failure_model="crash", crash_rate=0.1,
+                    divergence_guard=True, max_nonfinite_skips=3)
+    round_fn = jax.jit(engine.make_round_fn(loss_fn, fed))
+    state = engine.init_state(params, fed, CLIENTS)
+
+    lost_total, losses, skips = 0.0, [], []
+    key = jax.random.PRNGKey(0)
+    for r in range(ROUNDS):
+        key, rkey = jax.random.split(key)
+        state, stats = round_fn(state, data, fedn.priority_mask, fedn.weights,
+                                rkey, jnp.int32(r))
+        for k in ("lost_clients", "skipped_nonfinite"):
+            assert k in stats, f"round {r}: stats missing {k!r}"
+        lost_total += float(stats["lost_clients"])
+        losses.append(float(stats["global_loss"]))
+        skips.append(int(stats["skipped_nonfinite"]))
+
+    ok = True
+
+    def check(cond, msg):
+        nonlocal ok
+        print(f"  [{'ok' if cond else 'FAIL'}] {msg}")
+        ok = ok and bool(cond)
+
+    print(f"[chaos_smoke] {ROUNDS} rounds, crash_rate={fed.crash_rate}, "
+          f"round_deadline={fed.round_deadline}, clock={fed.latency_mode}")
+    check(np.isfinite(losses[-1]), f"final global loss finite ({losses[-1]:.4f})")
+    check(lost_total > 0, f"faults fired: {lost_total:.0f} client-losses accounted")
+    check(max(skips) == 0,
+          f"divergence guard armed but silent (max skips {max(skips)})")
+    backlog = np.asarray(state.backlog)
+    check(np.all(backlog >= 0) and backlog.max() > 0,
+          f"lost selected clients re-enqueued (backlog max {backlog.max()})")
+    if not ok:
+        print("[chaos_smoke] FAILED")
+        return 1
+    print("[chaos_smoke] PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,12 +44,14 @@ import sys
 # fields that identify a row across runs; metrics and derived values are
 # deliberately absent (they are what we compare, not how we match).
 # async_mode/min_lag joined in PR 5 (fifo-vs-ready rows), aggregator in
-# PR 6 (robust-aggregation ablation rows): rows missing a field simply
-# omit it from their key, so pre-existing baselines still match — only
-# rows that NAME a mode/aggregator are distinguished by it.
+# PR 6 (robust-aggregation ablation rows), and the failure knobs in PR 7
+# (chaos:* fault-injection rows): rows missing a field simply omit it
+# from their key, so pre-existing baselines still match — only rows that
+# NAME a mode/aggregator/failure model are distinguished by it.
 KEY_FIELDS = ("path", "target_inclusion_rate", "max_cohort", "clients",
               "scan_rounds", "async_depth", "async_mode", "min_lag",
-              "aggregator")
+              "aggregator", "failure_model", "crash_rate", "round_deadline",
+              "latency_mode")
 
 METRIC = "rounds_per_sec"
 

@@ -58,15 +58,19 @@ def load_pytree(path: str, like: Any):
     the usual cause is restoring with a config whose state layout differs
     from the one that wrote the checkpoint (different ``server_opt`` moment
     tree, ``num_clients``, ``async_depth`` — which sizes the in-flight
-    cohort buffer's leading [D] axis and its per-slot age/valid vectors —
-    or ``adaptive_staleness``, which allocates the drift-reference
-    ``last_delta`` sketch leaf). Knobs whose mismatch changes NO leaf
-    shape (``async_mode``/``min_lag`` — a fifo resume of a ready-mode
-    buffer would reinterpret the slot ages — or ``aggregator``, whose
-    mismatch silently feeds the restored optimizer moments a differently
-    reduced delta stream) can't be caught here; the writer records them in
-    the payload ``meta`` and ``fl.simulator.load_federation_state(fed=...)``
-    validates them."""
+    cohort buffer's leading [D] axis and its per-slot age/valid/timer
+    vectors — ``adaptive_staleness``, which allocates the drift-reference
+    ``last_delta`` sketch leaf, ``latency_mode``, which allocates the
+    event-clock [C] latency leaves and the per-slot countdown timers, or
+    ``divergence_guard``, which allocates the skip counter). Knobs whose
+    mismatch changes NO leaf shape (``async_mode``/``min_lag`` — a fifo
+    resume of a ready-mode buffer would reinterpret the slot ages — the
+    ``latency_*``/``round_deadline``/failure-model knobs, whose mismatch
+    replays a different fault/timer schedule against the restored buffer,
+    or ``aggregator``, whose mismatch silently feeds the restored
+    optimizer moments a differently reduced delta stream) can't be caught
+    here; the writer records them in the payload ``meta`` and
+    ``fl.simulator.load_federation_state(fed=...)`` validates them."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), object_hook=_decode, strict_map_key=False)
     leaves, treedef = jax.tree.flatten(like)

@@ -260,6 +260,76 @@ class FedConfig:
                                       # mean 1); a full buffer with no
                                       # ready slot force-pops the oldest
                                       # (FedBuff overflow rule)
+    latency_mode: str = "none"        # per-client latency model for the
+                                      # event-driven clock: "none" (disabled:
+                                      # no latency leaves, no timers — the
+                                      # pinned fixed-lag behaviour) |
+                                      # "lognormal" (compute + network times
+                                      # drawn ONCE per client at init_state,
+                                      # in round units, from the latency_*
+                                      # knobs; systems-heterogeneity model of
+                                      # arXiv:2211.01549). With scan_async it
+                                      # requires async_mode="ready": each
+                                      # pushed slot carries a countdown timer
+                                      # set by its SLOWEST surviving member
+                                      # and lands when the timer expires, so
+                                      # staleness becomes a measured
+                                      # distribution instead of a fixed depth
+    latency_mu: float = 0.0           # lognormal compute-time log-mean
+    latency_sigma: float = 0.5        # lognormal compute-time log-std (>= 0)
+    latency_net_mu: float = -1.0      # lognormal network-time log-mean
+    latency_net_sigma: float = 0.3    # lognormal network-time log-std (>= 0)
+    round_deadline: float = float("inf")  # deadline (round units) on simulated
+                                      # completion times: clients slower than
+                                      # the deadline are dropped from the
+                                      # round's aggregate (partial-cohort
+                                      # landing through the zero-mass-safe
+                                      # fedagg path) and re-enqueued via the
+                                      # backlog; under the event clock the
+                                      # slot timer is capped at
+                                      # ceil(round_deadline). Requires a
+                                      # latency model; must be > 0 (a zero/
+                                      # negative deadline would force-land
+                                      # every slot empty — rejected by
+                                      # check_clock_config)
+    failure_model: str = "none"       # FailureModel registry name
+                                      # (fl/engine.py): none | crash (per-
+                                      # round Bernoulli: delta lost AFTER
+                                      # training, mass masked, backlog
+                                      # re-enqueue) | dropout (client
+                                      # unavailable for dropout_len-round
+                                      # windows, folded into the
+                                      # participation mask) | corrupt
+                                      # (delta rows NaN'd or scaled in
+                                      # transit via the delta_transform
+                                      # seam) | chaos (all three composed).
+                                      # Keyed from fold_in(seed,
+                                      # "failure_model") x absolute round —
+                                      # bit-reproducible and resume-safe
+    crash_rate: float = 0.0           # crash/chaos: per-client per-round
+                                      # Bernoulli crash probability in [0, 1]
+    dropout_rate: float = 0.0         # dropout/chaos: probability in [0, 1]
+                                      # a client sits out a whole window
+    dropout_len: int = 1              # dropout/chaos: window length k >= 1
+                                      # (rounds) of a transient drop-out
+    corrupt_rate: float = 0.0         # corrupt/chaos: per-client per-round
+                                      # corruption probability in [0, 1]
+    corrupt_scale: float = 0.0        # corrupt/chaos: corrupted deltas are
+                                      # scaled by this factor; 0.0 means the
+                                      # payload is garbled to NaN instead
+                                      # (the divergence guard's target)
+    divergence_guard: bool = False    # detect non-finite aggregated deltas /
+                                      # eval loss inside the scanned driver
+                                      # and lax.cond-skip the apply (bit-
+                                      # exact no-op, like the zero-inclusion
+                                      # skip); consecutive skips counted in
+                                      # the nonfinite_skips state leaf and
+                                      # surfaced as stats["skipped_nonfinite"]
+    max_nonfinite_skips: int = 0      # divergence_guard: run_federation
+                                      # halts-and-reports once this many
+                                      # CONSECUTIVE rounds skipped on
+                                      # non-finite aggregates (0 = never
+                                      # halt, guard still skips/counts)
     adaptive_staleness: bool = False  # discount stale deltas by MEASURED
                                       # drift instead of age alone: each
                                       # applied delta is scaled by
@@ -320,9 +390,12 @@ class FedConfig:
     dp_noise: float = 0.0             # dp: noise multiplier z — per-
                                       # coordinate sigma is
                                       # z * dp_clip / inclusion_mass on the
-                                      # renormalized mean. 0 = clip-only;
-                                      # (eps, delta) accounting over rounds
-                                      # is the caller's job (docs/engine.md)
+                                      # renormalized mean. 0 = clip-only.
+                                      # (eps, delta) over rounds comes from
+                                      # the RDP accountant (dp_epsilon in
+                                      # core/aggregation.py) at dp_delta
+    dp_delta: float = 1e-5            # dp: target delta for the reported
+                                      # (epsilon, delta) privacy budget
     outlier_cos: float = 0.0          # cosine_filter: clients whose sketch-
                                       # estimated delta-direction cosine to
                                       # the gated mean direction falls

@@ -84,6 +84,7 @@ aggregated delta then feeds the decorator-registered ServerOptimizer
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -97,7 +98,7 @@ from repro.core.aggregation import (aggregate_delta, aggregator_key,
                                     server_optimizer)
 from repro.core.alignment import epsilon_at, global_loss_from_locals
 from repro.optim.schedules import make_schedule
-from repro.utils import tree_axpy
+from repro.utils import fold_in_name, tree_axpy
 
 BACKENDS = ("vmap_spatial", "scan_temporal", "scan_async")
 
@@ -139,6 +140,16 @@ class FederationState:
       or ``()`` unless ``fed.adaptive_staleness`` asks for drift-measured
       discounts. Kept as a sketch so the extra cross-round state is
       sketch_dim-sized, never params-sized.
+    * ``latency`` — the event-driven clock's per-client completion-time
+      leaves (``{"compute": [C] f32, "net": [C] f32}``, round units, drawn
+      ONCE by ``init_latency``), or ``()`` when ``fed.latency_mode ==
+      "none"``. With the clock on, the in-flight dict gains a fourth leaf
+      ``inflight["timer"]`` ([D] i32): each slot's countdown, set at push
+      time by its slowest surviving member (``slot_timer``) and capped at
+      ``ceil(fed.round_deadline)`` — the slot lands when it expires.
+    * ``nonfinite_skips`` — scalar i32 count of CONSECUTIVE rounds the
+      divergence guard skipped on a non-finite aggregate (reset to 0 by
+      any finite round), or ``()`` when ``fed.divergence_guard`` is off.
     """
     params: Any
     opt_state: Any
@@ -147,6 +158,8 @@ class FederationState:
     incl_ema: Any
     inflight: Any = ()
     last_delta: Any = ()
+    latency: Any = ()
+    nonfinite_skips: Any = ()
 
     def replace(self, **kw) -> "FederationState":
         return dataclasses.replace(self, **kw)
@@ -155,7 +168,7 @@ class FederationState:
 jax.tree_util.register_dataclass(
     FederationState,
     data_fields=["params", "opt_state", "backlog", "util_ema", "incl_ema",
-                 "inflight", "last_delta"],
+                 "inflight", "last_delta", "latency", "nonfinite_skips"],
     meta_fields=[])
 
 
@@ -177,23 +190,104 @@ def check_async_config(fed):
             "the pop phase, so min_lag=0 would silently behave as 1")
 
 
+def check_clock_config(fed):
+    """Validate the event-clock / deadline / failure-model knobs whose bad
+    values would otherwise corrupt rounds silently — a zero or negative
+    deadline marks every client late and force-lands every slot with no
+    finished members, a rate outside [0, 1] draws garbage Bernoullis.
+    Same contract as ``check_async_config``: actionable errors at the
+    engine boundary, no-op when everything is disabled."""
+    lm = fed.latency_mode
+    if lm not in ("none", "lognormal"):
+        raise ValueError(f"unknown FedConfig.latency_mode {lm!r}; known: "
+                         "'none' (no event clock) | 'lognormal' "
+                         "(per-client compute + network time draws)")
+    if lm != "none":
+        if fed.latency_sigma < 0 or fed.latency_net_sigma < 0:
+            raise ValueError(
+                f"FedConfig.latency_sigma={fed.latency_sigma} / "
+                f"latency_net_sigma={fed.latency_net_sigma} must be >= 0 "
+                "(they are lognormal log-stds)")
+        if fed.async_depth > 0 and fed.async_mode != "ready":
+            raise ValueError(
+                "the event-driven clock gives every in-flight slot its OWN "
+                "countdown (variable lag); async_mode='fifo' constant-folds "
+                f"a fixed lag of async_depth={fed.async_depth} rounds and "
+                "would ignore the timers — use async_mode='ready'")
+    deadline = float(fed.round_deadline)
+    if deadline != float("inf"):
+        if not deadline > 0:
+            raise ValueError(
+                f"FedConfig.round_deadline={fed.round_deadline} must be > 0 "
+                "(round units): at a zero or negative deadline EVERY client "
+                "is late, so every slot would force-land with no finished "
+                "members' mass — disable the deadline with float('inf')")
+        if lm == "none":
+            raise ValueError(
+                "FedConfig.round_deadline compares per-client simulated "
+                "completion times against the deadline, but "
+                "latency_mode='none' draws no completion times — set "
+                "latency_mode='lognormal' (or leave round_deadline=inf)")
+    name = resolve_failure_model(fed.failure_model)
+    if name != "none":
+        get_failure_model(name)            # unknown names raise here
+        for knob in ("crash_rate", "dropout_rate", "corrupt_rate"):
+            v = float(getattr(fed, knob))
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FedConfig.{knob}={v} outside [0, 1] "
+                                 "(a per-client probability)")
+        if int(fed.dropout_len) < 1:
+            raise ValueError(
+                f"FedConfig.dropout_len={fed.dropout_len} must be >= 1 "
+                "(rounds per transient drop-out window)")
+    if int(fed.max_nonfinite_skips) < 0:
+        raise ValueError(
+            f"FedConfig.max_nonfinite_skips={fed.max_nonfinite_skips} must "
+            "be >= 0 (0 = the divergence guard never halts the run)")
+
+
+def init_latency(fed, num_clients):
+    """Per-client completion-time leaves for the event-driven clock, or
+    ``()`` when ``fed.latency_mode == "none"`` (layout fixed by config).
+
+    Drawn ONCE per federation from a named stream off the config seed (the
+    main round PRNG chain is untouched): lognormal compute time plus
+    lognormal network time, in round units — the systems-heterogeneity
+    model of the client-selection survey (arXiv:2211.01549)."""
+    if fed.latency_mode == "none":
+        return ()
+    key = fold_in_name(jax.random.PRNGKey(fed.seed), "latency_model")
+    kc, kn = jax.random.split(key)
+    C = int(num_clients)
+    compute = jnp.exp(fed.latency_mu + fed.latency_sigma
+                      * jax.random.normal(kc, (C,), jnp.float32))
+    net = jnp.exp(fed.latency_net_mu + fed.latency_net_sigma
+                  * jax.random.normal(kn, (C,), jnp.float32))
+    return {"compute": compute, "net": net}
+
+
 def init_inflight(params, fed):
     """Empty in-flight cohort ring buffer for ``fed.async_depth`` (D) slots,
     or ``()`` at depth 0 (synchronous runs carry no extra leaves).
 
-    Leaf layout is fixed by the CONFIG (depth, params shapes, wire dtype) —
-    the pytree-structure stability the scanned driver and checkpoint
-    round-trips require."""
+    Leaf layout is fixed by the CONFIG (depth, params shapes, wire dtype,
+    and — for the ``timer`` leaf — the latency mode) — the pytree-structure
+    stability the scanned driver and checkpoint round-trips require."""
     D = int(fed.async_depth)
     if D <= 0:
         return ()
     ad = jnp.dtype(fed.agg_dtype)
-    return {
+    buf = {
         "delta": jax.tree.map(
             lambda p: jnp.zeros((D,) + tuple(p.shape), ad), params),
         "valid": jnp.zeros((D,), jnp.float32),
         "age": jnp.zeros((D,), jnp.int32),
     }
+    if fed.latency_mode != "none":
+        # event-driven clock: per-slot countdown (rounds until the slot's
+        # slowest surviving member finishes), set at push by slot_timer
+        buf["timer"] = jnp.zeros((D,), jnp.int32)
+    return buf
 
 
 def init_last_delta(fed):
@@ -208,8 +302,12 @@ def init_state(params, fed, num_clients: Optional[int] = None) -> FederationStat
     """Fresh FederationState for a federation of ``num_clients`` (defaults
     to ``fed.num_clients``): zero moments, zero backlog, zero EMAs, and an
     empty in-flight buffer (plus zero drift-reference sketch under
-    ``adaptive_staleness``) when ``fed.async_depth > 0``."""
+    ``adaptive_staleness``) when ``fed.async_depth > 0``. Latency leaves
+    (event clock) and the divergence-guard skip counter exist only when
+    their feature is enabled — disabled configs keep the exact legacy
+    leaf layout."""
     check_async_config(fed)
+    check_clock_config(fed)
     C = int(num_clients if num_clients is not None else fed.num_clients)
     return FederationState(
         params=params,
@@ -218,7 +316,10 @@ def init_state(params, fed, num_clients: Optional[int] = None) -> FederationStat
         util_ema=jnp.zeros((C,), jnp.float32),
         incl_ema=jnp.zeros((C,), jnp.float32),
         inflight=init_inflight(params, fed),
-        last_delta=init_last_delta(fed))
+        last_delta=init_last_delta(fed),
+        latency=init_latency(fed, C),
+        nonfinite_skips=(jnp.zeros((), jnp.int32) if fed.divergence_guard
+                         else ()))
 
 
 # ============================================================ selection seam
@@ -540,10 +641,11 @@ def _apply_stale(fed, carry, delta, age):
 
 
 def async_apply(fed, global_params, opt_state, inflight, agg_delta,
-                last_delta=()):
+                last_delta=(), push_timer=None):
     """One tick of the scan_async application state machine.
 
-    1. Every valid slot ages one round.
+    1. Every valid slot ages one round (and, under the event clock, its
+       countdown timer ticks down one round).
     2. The READY slots are popped oldest-first and each applied through the
        configured ServerOptimizer with its own staleness scale
        (``_apply_stale``), under ``lax.cond`` per slot — rounds where
@@ -551,12 +653,18 @@ def async_apply(fed, global_params, opt_state, inflight, agg_delta,
        moments untouched. Readiness: ``async_mode="fifo"`` — the slot that
        aged exactly ``async_depth`` rounds (at most one per round, the
        strict PR 4 pipe); ``"ready"`` — every slot whose age reached
-       ``min_lag`` (prefix of the ring, possibly several per round). A
-       FULL buffer with no ready slot force-pops the oldest (the FedBuff
-       overflow rule) so the fresh delta always has a slot.
-    3. The buffer compacts (popped slots are a prefix, so one roll) and
-       this round's fresh ``agg_delta`` is pushed behind the survivors at
-       age 0.
+       ``min_lag`` (prefix of the ring, possibly several per round); with
+       the EVENT CLOCK (``fed.latency_mode != "none"``, the buffer carries
+       a ``timer`` leaf) — every slot whose countdown expired, an
+       arbitrary subset of the ring since timers are set per slot by the
+       cohort's slowest surviving member. A FULL buffer with no ready slot
+       force-pops the oldest (the FedBuff overflow rule) so the fresh
+       delta always has a slot.
+    3. The buffer compacts (one roll for the prefix pops; a stable
+       permutation under the clock, where the ready set need not be a
+       prefix) and this round's fresh ``agg_delta`` is pushed behind the
+       survivors at age 0 — with its countdown set to ``push_timer``
+       (``slot_timer``; REQUIRED when the buffer is clocked).
 
     Returns ``(new_params, new_opt_state, new_inflight, new_last_delta,
     info)`` with ``info = {"applied_valid": popped count (f32),
@@ -568,7 +676,28 @@ def async_apply(fed, global_params, opt_state, inflight, agg_delta,
     age = inflight["age"] + valid.astype(jnp.int32)
     occ = jnp.sum(valid.astype(jnp.int32))
     carry = (global_params, opt_state, last_delta)
-    if fed.async_mode == "fifo":
+    clocked = "timer" in inflight
+    if clocked:
+        if push_timer is None:
+            raise ValueError(
+                "this in-flight buffer carries countdown timers "
+                "(latency_mode != 'none') but no push_timer was given — "
+                "compute one with slot_timer(fed, state.latency, gates)")
+        timer = jnp.maximum(inflight["timer"] - valid.astype(jnp.int32), 0)
+        # event-driven readiness: a slot lands when its countdown expires,
+        # not when it crosses a uniform min_lag — so the ready set is an
+        # arbitrary subset of the ring, not a prefix
+        ready = valid & (timer <= 0)
+        force = (occ >= D) & (jnp.sum(ready.astype(jnp.int32)) == 0)
+        ready = ready.at[0].set(ready[0] | force)
+        for i in range(D):                 # static unroll: D is small
+            delta_i = jax.tree.map(lambda b, i=i: b[i], inflight["delta"])
+            carry = jax.lax.cond(
+                ready[i],
+                lambda c, d=delta_i, i=i: _apply_stale(fed, c, d, age[i]),
+                lambda c: c,
+                carry)
+    elif fed.async_mode == "fifo":
         # single-pop pipe: at most slot 0 can ever be ready (one push per
         # round keeps ages distinct), so the trace holds ONE conditional
         # optimizer apply — not D unrolled copies. The occ >= D term is
@@ -602,15 +731,38 @@ def async_apply(fed, global_params, opt_state, inflight, agg_delta,
     pos = occ - k                          # fresh delta lands behind survivors
     idx = jnp.arange(D)
 
-    def shift_push(buf, d):
-        return jax.lax.dynamic_update_slice_in_dim(
-            jnp.roll(buf, -k, axis=0), d.astype(buf.dtype)[None], pos, axis=0)
+    if clocked:
+        # the ready set need not be a prefix, so compaction is a stable
+        # permutation — survivors first in original (push) order — instead
+        # of the roll the prefix modes use
+        keep = valid & ~ready
+        perm = jnp.argsort(jnp.where(keep, idx, idx + D))
 
-    new_inflight = {
-        "delta": jax.tree.map(shift_push, inflight["delta"], agg_delta),
-        "valid": (idx <= pos).astype(jnp.float32),
-        "age": jnp.where(idx < pos, jnp.roll(age, -k), 0),
-    }
+        def gather_push(buf, d):
+            return jax.lax.dynamic_update_slice_in_dim(
+                jnp.take(buf, perm, axis=0), d.astype(buf.dtype)[None], pos,
+                axis=0)
+
+        survivor_timer = jnp.where(idx < pos, jnp.take(timer, perm), 0)
+        new_inflight = {
+            "delta": jax.tree.map(gather_push, inflight["delta"], agg_delta),
+            "valid": (idx <= pos).astype(jnp.float32),
+            "age": jnp.where(idx < pos, jnp.take(age, perm), 0),
+            "timer": jnp.where(idx == pos,
+                               jnp.asarray(push_timer, jnp.int32),
+                               survivor_timer),
+        }
+    else:
+        def shift_push(buf, d):
+            return jax.lax.dynamic_update_slice_in_dim(
+                jnp.roll(buf, -k, axis=0), d.astype(buf.dtype)[None], pos,
+                axis=0)
+
+        new_inflight = {
+            "delta": jax.tree.map(shift_push, inflight["delta"], agg_delta),
+            "valid": (idx <= pos).astype(jnp.float32),
+            "age": jnp.where(idx < pos, jnp.roll(age, -k), 0),
+        }
     info = {"applied_valid": k.astype(jnp.float32),
             "applied_age": jnp.max(jnp.where(ready, age, 0))}
     return new_params, new_opt, new_inflight, new_last, info
@@ -639,11 +791,9 @@ def drain_inflight(fed, state: FederationState) -> FederationState:
             lambda c: c,
             carry)
     params, opt_state, last = carry
-    empty = {
-        "delta": jax.tree.map(jnp.zeros_like, state.inflight["delta"]),
-        "valid": jnp.zeros_like(valid),
-        "age": jnp.zeros_like(age),
-    }
+    # zeroing the whole dict keeps whatever leaves the config gave the
+    # buffer (the event clock's "timer" leaf included) — layout-stable
+    empty = jax.tree.map(jnp.zeros_like, state.inflight)
     return state.replace(params=params, opt_state=opt_state, inflight=empty,
                          last_delta=last)
 
@@ -688,6 +838,219 @@ def participation_mask(fed, key, priority_mask, round_idx):
         available = (round_idx % cadence) == 0
         part = part & (available | priority_mask)
     return part
+
+
+# ============================================================ failure models
+@dataclass
+class FailurePlan:
+    """One round's fault-injection views, produced by a registered
+    FailureModel. A ``None`` field injects nothing — callers branch on
+    None at python level, so the fault-free trace stays untouched.
+
+    * ``available`` — [C] bool: clients present this round. Transient
+      drop-outs fold into the participation mask, so selection never sees
+      an absent client.
+    * ``crashed`` — [C] bool: clients that trained but whose delta is LOST
+      before aggregation — their slot mass is masked out (partial-cohort
+      landing) and the backlog re-enqueues them so they win cohort ties
+      when they return.
+    * ``corrupt`` — [C] bool: clients whose delta is corrupted in transit
+      (NaN'd or scaled rows, injected through the ``delta_transform``
+      seam)."""
+    available: Any = None
+    crashed: Any = None
+    corrupt: Any = None
+
+
+FAILURE_MODELS: dict[str, Callable] = {}
+
+
+def register_failure_model(name: str):
+    """Register ``fn(fed, key, round_idx, num_clients) -> FailurePlan``
+    under ``name`` (decorator, like ``register_strategy`` /
+    ``register_aggregator``). ``key`` is the round's failure stream
+    (``failure_key``); models must draw ONLY from it (optionally split by
+    ``fold_in_name``) so injected faults are bit-reproducible, resume-safe,
+    and independent of the main round PRNG chain."""
+    def deco(fn):
+        fn.failure_name = name
+        FAILURE_MODELS[name] = fn
+        return fn
+    return deco
+
+
+def resolve_failure_model(name) -> str:
+    """Canonical failure-model name: None/'' mean 'none' (disabled)."""
+    return "none" if name in (None, "", "none") else str(name)
+
+
+def get_failure_model(name) -> Callable:
+    try:
+        return FAILURE_MODELS[resolve_failure_model(name)]
+    except KeyError:
+        raise ValueError(f"unknown failure model {name!r}; registered: "
+                         f"{sorted(FAILURE_MODELS)}") from None
+
+
+def failure_key(fed, round_idx):
+    """The round's fault-injection PRNG: a named stream off the config seed
+    folded with the ABSOLUTE round index. Resuming at round r replays
+    exactly the faults the uninterrupted run would have injected, and the
+    main round rng chain never advances differently with faults on."""
+    base = fold_in_name(jax.random.PRNGKey(fed.seed), "failure_model")
+    return jax.random.fold_in(base, round_idx)
+
+
+def failure_plan(fed, round_idx, num_clients):
+    """Evaluate the configured FailureModel for one round, or None when
+    disabled (callers keep the fault-free trace untouched)."""
+    name = resolve_failure_model(fed.failure_model)
+    if name == "none":
+        return None
+    return FAILURE_MODELS[name](fed, failure_key(fed, round_idx), round_idx,
+                                int(num_clients))
+
+
+@register_failure_model("none")
+def _fm_none(fed, key, round_idx, num_clients):
+    return FailurePlan()
+
+
+def _crashed_mask(fed, key, num_clients):
+    return jax.random.bernoulli(fold_in_name(key, "crash"),
+                                fed.crash_rate, (num_clients,))
+
+
+def _corrupt_mask(fed, key, num_clients):
+    return jax.random.bernoulli(fold_in_name(key, "corrupt"),
+                                fed.corrupt_rate, (num_clients,))
+
+
+def _dropout_available(fed, round_idx, num_clients):
+    # window-stateless draw: one Bernoulli per (window, client), a window
+    # spanning dropout_len rounds — the SAME clients sit out every round
+    # of the window, reproduced exactly from any resume point
+    window = round_idx // max(int(fed.dropout_len), 1)
+    base = fold_in_name(jax.random.PRNGKey(fed.seed), "failure_dropout")
+    k = jax.random.fold_in(base, window)
+    return ~jax.random.bernoulli(k, fed.dropout_rate, (num_clients,))
+
+
+@register_failure_model("crash")
+def _fm_crash(fed, key, round_idx, num_clients):
+    """Per-round Bernoulli crash: the client trains, then dies before its
+    delta reaches the server."""
+    return FailurePlan(crashed=_crashed_mask(fed, key, num_clients))
+
+
+@register_failure_model("dropout")
+def _fm_dropout(fed, key, round_idx, num_clients):
+    """Transient drop-out: clients disappear for whole ``dropout_len``-round
+    windows (folded into the participation mask)."""
+    return FailurePlan(
+        available=_dropout_available(fed, round_idx, num_clients))
+
+
+@register_failure_model("corrupt")
+def _fm_corrupt(fed, key, round_idx, num_clients):
+    """Delta corruption in transit: NaN'd (``corrupt_scale == 0``) or scaled
+    rows, injected through the ``delta_transform`` seam."""
+    return FailurePlan(corrupt=_corrupt_mask(fed, key, num_clients))
+
+
+@register_failure_model("chaos")
+def _fm_chaos(fed, key, round_idx, num_clients):
+    """All three fault classes composed. Each draws from its own named
+    substream, so chaos with two rates zeroed matches the remaining single
+    model bit-for-bit."""
+    return FailurePlan(
+        available=_dropout_available(fed, round_idx, num_clients),
+        crashed=_crashed_mask(fed, key, num_clients),
+        corrupt=_corrupt_mask(fed, key, num_clients))
+
+
+def corruption_transform(fed, corrupt_mask):
+    """Build the ``delta_transform`` that poisons the masked clients' trained
+    params in transit: ``corrupt_scale == 0`` garbles the payload to NaN
+    (what the divergence guard exists to catch); any other value scales the
+    delta (a scaled-delta fault the robust aggregators can absorb)."""
+    scale = float(fed.corrupt_scale)
+
+    def tf(client_params, global_params, client_idx):
+        m = corrupt_mask[client_idx]
+
+        def leaf(cp, gp):
+            mm = m.reshape(m.shape + (1,) * (cp.ndim - 1))
+            bad = (jnp.full_like(cp, jnp.nan) if scale == 0.0
+                   else gp[None] + scale * (cp - gp[None]))
+            return jnp.where(mm, bad, cp)
+
+        return jax.tree.map(leaf, client_params, global_params)
+
+    return tf
+
+
+# ============================================================ event clock
+def client_latency(latency):
+    """[C] simulated completion time (round units): compute + network."""
+    return latency["compute"] + latency["net"]
+
+
+def lost_mask(fed, state, plan):
+    """[C] bool of clients whose trained delta never reaches the server this
+    round — crashed, or (under a finite deadline) slower than
+    ``fed.round_deadline`` — or None when nothing can be lost (fault-free
+    trace untouched). Lost clients keep their SELECTION gates for the
+    backlog ledger (+1 this round, so they win cohort ties when they
+    return) but contribute zero aggregation mass: the slot lands with only
+    its finished members through the zero-mass-safe fedagg path."""
+    lost = None
+    if plan is not None and plan.crashed is not None:
+        lost = plan.crashed
+    if (fed.latency_mode != "none"
+            and float(fed.round_deadline) != float("inf")):
+        late = client_latency(state.latency) > jnp.float32(fed.round_deadline)
+        lost = late if lost is None else (lost | late)
+    return lost
+
+
+def aggregate_finite(fed, agg_delta, loss=None):
+    """Divergence guard predicate: scalar bool "this round's aggregate may
+    touch the model" — every ``agg_delta`` leaf finite AND (when given) the
+    eval loss finite — or None when ``fed.divergence_guard`` is off, so
+    callers branch at python level and keep the unguarded trace."""
+    if not fed.divergence_guard:
+        return None
+    finite = jnp.asarray(True) if loss is None else jnp.isfinite(loss)
+    for leaf in jax.tree.leaves(agg_delta):
+        finite = finite & jnp.all(jnp.isfinite(leaf))
+    return finite
+
+
+def skips_update(state, finite):
+    """Advance the consecutive non-finite skip counter: +1 on a guarded
+    skip, reset on any finite round, pass-through when the guard is off
+    (``finite is None``)."""
+    if finite is None:
+        return state.nonfinite_skips
+    return jnp.where(finite, jnp.zeros_like(state.nonfinite_skips),
+                     state.nonfinite_skips + 1)
+
+
+def slot_timer(fed, latency, eff_gates):
+    """i32 countdown for the slot pushed this round: the ceiling of its
+    slowest SURVIVING included member's completion time, clamped to
+    [1, ceil(round_deadline)]. A delta can never land the round it was
+    pushed (floor 1); the deadline cap is the force-landing — late members
+    were already masked out of ``eff_gates`` by ``lost_mask``, so a capped
+    slot carries only its finished members' mass. An all-lost cohort
+    pushes an empty (zero-mass) slot with timer 1."""
+    t = jnp.max(jnp.where(eff_gates > 0, client_latency(latency), 0.0))
+    t = jnp.ceil(t).astype(jnp.int32)
+    deadline = float(fed.round_deadline)
+    if deadline != float("inf"):
+        t = jnp.minimum(t, jnp.int32(math.ceil(deadline)))
+    return jnp.maximum(t, 1)
 
 
 # ============================================================ local training
@@ -820,9 +1183,14 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
             "buffer (set async_depth=0 or backend='scan_async')")
     check_async_config(fed)
     check_aggregator_config(fed)
+    check_clock_config(fed)
     # stochastic aggregators (dp) get a per-round key; deterministic ones
     # keep a key-free trace (python-level branch, not a traced cond)
     agg_needs_key = get_aggregator(fed.aggregator).needs_key
+    # fault injection / event clock / divergence guard are python-level
+    # flags: disabled configs produce literally the fault-free trace
+    failure_on = resolve_failure_model(fed.failure_model) != "none"
+    clock_on = fed.latency_mode != "none"
     eval_clients, train_clients = _BACKENDS[backend]
     strategy = get_strategy(fed.selection)
     solver = local_solver(loss_fn, fed)
@@ -859,6 +1227,24 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
         # participation sampling (paper App. C.3 / A.4)
         rng, pkey = jax.random.split(rng)
         part = participation_mask(fed, pkey, priority_mask, round_idx)
+
+        # fault injection: the plan's availability folds into participation
+        # (selection never sees a dropped-out client); crashes and
+        # deadline-late clients are masked AFTER training (lost_mask);
+        # corruption rides the delta_transform seam
+        plan = failure_plan(fed, round_idx, C) if failure_on else None
+        if plan is not None and plan.available is not None:
+            part = part & plan.available
+        lost = lost_mask(fed, state, plan)
+        tf = delta_transform
+        if plan is not None and plan.corrupt is not None:
+            ctf = corruption_transform(fed, plan.corrupt)
+            if delta_transform is None:
+                tf = ctf
+            else:
+                def tf(cp, gp, idx, _user=delta_transform, _ctf=ctf):
+                    return _user(_ctf(cp, gp, idx), gp, idx)
+
         warm = round_idx < warmup_rounds
 
         # per-client PRNG fan-out is by client IDENTITY (index in [C]), so
@@ -893,10 +1279,17 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
                     solver, global_params,
                     jax.tree.map(lambda a: a[cohort_idx], data),
                     lkeys[cohort_idx], lr, gates=cohort_gates)
-                if delta_transform is not None:
-                    cohort_params = delta_transform(cohort_params,
-                                                    global_params, cohort_idx)
+                if tf is not None:
+                    cohort_params = tf(cohort_params, global_params,
+                                       cohort_idx)
                 agg_w, agg_g = weights[cohort_idx], cohort_gates
+                if lost is not None:
+                    # crashed / deadline-late: trained, but the delta never
+                    # arrives — mass masked out; sel_gates stay, so the
+                    # backlog re-enqueues them (+1, tie-winning on return)
+                    keep = 1.0 - lost.astype(jnp.float32)
+                    agg_g = agg_g * keep[cohort_idx]
+                    gates = gates * keep
                 agg_delta = server_delta(fed, global_params, cohort_params,
                                          agg_w, agg_g, key=akey)
             else:
@@ -904,10 +1297,11 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
                 # cond-skips gated-out clients (no epochs for gate 0)
                 client_params = train_clients(solver, global_params, data,
                                               lkeys, lr, gates=gates)
-                if delta_transform is not None:
-                    client_params = delta_transform(client_params,
-                                                    global_params,
-                                                    jnp.arange(C))
+                if tf is not None:
+                    client_params = tf(client_params, global_params,
+                                       jnp.arange(C))
+                if lost is not None:
+                    gates = gates * (1.0 - lost.astype(jnp.float32))
                 agg_w, agg_g = weights, gates
                 agg_delta = server_delta(fed, global_params, client_params,
                                          agg_w, agg_g, key=akey)
@@ -915,11 +1309,11 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
             # (5) train-first: the statistic needs the client updates
             sel_gates = None
             client_params = train_clients(solver, global_params, data, lkeys, lr)
-            if delta_transform is not None:
+            if tf is not None:
                 # before the delta statistic on purpose: a realistic attacker
                 # influences grad_sim scores with the very delta it submits
-                client_params = delta_transform(client_params, global_params,
-                                                jnp.arange(C))
+                client_params = tf(client_params, global_params,
+                                   jnp.arange(C))
             deltas = jax.tree.map(lambda ck, g: ck - g[None],
                                   client_params, global_params)
             if fed.grad_sim_sketch:
@@ -934,32 +1328,57 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
                                                weights, priority_mask)
             # (4) gates from the selection strategy (core/alignment rule et al.)
             gates = compute_gates(make_ctx(delta_cos), fed.selection)
+            sel_gates = gates
+            if lost is not None:
+                gates = gates * (1.0 - lost.astype(jnp.float32))
             agg_w, agg_g = weights, gates
             agg_delta = server_delta(fed, global_params, client_params,
                                      agg_w, agg_g, key=akey)
 
+        # divergence guard: a non-finite aggregate (poisoned delta, loss
+        # overflow) must never touch params or optimizer moments — and a
+        # non-finite EVAL loss means the model already diverged, so its
+        # delta is not trusted either
+        finite = aggregate_finite(fed, agg_delta, g_loss)
+
         # (6) apply — at the round barrier (sync, and scan_async at depth
         # 0), or through the in-flight buffer's readiness policy
-        # (scan_async: fixed fifo lag, or variable-lag "ready" pops)
+        # (scan_async: fixed fifo lag, variable-lag "ready" pops, or the
+        # event clock's per-slot countdown timers)
         if async_depth > 0:
+            if finite is not None:
+                # a non-finite aggregate must not enter the buffer: zero it
+                # so the slot lands as a bit-exact no-op contribution
+                agg_delta = jax.tree.map(
+                    lambda d: jnp.where(finite, d, jnp.zeros_like(d)),
+                    agg_delta)
+            push_timer = (slot_timer(fed, state.latency, gates)
+                          if clock_on else None)
             new_global, opt_state, inflight, last_delta, ainfo = async_apply(
                 fed, global_params, state.opt_state, state.inflight,
-                agg_delta, last_delta=state.last_delta)
+                agg_delta, last_delta=state.last_delta,
+                push_timer=push_timer)
         else:
             # zero-inclusion rounds (every gate 0 — e.g. participation
             # sampling missed everyone outside warm-up) must be true no-ops:
             # running the optimizer on the all-zero delta would still decay
             # momentum and tick adam/yogi's step count. Skip the whole
             # ServerOptimizer apply when the aggregator's inclusion mass is
-            # zero, leaving params AND moments bit-identical.
+            # zero — or, under the divergence guard, when the aggregate is
+            # non-finite — leaving params AND moments bit-identical.
             mass = inclusion_mass(fed, agg_w, agg_g)
+            pred = mass > 0
+            if finite is not None:
+                pred = pred & finite
             new_global, opt_state = jax.lax.cond(
-                mass > 0,
+                pred,
                 lambda: apply_server_opt(fed, global_params, state.opt_state,
                                          agg_delta),
                 lambda: (global_params, state.opt_state))
             inflight = state.inflight
             last_delta = state.last_delta
+
+        nonfinite_skips = skips_update(state, finite)
 
         # cross-round state: backlog ledger + inclusion EMA follow the
         # EFFECTIVE gates the aggregation honoured
@@ -970,7 +1389,9 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
         new_state = FederationState(params=new_global, opt_state=opt_state,
                                     backlog=backlog, util_ema=util_ema,
                                     incl_ema=incl_ema, inflight=inflight,
-                                    last_delta=last_delta)
+                                    last_delta=last_delta,
+                                    latency=state.latency,
+                                    nonfinite_skips=nonfinite_skips)
 
         npri = (1.0 - priority_mask.astype(jnp.float32))
         included_mass = jnp.sum(npri * weights * gates)
@@ -995,6 +1416,14 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
             stats["staleness"] = ainfo["applied_age"]
             stats["applied_valid"] = ainfo["applied_valid"]
             stats["inflight_occupancy"] = jnp.sum(inflight["valid"])
+        if lost is not None:
+            # survivor accounting: how many clients this round trained but
+            # never delivered (crash + deadline-late)
+            stats["lost_clients"] = jnp.sum(lost.astype(jnp.float32))
+        if fed.divergence_guard:
+            # consecutive non-finite skips — run_federation halts-and-
+            # reports once this crosses fed.max_nonfinite_skips
+            stats["skipped_nonfinite"] = nonfinite_skips
         return new_state, stats
 
     return round_fn

@@ -98,16 +98,19 @@ def _local_steps(model, params, batch, lr, n_steps):
 
 
 def _gate_ctx(fed, state, util_ema, local_losses, server_loss, pm, w,
-              delta_cos=None, round_idx=0):
+              delta_cos=None, round_idx=0, participation=None):
     """SelectionContext for one pod-scale round. ``round_idx`` threads the
     driver's round counter into the eps schedule (eps_t via ``epsilon_at``);
     drivers that never pass it keep the t=0 value (== fed.epsilon).
     ``util_ema`` is the updated RAW loss-gap EMA (this round's observation
     folded in) — the strategy sees its bias-corrected estimate;
-    backlog/incl_ema come straight from the FederationState."""
+    backlog/incl_ema come straight from the FederationState.
+    ``participation`` carries the failure model's availability mask
+    (transient drop-outs) — None keeps the everyone-present gate."""
     return engine.SelectionContext(
         align_vals=local_losses, global_align=server_loss,
         eps=epsilon_at(fed, round_idx), priority_mask=pm, weights=w,
+        participation=participation,
         delta_cos=delta_cos, topk=fed.topk, sim_threshold=fed.sim_threshold,
         backlog=state.backlog,
         util_ema=engine.utility_estimate(fed, util_ema, round_idx),
@@ -115,7 +118,8 @@ def _gate_ctx(fed, state, util_ema, local_losses, server_loss, pm, w,
 
 
 def _next_state(fed, state, new_params, opt_state, sel_gates, eff_gates,
-                util_ema, inflight=None, last_delta=None):
+                util_ema, inflight=None, last_delta=None,
+                nonfinite_skips=None):
     """Advance the cross-round carry with THE engine update rules."""
     return engine.FederationState(
         params=new_params, opt_state=opt_state,
@@ -123,31 +127,45 @@ def _next_state(fed, state, new_params, opt_state, sel_gates, eff_gates,
         util_ema=util_ema,
         incl_ema=engine.inclusion_update(fed, state.incl_ema, eff_gates),
         inflight=state.inflight if inflight is None else inflight,
-        last_delta=state.last_delta if last_delta is None else last_delta)
+        last_delta=state.last_delta if last_delta is None else last_delta,
+        latency=state.latency,
+        nonfinite_skips=(state.nonfinite_skips if nonfinite_skips is None
+                         else nonfinite_skips))
 
 
-def _apply_delta(fed, state, params, agg_delta, mass=None):
+def _apply_delta(fed, state, params, agg_delta, mass=None, push_timer=None,
+                 finite=None):
     """Apply an aggregated global delta the way the engine would: at the
     round barrier when ``fed.async_depth == 0``, or through the
     FederationState in-flight buffer's pop policy (``engine.async_apply``,
-    THE staleness state machine — fifo pipe or variable-lag readiness
-    pops, no pod/simulator drift) when the pod round runs overlapped
-    cohorts. ``mass`` is the aggregator's inclusion mass for the round
-    (``aggregation.inclusion_mass`` / the temporal round's streamed
-    denominator): when given, a zero-mass round skips the ServerOptimizer
-    entirely — params AND moments stay bit-identical instead of momentum
-    decaying on an all-zero delta. Returns (new_params, opt_state,
-    inflight, last_delta, info | None)."""
+    THE staleness state machine — fifo pipe, variable-lag readiness pops,
+    or the event clock's per-slot countdowns via ``push_timer``) when the
+    pod round runs overlapped cohorts. ``mass`` is the aggregator's
+    inclusion mass for the round (``aggregation.inclusion_mass`` / the
+    temporal round's streamed denominator): when given, a zero-mass round
+    skips the ServerOptimizer entirely — params AND moments stay
+    bit-identical instead of momentum decaying on an all-zero delta.
+    ``finite`` is the divergence-guard predicate (``engine
+    .aggregate_finite``): a non-finite aggregate is skipped the same
+    bit-exact way (sync) or zeroed before it enters the buffer (async).
+    Returns (new_params, opt_state, inflight, last_delta, info | None)."""
     if fed.async_depth > 0:
+        if finite is not None:
+            agg_delta = jax.tree.map(
+                lambda d: jnp.where(finite, d, jnp.zeros_like(d)), agg_delta)
         return engine.async_apply(fed, params, state.opt_state,
                                   state.inflight, agg_delta,
-                                  last_delta=state.last_delta)
-    if mass is None:
+                                  last_delta=state.last_delta,
+                                  push_timer=push_timer)
+    pred = None if mass is None else mass > 0
+    if finite is not None:
+        pred = finite if pred is None else pred & finite
+    if pred is None:
         new_params, opt_state = apply_server_opt(fed, params, state.opt_state,
                                                  agg_delta)
     else:
         new_params, opt_state = jax.lax.cond(
-            mass > 0,
+            pred,
             lambda: apply_server_opt(fed, params, state.opt_state, agg_delta),
             lambda: (params, state.opt_state))
     return new_params, opt_state, state.inflight, state.last_delta, None
@@ -162,6 +180,16 @@ def _async_stats(fed, stats, info, inflight):
         stats["staleness"] = info["applied_age"]
         stats["applied_valid"] = info["applied_valid"]
         stats["inflight_occupancy"] = jnp.sum(inflight["valid"])
+    return stats
+
+
+def _failure_stats(fed, stats, lost, nonfinite_skips):
+    """Failure-model / divergence-guard stat keys (python-level branches,
+    like ``_async_stats``): survivor accounting + consecutive skips."""
+    if lost is not None:
+        stats["lost_clients"] = jnp.sum(lost.astype(jnp.float32))
+    if fed.divergence_guard:
+        stats["skipped_nonfinite"] = nonfinite_skips
     return stats
 
 
@@ -181,10 +209,13 @@ def make_spatial_round(model, fed, num_clients: int):
     E = fed.local_epochs
     lr = fed.lr
     engine.check_async_config(fed)
+    engine.check_clock_config(fed)
     check_aggregator_config(fed)
     agg_needs_key = get_aggregator(fed.aggregator).needs_key
     strategy = engine.get_strategy(fed.selection)
     use_cohort = fed.max_cohort > 0 and not strategy.needs_deltas
+    failure_on = engine.resolve_failure_model(fed.failure_model) != "none"
+    clock_on = fed.latency_mode != "none"
 
     def round_step(state, batch, round_idx=0):
         params = state.params
@@ -196,6 +227,16 @@ def make_spatial_round(model, fed, num_clients: int):
         server_loss, _ = model.loss_fn(params, batch["server"])
         akey = aggregator_key(fed, round_idx) if agg_needs_key else None
 
+        # fault injection mirrors the engine round: availability folds into
+        # the selection context, crashes/deadline-late clients are masked
+        # AFTER training (lost_mask), corruption rides the same transform
+        plan = engine.failure_plan(fed, round_idx, C) if failure_on else None
+        part = (plan.available if plan is not None
+                and plan.available is not None else None)
+        lost = engine.lost_mask(fed, state, plan)
+        ctf = (engine.corruption_transform(fed, plan.corrupt)
+               if plan is not None and plan.corrupt is not None else None)
+
         if use_cohort:
             # eval -> gates -> gather-train: only K cohort slots pay E steps
             local_losses = jax.vmap(
@@ -204,14 +245,24 @@ def make_spatial_round(model, fed, num_clients: int):
                                              local_losses, server_loss)
             sel_gates = engine.compute_gates(
                 _gate_ctx(fed, state, util_ema, local_losses, server_loss,
-                          pm, w, round_idx=round_idx), fed.selection)
+                          pm, w, round_idx=round_idx, participation=part),
+                fed.selection)
             idx, cg, gates = engine.cohort_select(
                 sel_gates, local_losses, server_loss, pm,
                 min(fed.max_cohort, C), backlog=state.backlog)
             cohort_params = jax.vmap(
                 lambda cb: _train_steps(model, params, cb, lr, E))(
                 jax.tree.map(lambda a: a[idx], client_batch))
+            if ctf is not None:
+                cohort_params = ctf(cohort_params, params, idx)
             agg_w, agg_g = w[idx], cg
+            if lost is not None:
+                # crashed / deadline-late: trained, but the delta never
+                # arrives — mass masked out; sel_gates stay, so the backlog
+                # re-enqueues them (+1, tie-winning on return)
+                keep = 1.0 - lost.astype(jnp.float32)
+                agg_g = agg_g * keep[idx]
+                gates = gates * keep
             agg_delta = engine.server_delta(fed, params, cohort_params,
                                             agg_w, agg_g, key=akey)
         else:
@@ -219,6 +270,11 @@ def make_spatial_round(model, fed, num_clients: int):
                 lambda cb: _local_steps(model, params, cb, lr, E))(client_batch)
             util_ema = engine.utility_update(fed, state.util_ema,
                                              local_losses, server_loss)
+            if ctf is not None:
+                # before the delta statistic, matching the engine: a
+                # realistic attacker influences grad_sim scores with the
+                # very delta it submits
+                client_params = ctf(client_params, params, jnp.arange(C))
 
             delta_cos = None
             if strategy.needs_deltas:
@@ -235,17 +291,26 @@ def make_spatial_round(model, fed, num_clients: int):
 
             sel_gates = gates = engine.compute_gates(
                 _gate_ctx(fed, state, util_ema, local_losses, server_loss,
-                          pm, w, delta_cos, round_idx=round_idx),
+                          pm, w, delta_cos, round_idx=round_idx,
+                          participation=part),
                 fed.selection)
+            if lost is not None:
+                gates = gates * (1.0 - lost.astype(jnp.float32))
             agg_w, agg_g = w, gates
             agg_delta = engine.server_delta(fed, params, client_params,
                                             agg_w, agg_g, key=akey)
+        finite = engine.aggregate_finite(fed, agg_delta, server_loss)
+        push_timer = (engine.slot_timer(fed, state.latency, gates)
+                      if clock_on and fed.async_depth > 0 else None)
         new_params, opt_state, inflight, last_delta, applied = _apply_delta(
             fed, state, params, agg_delta,
-            mass=inclusion_mass(fed, agg_w, agg_g))
+            mass=inclusion_mass(fed, agg_w, agg_g),
+            push_timer=push_timer, finite=finite)
         new_state = _next_state(fed, state, new_params, opt_state,
                                 sel_gates, gates, util_ema, inflight=inflight,
-                                last_delta=last_delta)
+                                last_delta=last_delta,
+                                nonfinite_skips=engine.skips_update(state,
+                                                                    finite))
         stats = _async_stats(fed, {
             "server_loss": server_loss,
             "local_losses": local_losses,
@@ -253,6 +318,7 @@ def make_spatial_round(model, fed, num_clients: int):
             "backlog": new_state.backlog,
             "theta_round": 1.0 / (1.0 + jnp.sum((1 - pm.astype(jnp.float32)) * w * gates)),
         }, applied, inflight)
+        stats = _failure_stats(fed, stats, lost, new_state.nonfinite_skips)
         return new_state, stats
 
     return round_step
@@ -288,10 +354,22 @@ def make_temporal_round(model, fed, cohort: int):
     E = fed.local_epochs
     lr = fed.lr
     engine.check_async_config(fed)
+    engine.check_clock_config(fed)
     check_aggregator_config(fed)
     robust_gather = resolve_aggregator(fed.aggregator) != "mean"
     agg_needs_key = get_aggregator(fed.aggregator).needs_key
     strategy = engine.get_strategy(fed.selection)
+    failure_on = engine.resolve_failure_model(fed.failure_model) != "none"
+    clock_on = fed.latency_mode != "none"
+    if (engine.resolve_failure_model(fed.failure_model) in ("corrupt", "chaos")
+            and fed.corrupt_rate > 0):
+        raise ValueError(
+            f"failure model {fed.failure_model!r} with corrupt_rate="
+            f"{fed.corrupt_rate} poisons trained params in transit, but the "
+            "temporal (FSDP) round streams clients through a scan carry and "
+            "has no per-client materialization to corrupt on the linear "
+            "path — use the spatial round for corruption faults, or set "
+            "corrupt_rate=0 (crash/drop-out faults stream fine)")
     if strategy.needs_deltas and not fed.grad_sim_sketch:
         raise ValueError(
             f"selection {fed.selection!r} needs client deltas; the temporal "
@@ -305,7 +383,15 @@ def make_temporal_round(model, fed, cohort: int):
         params = state.params
         pm = batch["priority_mask"]
         w = batch["weights"]
+        C = pm.shape[0]
         server_loss, _ = model.loss_fn(params, batch["server"])
+
+        # fault injection (corruption excluded above): availability masks
+        # selection, crashes/deadline-late clients lose their mass post-train
+        plan = engine.failure_plan(fed, round_idx, C) if failure_on else None
+        part = (plan.available if plan is not None
+                and plan.available is not None else None)
+        lost = engine.lost_mask(fed, state, plan)
 
         # eval pre-pass: F_k(w_t) for the whole cohort before any gate is
         # fixed (rank-based strategies need the full loss vector)
@@ -328,9 +414,15 @@ def make_temporal_round(model, fed, cohort: int):
             _, sketches = jax.lax.scan(sketch_client, 0, batch["clients"])
             delta_cos = engine.cosine_to_priority(sketches, w, pm)
 
-        gates = engine.compute_gates(
+        sel_gates = gates = engine.compute_gates(
             _gate_ctx(fed, state, util_ema, local_losses, server_loss, pm, w,
-                      delta_cos, round_idx=round_idx), fed.selection)
+                      delta_cos, round_idx=round_idx, participation=part),
+            fed.selection)
+        if lost is not None:
+            # a lost streamed client's delta never reaches the carry, so it
+            # may as well skip its E local steps (gate 0 cond-skips); its
+            # SELECTION gate stays for the backlog re-enqueue
+            gates = gates * (1.0 - lost.astype(jnp.float32))
 
         if robust_gather:
             # robust/private aggregators need every client's delta at once
@@ -388,11 +480,17 @@ def make_temporal_round(model, fed, cohort: int):
                     den > 0,
                     n / jnp.maximum(den, 1e-30) - p.astype(jnp.float32), 0.0),
                 num, params)
+        finite = engine.aggregate_finite(fed, agg_delta, server_loss)
+        push_timer = (engine.slot_timer(fed, state.latency, gates)
+                      if clock_on and fed.async_depth > 0 else None)
         new_params, opt_state, inflight, last_delta, applied = _apply_delta(
-            fed, state, params, agg_delta, mass=mass)
+            fed, state, params, agg_delta, mass=mass,
+            push_timer=push_timer, finite=finite)
         new_state = _next_state(fed, state, new_params, opt_state,
-                                gates, gates, util_ema, inflight=inflight,
-                                last_delta=last_delta)
+                                sel_gates, gates, util_ema, inflight=inflight,
+                                last_delta=last_delta,
+                                nonfinite_skips=engine.skips_update(state,
+                                                                    finite))
         stats = _async_stats(fed, {
             "server_loss": server_loss,
             "local_losses": local_losses,
@@ -400,6 +498,7 @@ def make_temporal_round(model, fed, cohort: int):
             "backlog": new_state.backlog,
             "theta_round": 1.0 / (1.0 + jnp.sum((1 - pm.astype(jnp.float32)) * w * gates)),
         }, applied, inflight)
+        stats = _failure_stats(fed, stats, lost, new_state.nonfinite_skips)
         return new_state, stats
 
     return round_step

@@ -88,9 +88,28 @@ def _state_fingerprint(fed) -> Optional[dict]:
         fp.update(async_mode=fed.async_mode, min_lag=int(fed.min_lag),
                   adaptive_staleness=bool(fed.adaptive_staleness))
     from repro.core.aggregation import resolve_aggregator
+    from repro.fl.engine import resolve_failure_model
     agg = resolve_aggregator(getattr(fed, "aggregator", "mean"))
     if agg != "mean":
         fp["aggregator"] = agg
+    # event clock: the latency leaves are drawn once at init, so a resume
+    # under different latency_* knobs would keep the WRITER's draws while
+    # pushing timers from the reader's deadline — shape-invisible drift
+    if fed.latency_mode != "none":
+        fp.update(latency_mode=fed.latency_mode,
+                  latency_mu=float(fed.latency_mu),
+                  latency_sigma=float(fed.latency_sigma),
+                  latency_net_mu=float(fed.latency_net_mu),
+                  latency_net_sigma=float(fed.latency_net_sigma))
+    if float(fed.round_deadline) != float("inf"):
+        fp["round_deadline"] = float(fed.round_deadline)
+    fm = resolve_failure_model(getattr(fed, "failure_model", "none"))
+    if fm != "none":
+        fp.update(failure_model=fm, crash_rate=float(fed.crash_rate),
+                  dropout_rate=float(fed.dropout_rate),
+                  dropout_len=int(fed.dropout_len),
+                  corrupt_rate=float(fed.corrupt_rate),
+                  corrupt_scale=float(fed.corrupt_scale))
     return fp or None
 
 
@@ -125,11 +144,13 @@ def load_federation_state(path: str, like_state, fed=None):
             raise ValueError(
                 f"checkpoint {path!r} was written with run fingerprint "
                 f"{meta} but this config resumes with {want or '{}'} — "
-                "async slot ages would pop on the wrong schedule and/or the "
-                "optimizer moments would be fed by a different aggregator. "
-                "Resume with the writer's async_mode/min_lag/"
-                "adaptive_staleness/aggregator (or drain the buffer before "
-                "switching policies)")
+                "async slot ages/timers would pop on the wrong schedule, "
+                "the optimizer moments would be fed by a different "
+                "aggregator, and/or the fault-injection stream would "
+                "diverge from the writer's. Resume with the writer's "
+                "async_mode/min_lag/adaptive_staleness/aggregator/"
+                "latency_*/round_deadline/failure-model knobs (or drain "
+                "the buffer before switching policies)")
     return tree["state"], tree["rng"], step
 
 
@@ -198,6 +219,9 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
     # matches an uninterrupted run exactly.
     bounds = sorted(b for b in set(range(0, fed.rounds, eval_every))
                     | {fed.rounds - 1} if b >= start_round)
+    halt_skips = (int(fed.max_nonfinite_skips)
+                  if fed.divergence_guard else 0)
+    hist.diverged_at = None
     start = start_round
     for b in bounds:
         n = b - start + 1
@@ -218,6 +242,21 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
         if checkpoint_path is not None:
             save_federation_state(checkpoint_path, state, rng, b + 1, fed=fed)
         start = b + 1
+        if halt_skips > 0:
+            # divergence-guard halt: the scanned chunk already skipped
+            # every non-finite apply bit-exactly; once the CONSECUTIVE skip
+            # counter crosses the budget the model is not recovering, so
+            # stop launching chunks and report instead of scanning NaNs
+            # for the rest of the schedule.
+            skips = np.asarray(stats_np["skipped_nonfinite"])
+            hit = np.flatnonzero(skips >= halt_skips)
+            if hit.size:
+                hist.diverged_at = int(b - n + 1 + hit[0])
+                print(f"run_federation: halting at round {hist.diverged_at} "
+                      f"— {int(skips[hit[0]])} consecutive non-finite "
+                      f"aggregates (>= max_nonfinite_skips="
+                      f"{halt_skips}); params are the last finite ones")
+                break
     if drain_inflight:
         from repro.fl import engine
         had_buffer = isinstance(state.inflight, dict)
@@ -233,6 +272,15 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
     hist.params = state.params
     hist.state = state
     hist.rng = rng
+    # DP budget actually spent (None unless aggregator='dp' with noise):
+    # one Gaussian mechanism per EXECUTED round since round 0 — a resumed
+    # run composes with the rounds it resumed from — at the config's
+    # target delta, via the RDP accountant
+    from repro.core.aggregation import dp_report
+    # `start` is one past the last executed chunk — a divergence halt still
+    # ran (and noised) every round of its final chunk inside the scan
+    dp = dp_report(fed, start)
+    hist.dp_epsilon, hist.dp_delta = (dp if dp is not None else (None, None))
     return hist
 
 

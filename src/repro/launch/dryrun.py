@@ -362,6 +362,33 @@ def main():
                     help="cosine_filter: gate out clients whose sketch-"
                          "estimated delta-direction cosine to the gated "
                          "mean direction falls below this")
+    ap.add_argument("--latency-mode", default="none",
+                    choices=["none", "lognormal"],
+                    help="event-driven client clock: draw per-client "
+                         "lognormal compute+network times into the lowered "
+                         "FederationState ([C] latency leaves) and give "
+                         "each in-flight slot its own countdown timer "
+                         "(requires --async-mode ready at depth > 0)")
+    ap.add_argument("--round-deadline", type=float, default=float("inf"),
+                    help="force-land any in-flight slot older than this "
+                         "many round units with only its finished members' "
+                         "mass (finite values require --latency-mode)")
+    ap.add_argument("--failure-model", default="none",
+                    choices=["none", "crash", "dropout", "corrupt", "chaos"],
+                    help="fault-injection FailureModel (fl/engine.py "
+                         "registry) lowered into the round: Bernoulli "
+                         "crash (delta lost post-train), transient "
+                         "drop-out (availability masks selection), delta "
+                         "corruption in transit, or all three (chaos)")
+    ap.add_argument("--crash-rate", type=float, default=0.0)
+    ap.add_argument("--dropout-rate", type=float, default=0.0)
+    ap.add_argument("--dropout-len", type=int, default=1)
+    ap.add_argument("--corrupt-rate", type=float, default=0.0)
+    ap.add_argument("--corrupt-scale", type=float, default=0.0)
+    ap.add_argument("--divergence-guard", action="store_true",
+                    help="lower the non-finite-aggregate guard: cond-skip "
+                         "the apply and thread the consecutive-skip "
+                         "counter leaf")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
@@ -375,11 +402,24 @@ def main():
                           trim_frac=args.trim_frac, dp_clip=args.dp_clip,
                           dp_noise=args.dp_noise,
                           outlier_cos=args.outlier_cos)
+    if args.latency_mode != "none":
+        fed = fed.replace(latency_mode=args.latency_mode,
+                          round_deadline=args.round_deadline)
+    if args.failure_model != "none":
+        fed = fed.replace(failure_model=args.failure_model,
+                          crash_rate=args.crash_rate,
+                          dropout_rate=args.dropout_rate,
+                          dropout_len=args.dropout_len,
+                          corrupt_rate=args.corrupt_rate,
+                          corrupt_scale=args.corrupt_scale)
+    if args.divergence_guard:
+        fed = fed.replace(divergence_guard=True)
 
     archs = ARCH_IDS if args.arch == "all" else [ALIASES.get(args.arch, args.arch)]
     shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
 
     os.makedirs(args.out, exist_ok=True)
+    failures = []
     for a in archs:
         cfg_name = get_config(a).name
         for s in shapes:
@@ -394,6 +434,14 @@ def main():
                     tag += "__adaptive"
             if args.aggregator != "mean":
                 tag += f"__{args.aggregator}"
+            if args.latency_mode != "none":
+                tag += f"__clock-{args.latency_mode}"
+                if args.round_deadline != float("inf"):
+                    tag += f"-dl{args.round_deadline:g}"
+            if args.failure_model != "none":
+                tag += f"__{args.failure_model}"
+            if args.divergence_guard:
+                tag += "__guard"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
                 print(f"[skip-existing] {tag}")
@@ -414,11 +462,20 @@ def main():
                 rec = {"arch": cfg_name, "shape": s, "multi_pod": args.multi_pod,
                        "status": "error", "error": f"{type(e).__name__}: {e}",
                        "traceback": traceback.format_exc()[-4000:]}
+            if rec["status"] == "error":
+                failures.append((tag, rec["error"]))
             with open(path, "w") as f:
                 json.dump(rec, f, indent=1)
             print(f"  -> {rec['status']}"
                   + (f" compile={rec.get('compile_s')}s" if rec["status"] == "ok" else
                      f" {rec.get('reason', rec.get('error', ''))[:200]}"), flush=True)
+    # a broken lowering must fail the process, not just leave an error
+    # record on disk — CI was going green on status:error JSONs
+    if failures:
+        print(f"\n[dryrun] {len(failures)} target(s) FAILED to lower/compile:")
+        for tag, err in failures:
+            print(f"  FAIL {tag}: {err[:200]}")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

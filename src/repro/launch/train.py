@@ -79,6 +79,7 @@ def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
         print(f"[train] {cfg.name} params={param_count(params):,} clients={clients}")
     rng = np.random.default_rng(seed)
     history = []
+    halt_skips = int(fed.max_nonfinite_skips) if fed.divergence_guard else 0
     for r in range(rounds):
         batch = build_batches(cfg, fed_data, clients=clients,
                               per_client=per_client, seq=seq, rng=rng)
@@ -90,10 +91,27 @@ def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
                "included": float(jnp.sum(stats["gates"])) - n_priority,
                "theta_round": float(stats["theta_round"]),
                "sec": dt}
+        if "lost_clients" in stats:
+            rec["lost_clients"] = float(stats["lost_clients"])
+        if "skipped_nonfinite" in stats:
+            rec["skipped_nonfinite"] = int(stats["skipped_nonfinite"])
         history.append(rec)
         if verbose and r % log_every == 0:
             print(f"  round {r:3d} server_loss={rec['server_loss']:.4f} "
                   f"included_nonpri={rec['included']:.0f} ({dt:.2f}s)")
+        if halt_skips > 0 and rec.get("skipped_nonfinite", 0) >= halt_skips:
+            print(f"[train] halting at round {r}: "
+                  f"{rec['skipped_nonfinite']} consecutive non-finite "
+                  f"aggregates (>= max_nonfinite_skips={halt_skips}); "
+                  "params are the last finite ones")
+            break
+    from repro.core.aggregation import dp_report
+    dp = dp_report(fed, len(history))
+    if dp is not None and verbose:
+        eps, delta = dp
+        print(f"[train] DP budget spent: epsilon={eps:.3g} at "
+              f"delta={delta:g} (z={fed.dp_noise}, "
+              f"{len(history)} rounds, RDP accountant)")
     return state.params, history
 
 
@@ -113,11 +131,47 @@ def main():
     ap.add_argument("--trim-frac", type=float, default=0.1)
     ap.add_argument("--dp-clip", type=float, default=1.0)
     ap.add_argument("--dp-noise", type=float, default=0.0)
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="dp: target delta for the RDP (epsilon, delta) "
+                         "report printed after the run")
     ap.add_argument("--outlier-cos", type=float, default=0.0)
+    ap.add_argument("--latency-mode", default="none",
+                    choices=["none", "lognormal"],
+                    help="event-driven client clock (per-client lognormal "
+                         "compute+network times; async depth > 0 requires "
+                         "async_mode='ready')")
+    ap.add_argument("--round-deadline", type=float, default=float("inf"),
+                    help="force-land in-flight slots after this many round "
+                         "units with only their finished members' mass")
+    ap.add_argument("--failure-model", default="none",
+                    choices=["none", "crash", "dropout", "corrupt", "chaos"],
+                    help="fault injection (FailureModel registry)")
+    ap.add_argument("--crash-rate", type=float, default=0.0)
+    ap.add_argument("--dropout-rate", type=float, default=0.0)
+    ap.add_argument("--dropout-len", type=int, default=1)
+    ap.add_argument("--corrupt-rate", type=float, default=0.0)
+    ap.add_argument("--corrupt-scale", type=float, default=0.0)
+    ap.add_argument("--divergence-guard", action="store_true",
+                    help="skip non-finite aggregates bit-exactly and track "
+                         "consecutive skips")
+    ap.add_argument("--max-nonfinite-skips", type=int, default=0,
+                    help="halt the driver after this many CONSECUTIVE "
+                         "guarded skips (0 = never halt)")
     a = ap.parse_args()
     agg_kw = {} if a.aggregator == "mean" else dict(
         aggregator=a.aggregator, trim_frac=a.trim_frac, dp_clip=a.dp_clip,
-        dp_noise=a.dp_noise, outlier_cos=a.outlier_cos)
+        dp_noise=a.dp_noise, dp_delta=a.dp_delta, outlier_cos=a.outlier_cos)
+    if a.latency_mode != "none":
+        agg_kw.update(latency_mode=a.latency_mode,
+                      round_deadline=a.round_deadline)
+    if a.failure_model != "none":
+        agg_kw.update(failure_model=a.failure_model, crash_rate=a.crash_rate,
+                      dropout_rate=a.dropout_rate, dropout_len=a.dropout_len,
+                      corrupt_rate=a.corrupt_rate,
+                      corrupt_scale=a.corrupt_scale)
+    if a.divergence_guard:
+        agg_kw.update(divergence_guard=True,
+                      max_nonfinite_skips=a.max_nonfinite_skips)
     run(arch=a.arch, smoke=a.smoke, rounds=a.rounds, clients=a.clients,
         seq=a.seq, lr=a.lr, **agg_kw)
 

@@ -226,13 +226,23 @@ def federation_state_specs(fed, param_specs):
             "valid": rep,
             "age": rep,
         }
+        if fed.latency_mode != "none":
+            # event-clock countdowns ([D] i32) replicate like the ages
+            inflight_specs["timer"] = rep
     else:
         inflight_specs = ()
     # the drift-reference sketch is [sketch_dim] — a few KB — so it
     # replicates; only the delta slots are params-sized and sharded
     last_delta_specs = (rep if fed.async_depth > 0 and fed.adaptive_staleness
                         else ())
+    # event-clock latency leaves are [C] f32 client vectors — replicated
+    # like the backlog/EMAs; the divergence-guard skip counter is a scalar
+    latency_specs = ({"compute": rep, "net": rep}
+                     if fed.latency_mode != "none" else ())
+    skips_specs = rep if fed.divergence_guard else ()
     return FederationState(params=param_specs, opt_state=opt_specs,
                            backlog=rep, util_ema=rep, incl_ema=rep,
                            inflight=inflight_specs,
-                           last_delta=last_delta_specs)
+                           last_delta=last_delta_specs,
+                           latency=latency_specs,
+                           nonfinite_skips=skips_specs)
