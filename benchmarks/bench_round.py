@@ -16,7 +16,14 @@ priority-loss target that the plain mean, NaN-divergent, misses).
 
 Times full engine rounds at C=64 clients on a small MLP across inclusion
 rates, reporting rounds/sec and the wasted-local-epoch fraction (clients
-that paid E local epochs but were dropped at aggregation). Every timing
+that paid E local epochs but were dropped at aggregation). Every gated
+row also reports ``bytes_per_round`` — the analytic uplink cost of its
+client rows under the configured wire codec — and the ``codec:*`` /
+``codec_frontier:*`` rows sweep the WireCodec registry (identity / int8 /
+topk / sketch, error feedback on): the frontier rows pin bytes/round
+against rounds-to-target-loss and assert that int8+EF buys ~4x uplink
+compression (exact analytic: 4M/(M+4), the per-client f32 scales) at
+<=1% rounds-to-target regression vs the identity wire. Every timing
 pair is also a correctness pair: the cohort round must reproduce the dense
 round exactly before its timing row is emitted, and the async backend at
 ``async_depth=0`` must be BIT-identical to ``vmap_spatial`` before any
@@ -98,6 +105,27 @@ def _setup(samples):
     return data, pm, w, loss_fn, params
 
 
+def _m_total(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+def _wire_row_fields(fed, params, uplink_rows):
+    """``bytes_per_round`` (+ the codec identity fields on non-identity
+    rows — absent fields keep pre-codec baselines matching in the gate)."""
+    from repro.core.aggregation import resolve_wire_codec, wire_bytes_per_round
+    d = {"bytes_per_round": int(wire_bytes_per_round(
+        fed, uplink_rows, _m_total(params)))}
+    wc = resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+    if wc != "identity":
+        d["wire_codec"] = wc
+        d["error_feedback"] = bool(fed.error_feedback)
+        if wc == "topk":
+            d["codec_topk_frac"] = fed.codec_topk_frac
+        if wc == "sketch":
+            d["codec_sketch_dim"] = fed.codec_sketch_dim
+    return d
+
+
 def _timed_rows(jobs, reps=9):
     """Fill each job's row with its timing metrics from ONE interleaved
     session covering EVERY gated row — jobs from different suites must be
@@ -161,6 +189,7 @@ def _build_cohort(fast=True, rates=(0.25, 0.5, 1.0)):
                 "clients_trained": trained,
                 "wasted_local_epoch_frac": round((trained - included) / trained, 4),
             }
+            row.update(_wire_row_fields(base, params, trained))
             rows.append(row)
             pair.append(row)
             jobs.append((row, lambda fn=fn, args=args: fn(*args), 1))
@@ -241,6 +270,7 @@ def _build_server_opt(fast=True):
             "max_cohort": 0,
             "scan_rounds": SCAN_ROUNDS,
         }
+        row.update(_wire_row_fields(fed, params, CLIENTS))
         rows.append(row)
         opt_rows[opt] = row
         jobs.append((row, lambda f=scan, s=state0: f(s, jax.random.PRNGKey(0)), SCAN_ROUNDS))
@@ -279,6 +309,7 @@ def _build_server_opt(fast=True):
             "max_cohort": 0,
             "scan_rounds": SCAN_ROUNDS,
         }
+        row.update(_wire_row_fields(base, params, CLIENTS))
         rows.append(row)
         pair.append(row)
         jobs.append((row, thunk, SCAN_ROUNDS))
@@ -415,6 +446,7 @@ def _build_async(fast=True, depths=ASYNC_DEPTHS, convergence=True):
             row["async_mode"] = fed.async_mode
             if fed.async_mode == "ready":
                 row["min_lag"] = fed.min_lag
+        row.update(_wire_row_fields(fed, params, base.max_cohort))
         rows.append(row)
         timed.append(row)
         jobs.append((row, lambda f=scan, s=s: f(s, jax.random.PRNGKey(0)), ASYNC_SCAN_ROUNDS))
@@ -541,6 +573,7 @@ def _build_aggregators(fast=True):
             "max_cohort": 0,
             "scan_rounds": AGG_SCAN_ROUNDS,
         }
+        row.update(_wire_row_fields(fed, params, CLIENTS))
         rows.append(row)
         agg_rows[name] = row
         thunk = lambda f=scan, s=state0: f(s, jax.random.PRNGKey(0))
@@ -576,6 +609,118 @@ def _build_aggregators(fast=True):
 
 def run_aggregators(fast=True):
     return _run_builders([lambda: _build_aggregators(fast=fast)])
+
+
+# --------------------------------------------------------------- wire codecs
+# sketch runs error_feedback=False: the CountSketch hash/sign planes are
+# run-constant (wire_sketch_streams — every client and round shares them),
+# so re-encoding the EF residual amplifies it by the bucket occupancy
+# M/dim each round (encode(decode(s)) = occupancy * s) — a geometric
+# blow-up the finite-residual guard freezes but cannot undo. The biased
+# no-EF sketch is the stable operating point; per-round re-randomized
+# hashes (the Sketched-SGD fix) would break the run-constant stream
+# contract the backend-identity tests pin.
+CODEC_VARIANTS = (
+    ("identity", {}),
+    ("int8", {}),
+    ("topk", dict(codec_topk_frac=0.05)),
+    ("sketch", dict(codec_sketch_dim=1024, error_feedback=False)),
+)
+
+
+def _build_codec(fast=True):
+    """Wire-codec frontier: analytic uplink bytes/round against
+    rounds-to-target-loss for every registered codec (error feedback on),
+    plus gated ``codec:*`` throughput rows — the decode runs fused inside
+    the one fedagg launch, so a codec round must not fall off the
+    rounds/sec cliff a materialized [C, M_total] f32 decode buffer would
+    cause.
+
+    The in-bench frontier assertion is the PR's headline: int8+EF reaches
+    the identity wire's target loss with <=1% extra rounds while paying
+    ~4x fewer uplink bytes. "~4x": the exact analytic is 4M/(M+4) — the
+    one f32 scale per client row keeps it strictly below 4.0 (3.9991 at
+    this bench's M=18186, 4.0000 at production M) — so the floor asserted
+    here is 3.9, far above the 2.0 a payload-dtype regression (int8 ->
+    f16) would produce."""
+    samples = 64 if fast else 256
+    data, pm, w, loss_fn, params = _setup(samples)
+    R = 16 if fast else 40
+    from repro.core.aggregation import wire_bytes_per_round
+
+    rows, jobs, feds, frontier = [], [], {}, {}
+    losses = {}
+    for name, kw in CODEC_VARIANTS:
+        fed = _agg_base(fast=fast, local_epochs=1, wire_codec=name, **kw)
+        feds[name] = fed
+        rf = engine.make_round_fn(loss_fn, fed)
+        state0 = engine.init_state(params, fed, CLIENTS)
+
+        @jax.jit
+        def scan_losses(state, rng, rf=rf):
+            def body(carry, i):
+                st, key = carry
+                key, rkey = jax.random.split(key)
+                st, stats = rf(st, data, pm, w, rkey, i)
+                return (st, key), stats["global_loss"]
+
+            (state, rng), gl = jax.lax.scan(body, (state, rng),
+                                            jnp.arange(R, dtype=jnp.int32))
+            return gl
+
+        losses[name] = np.asarray(scan_losses(state0, jax.random.PRNGKey(0)))
+
+        row = {
+            "path": f"codec:{name}",
+            "clients": CLIENTS,
+            "max_cohort": 0,
+            "scan_rounds": SCAN_ROUNDS,
+        }
+        row.update(_wire_row_fields(fed, params, CLIENTS))
+        rows.append(row)
+        scan = _make_round_scan(rf, data, pm, w)
+        jobs.append((row, lambda f=scan, s=state0: f(s, jax.random.PRNGKey(0)),
+                     SCAN_ROUNDS))
+
+    id_bytes = int(wire_bytes_per_round(feds["identity"], CLIENTS,
+                                        _m_total(params)))
+    target = float(losses["identity"][-1]) * 1.05
+    for name, _ in CODEC_VARIANTS:
+        gl = losses[name]
+        hit = np.nonzero(gl <= target)[0]
+        row = {
+            "path": f"codec_frontier:{name}",
+            "clients": CLIENTS,
+            "scan_rounds": R,
+            "target_loss": round(target, 5),
+            "final_loss": round(float(gl[-1]), 5),
+            "rounds_to_target": int(hit[0]) if hit.size else None,
+        }
+        row.update(_wire_row_fields(feds[name], params, CLIENTS))
+        row["compression_vs_identity"] = round(
+            id_bytes / row["bytes_per_round"], 4)
+        frontier[name] = row
+        rows.append(row)
+
+    def post():
+        r_id = frontier["identity"]["rounds_to_target"]
+        r_i8 = frontier["int8"]["rounds_to_target"]
+        comp = frontier["int8"]["compression_vs_identity"]
+        assert r_id is not None, (
+            "identity wire never reached its own +5% target — the codec "
+            "frontier rows have no baseline to compare against")
+        assert comp >= 3.9, (
+            f"int8 uplink compression is {comp:.4f}x — the analytic "
+            "4M/(M+4) bound says ~4x; below 3.9 the wire payload widened")
+        assert r_i8 is not None and r_i8 <= int(np.ceil(r_id * 1.01)), (
+            f"int8+EF took {r_i8} rounds to the identity wire's target vs "
+            f"{r_id} for identity — over the <=1% regression budget")
+
+    return rows, jobs, [post]
+
+
+def run_codec(fast=True):
+    return _run_builders([lambda: _build_codec(fast=fast)])
 
 
 # ------------------------------------------------------------------ byzantine
@@ -846,6 +991,7 @@ def run(fast=True):
             lambda: _build_server_opt(fast=fast),
             lambda: _build_async(fast=fast),
             lambda: _build_aggregators(fast=fast),
+            lambda: _build_codec(fast=fast),
             lambda: _build_byzantine(fast=fast),
             lambda: _build_chaos(fast=fast),
         ]

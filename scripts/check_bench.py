@@ -44,14 +44,17 @@ import sys
 # fields that identify a row across runs; metrics and derived values are
 # deliberately absent (they are what we compare, not how we match).
 # async_mode/min_lag joined in PR 5 (fifo-vs-ready rows), aggregator in
-# PR 6 (robust-aggregation ablation rows), and the failure knobs in PR 7
-# (chaos:* fault-injection rows): rows missing a field simply omit it
-# from their key, so pre-existing baselines still match — only rows that
-# NAME a mode/aggregator/failure model are distinguished by it.
+# PR 6 (robust-aggregation ablation rows), the failure knobs in PR 7
+# (chaos:* fault-injection rows), and the wire-codec knobs in PR 8
+# (codec:* / codec_frontier:* uplink-compression rows): rows missing a
+# field simply omit it from their key, so pre-existing baselines still
+# match — only rows that NAME a mode/aggregator/failure model/codec are
+# distinguished by it.
 KEY_FIELDS = ("path", "target_inclusion_rate", "max_cohort", "clients",
               "scan_rounds", "async_depth", "async_mode", "min_lag",
               "aggregator", "failure_model", "crash_rate", "round_deadline",
-              "latency_mode")
+              "latency_mode", "wire_codec", "error_feedback",
+              "codec_topk_frac", "codec_sketch_dim")
 
 METRIC = "rounds_per_sec"
 

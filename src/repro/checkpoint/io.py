@@ -61,14 +61,18 @@ def load_pytree(path: str, like: Any):
     cohort buffer's leading [D] axis and its per-slot age/valid/timer
     vectors — ``adaptive_staleness``, which allocates the drift-reference
     ``last_delta`` sketch leaf, ``latency_mode``, which allocates the
-    event-clock [C] latency leaves and the per-slot countdown timers, or
-    ``divergence_guard``, which allocates the skip counter). Knobs whose
-    mismatch changes NO leaf shape (``async_mode``/``min_lag`` — a fifo
-    resume of a ready-mode buffer would reinterpret the slot ages — the
-    ``latency_*``/``round_deadline``/failure-model knobs, whose mismatch
-    replays a different fault/timer schedule against the restored buffer,
-    or ``aggregator``, whose mismatch silently feeds the restored
-    optimizer moments a differently reduced delta stream) can't be caught
+    event-clock [C] latency leaves and the per-slot countdown timers,
+    ``divergence_guard``, which allocates the skip counter, or
+    ``wire_codec``/``error_feedback``, which allocate the per-client
+    error-feedback accumulator leaves ``ef_accum`` — C x params rows).
+    Knobs whose mismatch changes NO leaf shape (``async_mode``/``min_lag``
+    — a fifo resume of a ready-mode buffer would reinterpret the slot ages
+    — the ``latency_*``/``round_deadline``/failure-model knobs, whose
+    mismatch replays a different fault/timer schedule against the restored
+    buffer, ``aggregator``, whose mismatch silently feeds the restored
+    optimizer moments a differently reduced delta stream, or the codec
+    identity/rate knobs — restored EF accumulators re-injected under a
+    different codec describe a wire that no longer exists) can't be caught
     here; the writer records them in the payload ``meta`` and
     ``fl.simulator.load_federation_state(fed=...)`` validates them."""
     with open(path, "rb") as f:
@@ -81,6 +85,7 @@ def load_pytree(path: str, like: Any):
             f"requested structure has {len(leaves)} — was it written with a "
             "different config (server_opt moment layout, async_depth "
             "in-flight buffer, adaptive_staleness last_delta sketch, "
+            "wire_codec/error_feedback ef_accum accumulator leaves, "
             "num_clients)?")
     out = []
     for i, (old, new) in enumerate(zip(leaves, new_leaves)):
@@ -90,8 +95,9 @@ def load_pytree(path: str, like: Any):
                 f"{tuple(new.shape)} but the requested structure expects "
                 f"{tuple(old.shape)} — config/state layout mismatch "
                 "(e.g. a resume with a different async_depth, "
-                "adaptive_staleness/sketch_dim, or client count than the "
-                "run that wrote the checkpoint)")
+                "adaptive_staleness/sketch_dim, wire_codec/error_feedback "
+                "ef_accum layout, or client count than the run that wrote "
+                "the checkpoint)")
         out.append(jnp.asarray(new, dtype=old.dtype))
     return (jax.tree.unflatten(treedef, out), payload.get("step"),
             payload.get("meta"))

@@ -355,6 +355,16 @@ class FedConfig:
                                       # non-priority clients; the worst-
                                       # matched overflow is dropped for the
                                       # round (deterministic, stable order)
+    backlog_boost: float = 0.0        # cohort overflow priority boost: the
+                                      # cohort rank becomes
+                                      # |F_k - F| - backlog_boost * backlog,
+                                      # so a starved-but-close client can
+                                      # OUTRANK a slightly better-matched
+                                      # one instead of only winning exact
+                                      # ties (float match qualities almost
+                                      # never tie exactly). 0.0 keeps the
+                                      # pinned tie-break-only policy
+                                      # bit-identical
     align_stat: str = "accuracy"      # accuracy (paper experiments) | loss (theory)
     server_opt: str = "none"          # ServerOptimizer registry name
                                       # (core/aggregation.py): sgd (= the
@@ -410,6 +420,48 @@ class FedConfig:
     agg_dtype: str = "float32"        # dtype of aggregated client DELTAS on the
                                       # wire (bfloat16 halves FedALIGN's
                                       # aggregation collective — beyond-paper)
+    wire_codec: str = "identity"      # WireCodec registry name
+                                      # (core/aggregation.py): lossy uplink
+                                      # compression of the fused [C, M_total]
+                                      # client-delta buffer, decoded INSIDE
+                                      # the one fedagg kernel launch:
+                                      # identity (no codec — the pinned
+                                      # legacy wire, agg_dtype only) | int8
+                                      # (symmetric per-client-row int8 with
+                                      # one f32 scale per client,
+                                      # dequantize-in-register) | topk (per-
+                                      # client magnitude top-k
+                                      # sparsification, sparse-scatter-
+                                      # accumulate) | sketch (CountSketch
+                                      # rows — delta_sketch infra — decoded
+                                      # by hash/sign gather). Non-identity
+                                      # codecs carry per-client error-
+                                      # feedback accumulators in
+                                      # FederationState.ef_accum (see
+                                      # error_feedback)
+    error_feedback: bool = True       # non-identity wire_codec: carry the
+                                      # per-client compression residual
+                                      # x - decode(encode(x)) in
+                                      # FederationState.ef_accum and add it
+                                      # to the NEXT round's delta before
+                                      # encoding (EF / EF21-style memory),
+                                      # so compression bias is re-injected
+                                      # instead of lost and convergence
+                                      # doesn't stall. Updates at PUSH time
+                                      # under scan_async (when the delta is
+                                      # encoded, not when it lands). Ignored
+                                      # by identity
+    codec_topk_frac: float = 0.01     # topk codec: fraction of M_total kept
+                                      # per client row (k = max(1,
+                                      # floor(frac * M)); values + int32
+                                      # indices travel the wire). Must be in
+                                      # (0, 1]
+    codec_sketch_dim: int = 2048      # sketch codec: CountSketch width per
+                                      # client row (the uplink is [C,
+                                      # codec_sketch_dim] f32; one shared
+                                      # hash/sign stream per run keyed from
+                                      # fold_in(seed, "wire_sketch")). Must
+                                      # be >= 1
     use_pallas: bool = False          # aggregate via the fedagg Pallas TPU
                                       # kernel (CPU keeps the jnp lowering)
     fused_agg: bool = True            # flatten the whole client-stacked pytree

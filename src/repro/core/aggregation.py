@@ -10,7 +10,7 @@ client axis sharded over (pod, data) exactly one all-reduce: FedALIGN's
 entire server-side communication. Accumulation is f32 regardless of leaf
 dtype, so fused and per-leaf outputs agree to the cast.
 
-This module also owns two registries:
+This module also owns three registries:
 
 - the **ServerOptimizer registry**: the fused aggregated delta is a
   pseudo-gradient, and ``aggregate_updates`` applies the configured
@@ -28,6 +28,14 @@ This module also owns two registries:
   plain mean. A registered aggregator is a PREPARE function producing
   gate/weight rewrites and in-kernel operands — the reduction itself stays
   one fused fedagg kernel launch per round for every variant.
+- the **WireCodec registry** (``FedConfig.wire_codec``): lossy uplink
+  compression of the fused [C, M_total] buffer — ``int8`` rows with
+  per-client scales, ``topk`` sparsification, ``sketch`` CountSketch
+  rows — decoded INSIDE the same fedagg launch (dequantize-in-register /
+  sparse-scatter-accumulate / hash-gather per VMEM tile, never a
+  materialized dense decode buffer), with per-client error-feedback
+  accumulators (``FederationState.ef_accum``) re-injecting the
+  compression residual next round so convergence doesn't stall.
 """
 from __future__ import annotations
 
@@ -82,7 +90,8 @@ def flatten_stacked(client_params, dtype=jnp.float32):
 
 def aggregate_clients(client_params, weights, gates, *, use_pallas=False,
                       fused=True, interpret=False, aggregator="mean",
-                      fed=None, key=None):
+                      fed=None, key=None, wire_codec="identity",
+                      ef_accum=None):
     """client_params: pytree with leading client axis C on every leaf.
 
     fused=True (default): one fedagg call on the [C, M_total] flattening;
@@ -95,12 +104,29 @@ def aggregate_clients(client_params, weights, gates, *, use_pallas=False,
     cosines); ``dp`` additionally needs a PRNG ``key`` for its per-round
     noise draw. Whatever the variant, the reduction stays one fedagg call
     (fused) or one per leaf — the robust work happens inside the kernel,
-    plus an O(C * sketch_dim) gate pre-pass for cosine_filter."""
+    plus an O(C * sketch_dim) gate pre-pass for cosine_filter.
+
+    ``wire_codec`` names a registered WireCodec compressing the fused
+    buffer's uplink (identity | int8 | topk | sketch); non-identity codecs
+    require ``fused=True`` and ``fed=``. With ``ef_accum`` (a pytree of
+    f32 per-client error-feedback rows, params-shaped leaves with the same
+    leading client axis as ``client_params``) the accumulator is added to
+    the rows BEFORE encoding and the call returns ``(aggregate,
+    new_ef_accum)`` where ``new_ef_accum`` carries the per-row compression
+    residual x - decode(encode(x)) for every transmitting (gate > 0,
+    finite-residual) row and the previous accumulator for the rest —
+    EF-style memory, so compression bias is re-injected next round instead
+    of lost. The identity codec ignores both knobs and keeps the exact
+    legacy trace."""
     check_client_weights(weights)
     leaves, treedef = jax.tree.flatten(client_params)
     if not leaves:
         return client_params
     C = leaves[0].shape[0]
+    # which rows TRANSMITTED this round — captured before any server-side
+    # gate rewrite (cosine_filter): a filtered-out client still encoded and
+    # sent its delta, so its EF accumulator must still advance
+    tx_gates = gates
 
     name = resolve_aggregator(aggregator)
     if name != "mean":
@@ -112,6 +138,27 @@ def aggregate_clients(client_params, weights, gates, *, use_pallas=False,
             fed, client_params, weights, gates, key)
     else:
         kernel_kw, noise = {}, None
+
+    codec_name = resolve_wire_codec(wire_codec)
+    if codec_name != "identity":
+        if fed is None:
+            raise ValueError(
+                f"wire_codec={codec_name!r} reads its rate knobs "
+                "(codec_topk_frac/codec_sketch_dim) off a FedConfig: "
+                "pass fed=")
+        if not fused:
+            raise ValueError(
+                f"wire_codec={codec_name!r} compresses the fused "
+                "[C, M_total] buffer; call with fused=True")
+        return _aggregate_coded(
+            codec_name, leaves, treedef, client_params, weights, gates,
+            tx_gates, kernel_kw, noise, fed=fed, use_pallas=use_pallas,
+            interpret=interpret, ef_accum=ef_accum)
+    if ef_accum is not None:
+        raise ValueError(
+            "ef_accum (error-feedback rows) only makes sense with a "
+            "non-identity wire_codec: the identity wire is lossless, its "
+            "residual is exactly zero")
 
     if not fused:
         # per-leaf path: the dp noise vector is ONE [M_total] draw sliced at
@@ -146,6 +193,50 @@ def aggregate_clients(client_params, weights, gates, *, use_pallas=False,
             out[off:off + size].reshape(leaf.shape[1:]).astype(leaf.dtype))
         off += size
     return jax.tree.unflatten(treedef, agg_leaves)
+
+
+def _aggregate_coded(codec_name, leaves, treedef, client_params, weights,
+                     gates, tx_gates, kernel_kw, noise, *, fed, use_pallas,
+                     interpret, ef_accum):
+    """The compressed-uplink fused path: encode the f32 [C, M_total] buffer
+    (error-feedback rows folded in first), decode-and-reduce inside the one
+    fedagg kernel launch, and advance the EF accumulator.
+
+    The dense decode is materialized ONLY for the EF residual (it is the
+    definition of the residual); the kernel itself consumes the encoded
+    operands and decodes per [C, block_m] tile in VMEM."""
+    C = leaves[0].shape[0]
+    sizes = [leaf.size // C for leaf in leaves]
+    codec = get_wire_codec(codec_name)
+    buf = flatten_stacked(client_params, dtype=jnp.float32)
+    if ef_accum is not None:
+        buf = buf + flatten_stacked(ef_accum, dtype=jnp.float32)
+    M = buf.shape[1]
+    updates, codec_kw = codec.encode(fed, buf)
+    out = kops.fedagg(updates, weights, gates, use_pallas=use_pallas,
+                      interpret=interpret, noise=noise, **codec_kw,
+                      **kernel_kw)
+    agg_leaves, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        agg_leaves.append(
+            out[off:off + size].reshape(leaf.shape[1:]).astype(leaf.dtype))
+        off += size
+    agg = jax.tree.unflatten(treedef, agg_leaves)
+    if ef_accum is None:
+        return agg
+    resid = buf - codec.decode(fed, updates, codec_kw, M)
+    # rows advance only when they transmitted (gate > 0 BEFORE server-side
+    # rewrites) AND the residual is finite — a corrupted (NaN) delta must
+    # not poison the accumulator for every later round
+    ok = (tx_gates > 0) & jnp.all(jnp.isfinite(resid), axis=1)
+    ef_leaves, ef_treedef = jax.tree.flatten(ef_accum)
+    new_ef, off = [], 0
+    for old, size in zip(ef_leaves, sizes):
+        r = resid[:, off:off + size].reshape(old.shape)
+        okb = ok.reshape((C,) + (1,) * (old.ndim - 1))
+        new_ef.append(jnp.where(okb, r, old.astype(jnp.float32)))
+        off += size
+    return agg, jax.tree.unflatten(ef_treedef, new_ef)
 
 
 # ================================================================ aggregators
@@ -382,6 +473,209 @@ def _agg_cosine(fed, client_deltas, weights, gates, key):
     return weights, gates * keep, {}, None
 
 
+# ============================================================== wire codecs
+WIRE_CODECS: dict[str, object] = {}
+
+
+def register_wire_codec(name: str):
+    """Register a WireCodec under ``name`` (decorator, like
+    ``register_aggregator``).
+
+    A WireCodec is lossy uplink compression of the fused [C, M_total]
+    client-delta buffer — the client -> server stream that dominates
+    federated communication at pod scale. The registered object provides
+    three static methods:
+
+    - ``encode(fed, buf) -> (updates, codec_kw)``: compress the f32
+      [C, M] buffer into the wire operand ``updates`` (whatever the codec
+      transmits — int8 rows, [C, k] top-k values, [C, dim] sketch rows)
+      plus the extra operands/kwargs ``codec_kw`` that
+      ``kernels.ops.fedagg`` needs to decode-and-reduce INSIDE the one
+      fused kernel launch (per-client dequant scales, index planes,
+      hash/sign streams, and the true output length ``out_m``).
+    - ``decode(fed, updates, codec_kw, M) -> [C, M] f32``: the dense
+      decode — used ONLY for the error-feedback residual and by tests.
+      The aggregation itself never materializes it: the kernel decodes
+      per [C, block_m] tile in VMEM (dequantize-in-register, sparse
+      scatter-accumulate, sketch gather).
+    - ``wire_bytes(fed, C, M) -> int``: analytic uplink bytes per round
+      (the bench's ``bytes_per_round`` metric).
+    """
+    def deco(codec):
+        codec.codec_name = name
+        WIRE_CODECS[name] = codec
+        return codec
+    return deco
+
+
+def resolve_wire_codec(name) -> str:
+    """Canonical registry name ('none' / None / '' mean identity)."""
+    return "identity" if name in (None, "", "none") else name
+
+
+def get_wire_codec(name):
+    name = resolve_wire_codec(name)
+    try:
+        return WIRE_CODECS[name]
+    except KeyError:
+        raise ValueError(f"unknown wire codec {name!r}; "
+                         f"registered: {sorted(WIRE_CODECS)}") from None
+
+
+def check_codec_config(fed):
+    """Validate the wire-codec knobs whose bad values would corrupt the
+    uplink silently (same contract as ``check_aggregator_config``:
+    actionable errors at the engine boundary, no-op when disabled)."""
+    name = resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+    get_wire_codec(name)
+    if name == "identity":
+        return
+    if not fed.fused_agg:
+        raise ValueError(
+            f"wire_codec={name!r} compresses the fused [C, M_total] buffer; "
+            "fused_agg=False never builds that buffer (one kernel call per "
+            "leaf) — enable fused_agg or set wire_codec='identity'")
+    if name == "topk" and not 0.0 < float(fed.codec_topk_frac) <= 1.0:
+        raise ValueError(
+            f"FedConfig.codec_topk_frac={fed.codec_topk_frac} outside "
+            "(0, 1]: it is the kept fraction of M_total per client row "
+            "(k = max(1, floor(frac * M)))")
+    if name == "sketch" and int(fed.codec_sketch_dim) < 1:
+        raise ValueError(
+            f"FedConfig.codec_sketch_dim={fed.codec_sketch_dim} must be "
+            ">= 1 (the CountSketch row width on the wire)")
+
+
+def wire_sketch_streams(fed, M: int):
+    """The run-constant CountSketch hash/sign planes of the sketch codec:
+    ``h`` [M] i32 buckets, ``sign`` [M] f32 Rademacher signs.
+
+    One named stream off the config seed (``fold_in_name`` — crc32, so
+    deterministic across processes), SHARED by every client and every
+    round: encode buckets coordinates with ``h``/``sign``, decode gathers
+    the same buckets back, and sketched rounds stay backend-identical."""
+    dim = int(fed.codec_sketch_dim)
+    key = fold_in_name(jax.random.PRNGKey(fed.seed), "wire_sketch")
+    kh, ks = jax.random.split(key)
+    h = jax.random.randint(kh, (M,), 0, dim, dtype=jnp.int32)
+    sign = jax.random.rademacher(ks, (M,), dtype=jnp.float32)
+    return h, sign
+
+
+def wire_bytes_per_round(fed, num_rows: int, m_total: int) -> int:
+    """Analytic uplink bytes for one round: ``num_rows`` client rows (C
+    dense, K under a cohort gather) of ``m_total`` coordinates through the
+    configured ``fed.wire_codec`` (identity pays ``agg_dtype`` bytes)."""
+    codec = get_wire_codec(getattr(fed, "wire_codec", "identity"))
+    return int(codec.wire_bytes(fed, int(num_rows), int(m_total)))
+
+
+@register_wire_codec("identity")
+class _IdentityCodec:
+    """No codec: the [C, M] buffer travels as-is at ``fed.agg_dtype``."""
+
+    @staticmethod
+    def encode(fed, buf):
+        return buf, {}
+
+    @staticmethod
+    def decode(fed, updates, codec_kw, M):
+        return updates.astype(jnp.float32)
+
+    @staticmethod
+    def wire_bytes(fed, C, M):
+        return C * M * jnp.dtype(fed.agg_dtype).itemsize
+
+
+@register_wire_codec("int8")
+class _Int8Codec:
+    """Symmetric per-client-row int8: q = round(x / scale) clipped to
+    [-127, 127], scale = rowmax|x| / 127 (1.0 on an all-zero row, so its
+    decode is exact zero). The wire is [C, M] int8 plus one f32 scale per
+    client — 4x under f32 agg_dtype — and the kernel dequantizes
+    ``q * scale`` in-register right after the tile load, under every
+    registered aggregator (inside the mean/dp contraction; before the
+    order-statistics sort)."""
+
+    @staticmethod
+    def encode(fed, buf):
+        amax = jnp.max(jnp.abs(buf), axis=1)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+        q = jnp.clip(jnp.round(buf / scale[:, None]), -127.0, 127.0)
+        return q.astype(jnp.int8), dict(codec="int8", dequant_scale=scale)
+
+    @staticmethod
+    def decode(fed, updates, codec_kw, M):
+        scale = codec_kw["dequant_scale"].astype(jnp.float32)
+        return updates.astype(jnp.float32) * scale[:, None]
+
+    @staticmethod
+    def wire_bytes(fed, C, M):
+        return C * M + C * 4                        # int8 rows + f32 scales
+
+
+@register_wire_codec("topk")
+class _TopkCodec:
+    """Per-client magnitude top-k sparsification: keep the
+    k = max(1, floor(codec_topk_frac * M)) largest-|x| coordinates per row
+    (an f32 value + i32 index pair each on the wire). The kernel rebuilds
+    every [C, block_m] tile with a fori_loop scatter-accumulate over the k
+    entries — sparse in HBM, dense only in VMEM."""
+
+    @staticmethod
+    def _k(fed, M):
+        return max(1, min(int(M), int(float(fed.codec_topk_frac) * M)))
+
+    @staticmethod
+    def encode(fed, buf):
+        M = buf.shape[1]
+        k = _TopkCodec._k(fed, M)
+        _, idx = jax.lax.top_k(jnp.abs(buf), k)
+        idx = idx.astype(jnp.int32)
+        vals = jnp.take_along_axis(buf, idx, axis=1).astype(jnp.float32)
+        return vals, dict(codec="topk", topk_idx=idx, out_m=M)
+
+    @staticmethod
+    def decode(fed, updates, codec_kw, M):
+        C = updates.shape[0]
+        rows = jnp.arange(C)[:, None]
+        dense = jnp.zeros((C, M), jnp.float32)
+        return dense.at[rows, codec_kw["topk_idx"]].add(
+            updates.astype(jnp.float32))
+
+    @staticmethod
+    def wire_bytes(fed, C, M):
+        return C * _TopkCodec._k(fed, M) * 8        # f32 value + i32 index
+
+
+@register_wire_codec("sketch")
+class _SketchCodec:
+    """CountSketch uplink (the ``engine.delta_sketch`` projection with ONE
+    shared hash/sign stream per run — ``wire_sketch_streams``): each client
+    transmits [codec_sketch_dim] f32 bucket sums; decode gathers the
+    unbiased estimate ``sign[m] * s[c, h[m]]`` per kernel tile."""
+
+    @staticmethod
+    def encode(fed, buf):
+        M = buf.shape[1]
+        dim = int(fed.codec_sketch_dim)
+        h, sign = wire_sketch_streams(fed, M)
+        s = jax.vmap(
+            lambda row: jax.ops.segment_sum(sign * row, h, num_segments=dim)
+        )(buf.astype(jnp.float32))
+        return s, dict(codec="sketch", sketch_h=h, sketch_sign=sign, out_m=M)
+
+    @staticmethod
+    def decode(fed, updates, codec_kw, M):
+        h = codec_kw["sketch_h"]
+        sign = codec_kw["sketch_sign"].astype(jnp.float32)
+        return updates.astype(jnp.float32)[:, h] * sign[None, :]
+
+    @staticmethod
+    def wire_bytes(fed, C, M):
+        return C * int(fed.codec_sketch_dim) * 4    # f32 bucket rows
+
+
 # ========================================================= server optimizers
 SERVER_OPTIMIZERS: dict[str, Callable] = {}
 
@@ -470,7 +764,7 @@ def apply_server_opt(fed, global_params, opt_state, agg_delta, *, scale=1.0):
 
 
 def aggregate_delta(global_params, client_params, weights, gates, *,
-                    fed, interpret=False, key=None):
+                    fed, interpret=False, key=None, ef_accum=None):
     """Delta-form gated aggregation WITHOUT the server step:
 
         d <- agg(cast(w_k - w, fed.agg_dtype))      (ONE fused fedagg call)
@@ -483,10 +777,30 @@ def aggregate_delta(global_params, client_params, weights, gates, *,
     these deltas awaiting its (staleness-discounted) ``apply_server_opt``
     some rounds later — the robust/private reduction happens at PUSH time,
     so every aggregator commutes with the async buffer. ``client_params``
-    may live in cohort space [K, ...] (zero gates drop padding slots)."""
+    may live in cohort space [K, ...] (zero gates drop padding slots).
+
+    A non-identity ``fed.wire_codec`` compresses the fused buffer's uplink
+    before the kernel decodes-and-reduces it; with ``ef_accum`` (the
+    per-client error-feedback rows, matching ``client_params``'s leading
+    axis) the call returns ``(delta, new_ef_accum)`` — under scan_async
+    this runs at PUSH time, so the accumulator advances when the delta is
+    encoded, not when it lands. ``wire_codec='identity'`` keeps the exact
+    legacy trace (python-level branch, codec code untouched)."""
     ad = jnp.dtype(fed.agg_dtype)
     deltas = jax.tree.map(lambda ck, g: (ck - g[None]).astype(ad),
                           client_params, global_params)
+    codec_name = resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+    if codec_name != "identity":
+        return aggregate_clients(deltas, weights, gates,
+                                 use_pallas=fed.use_pallas,
+                                 fused=fed.fused_agg, interpret=interpret,
+                                 aggregator=getattr(fed, "aggregator", "mean"),
+                                 fed=fed, key=key, wire_codec=codec_name,
+                                 ef_accum=ef_accum)
+    if ef_accum is not None:
+        raise ValueError(
+            "ef_accum given but fed.wire_codec='identity': the lossless "
+            "wire has no compression residual to accumulate")
     return aggregate_clients(deltas, weights, gates,
                              use_pallas=fed.use_pallas,
                              fused=fed.fused_agg, interpret=interpret,

@@ -93,8 +93,9 @@ import jax.numpy as jnp
 
 from repro.core.aggregation import (aggregate_delta, aggregator_key,
                                     apply_server_opt, check_aggregator_config,
-                                    flatten_stacked, get_aggregator,
-                                    inclusion_mass, resolve_aggregator,
+                                    check_codec_config, flatten_stacked,
+                                    get_aggregator, inclusion_mass,
+                                    resolve_aggregator, resolve_wire_codec,
                                     server_optimizer)
 from repro.core.alignment import epsilon_at, global_loss_from_locals
 from repro.optim.schedules import make_schedule
@@ -150,6 +151,17 @@ class FederationState:
     * ``nonfinite_skips`` — scalar i32 count of CONSECUTIVE rounds the
       divergence guard skipped on a non-finite aggregate (reset to 0 by
       any finite round), or ``()`` when ``fed.divergence_guard`` is off.
+    * ``ef_accum`` — the per-client error-feedback accumulators of the
+      wire codec (``core/aggregation``'s WireCodec registry): params-
+      shaped f32 leaves with a leading [C] client axis, each row carrying
+      the compression residual x - decode(encode(x)) of that client's
+      LAST transmitted delta, re-added to its next delta before encoding.
+      ``()`` unless ``fed.wire_codec`` is non-identity AND
+      ``fed.error_feedback`` — disabled configs keep the exact legacy
+      leaf layout. A row advances when its client's delta is ENCODED
+      (push time under ``scan_async``, where aggregation runs at push —
+      not when the buffered delta lands), and only with a finite
+      residual (a corrupted NaN delta must not poison the accumulator).
     """
     params: Any
     opt_state: Any
@@ -160,6 +172,7 @@ class FederationState:
     last_delta: Any = ()
     latency: Any = ()
     nonfinite_skips: Any = ()
+    ef_accum: Any = ()
 
     def replace(self, **kw) -> "FederationState":
         return dataclasses.replace(self, **kw)
@@ -168,7 +181,8 @@ class FederationState:
 jax.tree_util.register_dataclass(
     FederationState,
     data_fields=["params", "opt_state", "backlog", "util_ema", "incl_ema",
-                 "inflight", "last_delta", "latency", "nonfinite_skips"],
+                 "inflight", "last_delta", "latency", "nonfinite_skips",
+                 "ef_accum"],
     meta_fields=[])
 
 
@@ -298,16 +312,31 @@ def init_last_delta(fed):
     return ()
 
 
+def init_ef_accum(params, fed, num_clients):
+    """Zero per-client error-feedback accumulators for the wire codec
+    (params-shaped f32 leaves with a leading [C] client axis), or ``()``
+    when the codec is identity or ``fed.error_feedback`` is off — layout
+    fixed by the CONFIG, like every other FederationState leaf."""
+    if resolve_wire_codec(getattr(fed, "wire_codec", "identity")) == "identity":
+        return ()
+    if not fed.error_feedback:
+        return ()
+    C = int(num_clients)
+    return jax.tree.map(
+        lambda p: jnp.zeros((C,) + tuple(p.shape), jnp.float32), params)
+
+
 def init_state(params, fed, num_clients: Optional[int] = None) -> FederationState:
     """Fresh FederationState for a federation of ``num_clients`` (defaults
     to ``fed.num_clients``): zero moments, zero backlog, zero EMAs, and an
     empty in-flight buffer (plus zero drift-reference sketch under
     ``adaptive_staleness``) when ``fed.async_depth > 0``. Latency leaves
-    (event clock) and the divergence-guard skip counter exist only when
-    their feature is enabled — disabled configs keep the exact legacy
-    leaf layout."""
+    (event clock), the divergence-guard skip counter, and the wire codec's
+    error-feedback accumulators exist only when their feature is enabled —
+    disabled configs keep the exact legacy leaf layout."""
     check_async_config(fed)
     check_clock_config(fed)
+    check_codec_config(fed)
     C = int(num_clients if num_clients is not None else fed.num_clients)
     return FederationState(
         params=params,
@@ -319,7 +348,8 @@ def init_state(params, fed, num_clients: Optional[int] = None) -> FederationStat
         last_delta=init_last_delta(fed),
         latency=init_latency(fed, C),
         nonfinite_skips=(jnp.zeros((), jnp.int32) if fed.divergence_guard
-                         else ()))
+                         else ()),
+        ef_accum=init_ef_accum(params, fed, C))
 
 
 # ============================================================ selection seam
@@ -465,7 +495,7 @@ def cosine_to_priority(flat_deltas, weights, priority_mask):
 
 
 def cohort_select(gates, align_vals, global_align, priority_mask, k: int,
-                  backlog=None):
+                  backlog=None, backlog_boost=0.0):
     """Deterministic gather order for the gate-before-train cohort.
 
     Returns (cohort_idx [K], cohort_gates [K], effective_gates [C]).
@@ -480,17 +510,34 @@ def cohort_select(gates, align_vals, global_align, priority_mask, k: int,
     longer-starved client wins the slot, so overflow rotates instead of
     permanently starving the same well-aligned clients. At backlog 0 (or
     ``backlog=None``) ties fall back to client index — the original
-    drop-worst policy, unchanged. ``effective_gates`` is the [C] inclusion
+    drop-worst policy, unchanged. ``backlog_boost`` > 0 promotes backlog
+    from tie-breaker to rank term: a non-priority client's rank becomes
+    ``|F_k - F| - backlog_boost * backlog``, so a starved client overtakes
+    slightly BETTER-matched rivals once its debt grows — float-valued
+    match gaps almost never tie exactly, so the pure tie-break cannot
+    rotate those cohorts. Priority clients pin to the front regardless of
+    any boost; ``backlog_boost=0`` (the default) is bit-identical to the
+    tie-break-only policy. ``effective_gates`` is the [C] inclusion
     vector the aggregation actually honours (== ``gates`` when nothing
     overflowed)."""
     pri = priority_mask.astype(bool)
     C = gates.shape[0]
     diff = jnp.abs(align_vals - global_align).astype(jnp.float32)
-    rank = jnp.where(pri, -1.0, jnp.minimum(diff, 1e30))
-    key = jnp.where(gates > 0, rank, jnp.inf)
     bl = (jnp.zeros((C,), jnp.float32) if backlog is None
           else backlog.astype(jnp.float32))
-    # lexicographic: match quality, then backlog (older debts first), then
+    boost = float(backlog_boost)
+    if boost != 0.0:
+        # boosted rank: backlog debt buys down the match gap. Priority
+        # moves from -1.0 to -inf so no boosted non-priority rank (which
+        # can go arbitrarily negative) can ever displace a priority client.
+        rank = jnp.where(pri, -jnp.inf,
+                         jnp.minimum(diff, 1e30) - jnp.float32(boost) * bl)
+    else:
+        # python-level branch on the float literal: the boost-off trace is
+        # LITERALLY the legacy trace (bit-identity pinned by tests)
+        rank = jnp.where(pri, -1.0, jnp.minimum(diff, 1e30))
+    key = jnp.where(gates > 0, rank, jnp.inf)
+    # lexicographic: (boosted) rank, then backlog (older debts first), then
     # client index — deterministic and identical to the stable argsort of
     # ``key`` whenever every backlog is 0
     order = jnp.lexsort((jnp.arange(C), -bl, key))
@@ -540,7 +587,7 @@ def inclusion_update(fed, incl_ema, eff_gates):
 
 
 def server_delta(fed, global_params, client_params, weights, gates, *,
-                 key=None):
+                 key=None, ef_accum=None):
     """(6a) renormalized gated delta aggregation: one fused fedagg on the
     gated client deltas, honouring ``fed.agg_dtype``'s reduced-precision
     wire format, WITHOUT the ServerOptimizer step. The synchronous round
@@ -553,10 +600,15 @@ def server_delta(fed, global_params, client_params, weights, gates, *,
     ``client_params``/``weights``/``gates`` may live in cohort space
     [K, ...]: zero gates drop padding slots, so the result matches the
     dense [C, ...] aggregation whenever every included client made the
-    cohort. THE aggregation-routing seam — the sharded pod rounds call it
-    too (core/aggregation.aggregate_delta)."""
+    cohort. With a non-identity ``fed.wire_codec`` and ``ef_accum`` (the
+    matching per-client error-feedback rows, cohort-gathered when
+    ``client_params`` is) the call returns ``(delta, new_ef_accum)`` —
+    because this runs at push time, scan_async's accumulator advances
+    when the delta is encoded, not when it lands. THE aggregation-routing
+    seam — the sharded pod rounds call it too
+    (core/aggregation.aggregate_delta)."""
     return aggregate_delta(global_params, client_params, weights, gates,
-                           fed=fed, key=key)
+                           fed=fed, key=key, ef_accum=ef_accum)
 
 
 def staleness_discount(fed, age=None):
@@ -1184,13 +1236,18 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
     check_async_config(fed)
     check_aggregator_config(fed)
     check_clock_config(fed)
+    check_codec_config(fed)
     # stochastic aggregators (dp) get a per-round key; deterministic ones
     # keep a key-free trace (python-level branch, not a traced cond)
     agg_needs_key = get_aggregator(fed.aggregator).needs_key
-    # fault injection / event clock / divergence guard are python-level
-    # flags: disabled configs produce literally the fault-free trace
+    # fault injection / event clock / divergence guard / wire codec are
+    # python-level flags: disabled configs produce literally the
+    # fault-free (resp. identity-wire) trace
     failure_on = resolve_failure_model(fed.failure_model) != "none"
     clock_on = fed.latency_mode != "none"
+    codec_on = (resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+                != "identity")
+    ef_on = codec_on and bool(fed.error_feedback)
     eval_clients, train_clients = _BACKENDS[backend]
     strategy = get_strategy(fed.selection)
     solver = local_solver(loss_fn, fed)
@@ -1253,6 +1310,9 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
         lkeys = jax.random.split(lkey, C)
 
         akey = aggregator_key(fed, round_idx) if agg_needs_key else None
+        # carried error-feedback rows; reassigned by the aggregation site
+        # when the codec + EF are on, passed through untouched otherwise
+        ef_accum = state.ef_accum
 
         def make_ctx(delta_cos=None):
             return SelectionContext(
@@ -1274,7 +1334,8 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
                 # overflow ties resolve toward the longest-backlogged client
                 cohort_idx, cohort_gates, gates = cohort_select(
                     sel_gates, align_vals, g_align, priority_mask, k,
-                    backlog=state.backlog)
+                    backlog=state.backlog,
+                    backlog_boost=float(fed.backlog_boost))
                 cohort_params = train_clients(
                     solver, global_params,
                     jax.tree.map(lambda a: a[cohort_idx], data),
@@ -1290,8 +1351,22 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
                     keep = 1.0 - lost.astype(jnp.float32)
                     agg_g = agg_g * keep[cohort_idx]
                     gates = gates * keep
-                agg_delta = server_delta(fed, global_params, cohort_params,
-                                         agg_w, agg_g, key=akey)
+                if ef_on:
+                    # only the K cohort slots encoded a delta this round:
+                    # their EF rows gather with the cohort and scatter back
+                    # advanced; everyone else's accumulator is untouched
+                    cohort_ef = jax.tree.map(lambda a: a[cohort_idx],
+                                             state.ef_accum)
+                    agg_delta, cohort_ef = server_delta(
+                        fed, global_params, cohort_params, agg_w, agg_g,
+                        key=akey, ef_accum=cohort_ef)
+                    ef_accum = jax.tree.map(
+                        lambda full, sub: full.at[cohort_idx].set(sub),
+                        state.ef_accum, cohort_ef)
+                else:
+                    agg_delta = server_delta(fed, global_params,
+                                             cohort_params, agg_w, agg_g,
+                                             key=akey)
             else:
                 # (5) dense: everyone trains, but the scan backend still
                 # cond-skips gated-out clients (no epochs for gate 0)
@@ -1303,8 +1378,14 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
                 if lost is not None:
                     gates = gates * (1.0 - lost.astype(jnp.float32))
                 agg_w, agg_g = weights, gates
-                agg_delta = server_delta(fed, global_params, client_params,
-                                         agg_w, agg_g, key=akey)
+                if ef_on:
+                    agg_delta, ef_accum = server_delta(
+                        fed, global_params, client_params, agg_w, agg_g,
+                        key=akey, ef_accum=state.ef_accum)
+                else:
+                    agg_delta = server_delta(fed, global_params,
+                                             client_params, agg_w, agg_g,
+                                             key=akey)
         else:
             # (5) train-first: the statistic needs the client updates
             sel_gates = None
@@ -1332,8 +1413,13 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
             if lost is not None:
                 gates = gates * (1.0 - lost.astype(jnp.float32))
             agg_w, agg_g = weights, gates
-            agg_delta = server_delta(fed, global_params, client_params,
-                                     agg_w, agg_g, key=akey)
+            if ef_on:
+                agg_delta, ef_accum = server_delta(
+                    fed, global_params, client_params, agg_w, agg_g,
+                    key=akey, ef_accum=state.ef_accum)
+            else:
+                agg_delta = server_delta(fed, global_params, client_params,
+                                         agg_w, agg_g, key=akey)
 
         # divergence guard: a non-finite aggregate (poisoned delta, loss
         # overflow) must never touch params or optimizer moments — and a
@@ -1391,7 +1477,8 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
                                     incl_ema=incl_ema, inflight=inflight,
                                     last_delta=last_delta,
                                     latency=state.latency,
-                                    nonfinite_skips=nonfinite_skips)
+                                    nonfinite_skips=nonfinite_skips,
+                                    ef_accum=ef_accum)
 
         npri = (1.0 - priority_mask.astype(jnp.float32))
         included_mass = jnp.sum(npri * weights * gates)

@@ -64,9 +64,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import (aggregator_key, apply_server_opt,
-                                    check_aggregator_config, flatten_stacked,
+                                    check_aggregator_config,
+                                    check_codec_config, flatten_stacked,
                                     get_aggregator, inclusion_mass,
-                                    resolve_aggregator)
+                                    resolve_aggregator, resolve_wire_codec)
 from repro.core.alignment import epsilon_at
 from repro.fl import engine
 from repro.utils import tree_axpy, tree_sub
@@ -119,7 +120,7 @@ def _gate_ctx(fed, state, util_ema, local_losses, server_loss, pm, w,
 
 def _next_state(fed, state, new_params, opt_state, sel_gates, eff_gates,
                 util_ema, inflight=None, last_delta=None,
-                nonfinite_skips=None):
+                nonfinite_skips=None, ef_accum=None):
     """Advance the cross-round carry with THE engine update rules."""
     return engine.FederationState(
         params=new_params, opt_state=opt_state,
@@ -130,7 +131,8 @@ def _next_state(fed, state, new_params, opt_state, sel_gates, eff_gates,
         last_delta=state.last_delta if last_delta is None else last_delta,
         latency=state.latency,
         nonfinite_skips=(state.nonfinite_skips if nonfinite_skips is None
-                         else nonfinite_skips))
+                         else nonfinite_skips),
+        ef_accum=state.ef_accum if ef_accum is None else ef_accum)
 
 
 def _apply_delta(fed, state, params, agg_delta, mass=None, push_timer=None,
@@ -211,11 +213,18 @@ def make_spatial_round(model, fed, num_clients: int):
     engine.check_async_config(fed)
     engine.check_clock_config(fed)
     check_aggregator_config(fed)
+    check_codec_config(fed)
     agg_needs_key = get_aggregator(fed.aggregator).needs_key
     strategy = engine.get_strategy(fed.selection)
     use_cohort = fed.max_cohort > 0 and not strategy.needs_deltas
     failure_on = engine.resolve_failure_model(fed.failure_model) != "none"
     clock_on = fed.latency_mode != "none"
+    # the wire codec is shard-local: each pod shard encodes its own client
+    # rows and the fused kernel decodes-and-reduces per shard — the single
+    # cross-shard all-reduce stays on the [M_total] aggregate, unchanged
+    codec_on = (resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+                != "identity")
+    ef_on = codec_on and bool(fed.error_feedback)
 
     def round_step(state, batch, round_idx=0):
         params = state.params
@@ -226,6 +235,7 @@ def make_spatial_round(model, fed, num_clients: int):
 
         server_loss, _ = model.loss_fn(params, batch["server"])
         akey = aggregator_key(fed, round_idx) if agg_needs_key else None
+        ef_accum = state.ef_accum
 
         # fault injection mirrors the engine round: availability folds into
         # the selection context, crashes/deadline-late clients are masked
@@ -249,7 +259,8 @@ def make_spatial_round(model, fed, num_clients: int):
                 fed.selection)
             idx, cg, gates = engine.cohort_select(
                 sel_gates, local_losses, server_loss, pm,
-                min(fed.max_cohort, C), backlog=state.backlog)
+                min(fed.max_cohort, C), backlog=state.backlog,
+                backlog_boost=float(fed.backlog_boost))
             cohort_params = jax.vmap(
                 lambda cb: _train_steps(model, params, cb, lr, E))(
                 jax.tree.map(lambda a: a[idx], client_batch))
@@ -263,8 +274,19 @@ def make_spatial_round(model, fed, num_clients: int):
                 keep = 1.0 - lost.astype(jnp.float32)
                 agg_g = agg_g * keep[idx]
                 gates = gates * keep
-            agg_delta = engine.server_delta(fed, params, cohort_params,
-                                            agg_w, agg_g, key=akey)
+            if ef_on:
+                # only the K gathered slots encoded a delta: their EF rows
+                # gather with the cohort, scatter back advanced
+                cohort_ef = jax.tree.map(lambda a: a[idx], state.ef_accum)
+                agg_delta, cohort_ef = engine.server_delta(
+                    fed, params, cohort_params, agg_w, agg_g, key=akey,
+                    ef_accum=cohort_ef)
+                ef_accum = jax.tree.map(
+                    lambda full, sub: full.at[idx].set(sub),
+                    state.ef_accum, cohort_ef)
+            else:
+                agg_delta = engine.server_delta(fed, params, cohort_params,
+                                                agg_w, agg_g, key=akey)
         else:
             client_params, local_losses = jax.vmap(
                 lambda cb: _local_steps(model, params, cb, lr, E))(client_batch)
@@ -297,8 +319,13 @@ def make_spatial_round(model, fed, num_clients: int):
             if lost is not None:
                 gates = gates * (1.0 - lost.astype(jnp.float32))
             agg_w, agg_g = w, gates
-            agg_delta = engine.server_delta(fed, params, client_params,
-                                            agg_w, agg_g, key=akey)
+            if ef_on:
+                agg_delta, ef_accum = engine.server_delta(
+                    fed, params, client_params, agg_w, agg_g, key=akey,
+                    ef_accum=state.ef_accum)
+            else:
+                agg_delta = engine.server_delta(fed, params, client_params,
+                                                agg_w, agg_g, key=akey)
         finite = engine.aggregate_finite(fed, agg_delta, server_loss)
         push_timer = (engine.slot_timer(fed, state.latency, gates)
                       if clock_on and fed.async_depth > 0 else None)
@@ -310,7 +337,8 @@ def make_spatial_round(model, fed, num_clients: int):
                                 sel_gates, gates, util_ema, inflight=inflight,
                                 last_delta=last_delta,
                                 nonfinite_skips=engine.skips_update(state,
-                                                                    finite))
+                                                                    finite),
+                                ef_accum=ef_accum)
         stats = _async_stats(fed, {
             "server_loss": server_loss,
             "local_losses": local_losses,
@@ -356,7 +384,15 @@ def make_temporal_round(model, fed, cohort: int):
     engine.check_async_config(fed)
     engine.check_clock_config(fed)
     check_aggregator_config(fed)
-    robust_gather = resolve_aggregator(fed.aggregator) != "mean"
+    check_codec_config(fed)
+    codec_on = (resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+                != "identity")
+    ef_on = codec_on and bool(fed.error_feedback)
+    # a non-identity wire codec also forces the gather: it encodes per-
+    # client ROWS of the fused [C, M_total] buffer (row max-abs scales,
+    # row top-k, row sketches), which the streamed (num, den) mean carry
+    # never materializes — the codec path IS the fused fedagg seam
+    robust_gather = resolve_aggregator(fed.aggregator) != "mean" or codec_on
     agg_needs_key = get_aggregator(fed.aggregator).needs_key
     strategy = engine.get_strategy(fed.selection)
     failure_on = engine.resolve_failure_model(fed.failure_model) != "none"
@@ -385,6 +421,7 @@ def make_temporal_round(model, fed, cohort: int):
         w = batch["weights"]
         C = pm.shape[0]
         server_loss, _ = model.loss_fn(params, batch["server"])
+        ef_accum = state.ef_accum
 
         # fault injection (corruption excluded above): availability masks
         # selection, crashes/deadline-late clients lose their mass post-train
@@ -445,8 +482,13 @@ def make_temporal_round(model, fed, cohort: int):
                     "temporal robust aggregation must gather the client axis: "
                     f"expected {(C,) + p.shape}, got {s.shape}")
             akey = aggregator_key(fed, round_idx) if agg_needs_key else None
-            agg_delta = engine.server_delta(fed, params, stacked, w, gates,
-                                            key=akey)
+            if ef_on:
+                agg_delta, ef_accum = engine.server_delta(
+                    fed, params, stacked, w, gates, key=akey,
+                    ef_accum=state.ef_accum)
+            else:
+                agg_delta = engine.server_delta(fed, params, stacked, w,
+                                                gates, key=akey)
             mass = inclusion_mass(fed, w, gates)
         else:
             def per_client(carry, inp):
@@ -490,7 +532,8 @@ def make_temporal_round(model, fed, cohort: int):
                                 sel_gates, gates, util_ema, inflight=inflight,
                                 last_delta=last_delta,
                                 nonfinite_skips=engine.skips_update(state,
-                                                                    finite))
+                                                                    finite),
+                                ef_accum=ef_accum)
         stats = _async_stats(fed, {
             "server_loss": server_loss,
             "local_losses": local_losses,

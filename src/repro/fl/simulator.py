@@ -110,6 +110,18 @@ def _state_fingerprint(fed) -> Optional[dict]:
                   dropout_len=int(fed.dropout_len),
                   corrupt_rate=float(fed.corrupt_rate),
                   corrupt_scale=float(fed.corrupt_scale))
+    # wire codec: the EF accumulators carry residuals of the WRITER's
+    # codec/rate knobs — resuming under a different codec (or topk/sketch
+    # rate) would re-inject residuals that no longer describe the wire,
+    # and (EF off) the compressed stream itself would change mid-run
+    from repro.core.aggregation import resolve_wire_codec
+    wc = resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+    if wc != "identity":
+        fp.update(wire_codec=wc, error_feedback=bool(fed.error_feedback))
+        if wc == "topk":
+            fp["codec_topk_frac"] = float(fed.codec_topk_frac)
+        if wc == "sketch":
+            fp["codec_sketch_dim"] = int(fed.codec_sketch_dim)
     return fp or None
 
 
@@ -146,11 +158,14 @@ def load_federation_state(path: str, like_state, fed=None):
                 f"{meta} but this config resumes with {want or '{}'} — "
                 "async slot ages/timers would pop on the wrong schedule, "
                 "the optimizer moments would be fed by a different "
-                "aggregator, and/or the fault-injection stream would "
-                "diverge from the writer's. Resume with the writer's "
+                "aggregator, the restored error-feedback accumulators "
+                "would re-inject residuals of a different wire codec (or "
+                "topk/sketch rate), and/or the fault-injection stream "
+                "would diverge from the writer's. Resume with the writer's "
                 "async_mode/min_lag/adaptive_staleness/aggregator/"
-                "latency_*/round_deadline/failure-model knobs (or drain "
-                "the buffer before switching policies)")
+                "latency_*/round_deadline/failure-model/wire_codec/"
+                "error_feedback/codec-rate knobs (or drain the buffer "
+                "before switching policies)")
     return tree["state"], tree["rng"], step
 
 

@@ -136,23 +136,76 @@ def _included_stats(g):
     return inc, jnp.sum(inc.astype(jnp.int32))
 
 
-def _mean_kernel(u_ref, w_ref, g_ref, o_ref):
+# --------------------------------------------------------- wire-codec decode
+# Each decoder turns a grid cell's ENCODED operand refs into the decoded
+# [C, block_m] f32 tile, entirely in VMEM/registers — the dense buffer is
+# never materialized in HBM on this path (the WireCodec contract,
+# core/aggregation.py). The aggregator kernels below are codec-agnostic:
+# they see only the decoded tile.
+
+def _decode_identity(refs):
+    (u_ref,) = refs
+    return u_ref[...].astype(jnp.float32)
+
+
+def _decode_int8(refs):
+    # dequantize-in-register: int8 rows times the per-client f32 scale
+    u_ref, s_ref = refs
+    return u_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)[:, None]
+
+
+def _decode_topk(block_m, refs):
+    # sparse-scatter-accumulate: every cell walks the k (value, index)
+    # pairs once and one-hot-accumulates the entries landing in its
+    # column range. Indices within a row are distinct (top_k), so the
+    # accumulation places each value exactly once — bit-identical to the
+    # jnp lowering's scatter-add.
+    v_ref, i_ref = refs                                        # [C, k] each
+    v = v_ref[...].astype(jnp.float32)
+    ix = i_ref[...]
+    C, k = v.shape
+    base = pl.program_id(0) * block_m
+    cols = base + jax.lax.broadcasted_iota(jnp.int32, (C, block_m), 1)
+
+    def body(j, acc):
+        vj = jax.lax.dynamic_slice(v, (0, j), (C, 1))          # [C, 1]
+        ij = jax.lax.dynamic_slice(ix, (0, j), (C, 1))         # [C, 1]
+        return acc + jnp.where(cols == ij, vj, 0.0)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros((C, block_m), jnp.float32))
+
+
+def _decode_sketch(refs):
+    # CountSketch estimate: gather each column's bucket from the [C, dim]
+    # sketch rows and apply its sign (0 on the padded tail, so padded
+    # columns decode to exact zero)
+    s_ref, h_ref, sg_ref = refs
+    s = s_ref[...].astype(jnp.float32)                         # [C, dim]
+    h = h_ref[...]                                             # [bm] i32
+    sg = sg_ref[...].astype(jnp.float32)                       # [bm]
+    return jnp.take(s, h, axis=1) * sg[None, :]
+
+
+def _mean_kernel(decode, n_enc, *refs):
+    w_ref, g_ref, o_ref = refs[n_enc], refs[n_enc + 1], refs[-1]
     wg = (w_ref[...] * g_ref[...]).astype(jnp.float32)        # [C]
     den = jnp.sum(wg)
-    u = jnp.where((wg > 0)[:, None], u_ref[...].astype(jnp.float32), 0.0)
+    u = jnp.where((wg > 0)[:, None], decode(refs[:n_enc]), 0.0)
     num = jax.lax.dot_general(wg[None, :], u, (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)[0]
     out = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0)
     o_ref[...] = out.astype(o_ref.dtype)
 
 
-def _dp_kernel(noise_scale, u_ref, w_ref, g_ref, s_ref, n_ref, o_ref):
+def _dp_kernel(noise_scale, decode, n_enc, *refs):
+    w_ref, g_ref = refs[n_enc], refs[n_enc + 1]
+    s_ref, n_ref, o_ref = refs[n_enc + 2], refs[n_enc + 3], refs[-1]
     wg = (w_ref[...] * g_ref[...]).astype(jnp.float32)        # [C]
     den = jnp.sum(wg)
     # clip scales, masked on excluded rows: a NaN delta in a gated-out
     # client makes its row_scale NaN and 0 * NaN would leak through
     wgs = jnp.where(wg > 0, wg * s_ref[...].astype(jnp.float32), 0.0)
-    u = jnp.where((wg > 0)[:, None], u_ref[...].astype(jnp.float32), 0.0)
+    u = jnp.where((wg > 0)[:, None], decode(refs[:n_enc]), 0.0)
     num = jax.lax.dot_general(wgs[None, :], u, (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)[0]
     safe = jnp.maximum(den, 1e-30)
@@ -160,10 +213,10 @@ def _dp_kernel(noise_scale, u_ref, w_ref, g_ref, s_ref, n_ref, o_ref):
     o_ref[...] = jnp.where(den > 0, noisy, 0.0).astype(o_ref.dtype)
 
 
-def _trimmed_kernel(trim_frac, u_ref, w_ref, g_ref, o_ref):
-    del w_ref                                                  # unweighted
+def _trimmed_kernel(trim_frac, decode, n_enc, *refs):
+    g_ref, o_ref = refs[n_enc + 1], refs[-1]                   # unweighted
     inc, n = _included_stats(g_ref[...])
-    u = jnp.where(inc[:, None], u_ref[...].astype(jnp.float32), jnp.inf)
+    u = jnp.where(inc[:, None], decode(refs[:n_enc]), jnp.inf)
     s = _sort_cols(u)                                          # [C, bm]
     t = (jnp.float32(trim_frac) * n.astype(jnp.float32)).astype(jnp.int32)
     idx = jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], 1), 0)
@@ -174,10 +227,10 @@ def _trimmed_kernel(trim_frac, u_ref, w_ref, g_ref, o_ref):
     o_ref[...] = out.astype(o_ref.dtype)
 
 
-def _median_kernel(u_ref, w_ref, g_ref, o_ref):
-    del w_ref                                                  # unweighted
+def _median_kernel(decode, n_enc, *refs):
+    g_ref, o_ref = refs[n_enc + 1], refs[-1]                   # unweighted
     inc, n = _included_stats(g_ref[...])
-    u = jnp.where(inc[:, None], u_ref[...].astype(jnp.float32), jnp.inf)
+    u = jnp.where(inc[:, None], decode(refs[:n_enc]), jnp.inf)
     s = _sort_cols(u)
     lo, hi = (n - 1) // 2, n // 2                              # even n: average
     idx = jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], 1), 0)
@@ -188,43 +241,106 @@ def _median_kernel(u_ref, w_ref, g_ref, o_ref):
 
 def fedagg_pallas(updates, weights, gates, *, block_m=2048, interpret=False,
                   aggregator="mean", trim_frac=0.0, row_scale=None,
-                  noise=None, noise_scale=0.0):
-    """updates: [C, M]; weights, gates: [C] -> [M].
+                  noise=None, noise_scale=0.0, codec="identity",
+                  dequant_scale=None, topk_idx=None, sketch_h=None,
+                  sketch_sign=None, out_m=None):
+    """updates: [C, M] (or the codec's wire shape); weights, gates: [C] -> [M].
 
     aggregator: mean | trimmed_mean | median | dp — one fused kernel launch
     regardless of variant. ``dp`` additionally takes ``row_scale`` [C]
     (per-client clip factors), ``noise`` [M] (standard-normal draws) and a
     static ``noise_scale`` (sigma numerator = dp_noise * dp_clip; divided
     by the inclusion mass inside the cell). ``cosine_filter`` is a gate
-    pre-pass upstream and lands here as plain ``mean``."""
-    C, M = updates.shape
+    pre-pass upstream and lands here as plain ``mean``.
+
+    ``codec`` selects the in-kernel wire decode, COMPOSED with every
+    aggregator in the same launch (decode feeds the mean/dp contraction
+    directly, and runs before the order-statistics sort):
+
+    - ``identity`` — ``updates`` is the dense [C, M] buffer (legacy path,
+      output in ``updates.dtype``).
+    - ``int8`` — ``updates`` is [C, M] int8; ``dequant_scale`` [C] f32
+      dequantizes each row in-register after the tile load.
+    - ``topk`` — ``updates`` is [C, k] f32 values with ``topk_idx``
+      [C, k] i32 column indices (both full-array operands per cell);
+      ``out_m`` gives the true M. Each cell scatter-accumulates its tile.
+    - ``sketch`` — ``updates`` is [C, dim] f32 CountSketch rows (full per
+      cell); ``sketch_h`` / ``sketch_sign`` [M] are the shared hash/sign
+      planes (tiled per block); ``out_m`` gives the true M.
+
+    Codec outputs are f32 (the wire dtype no longer matches the model).
+    The dense decode is never materialized in HBM — each grid cell decodes
+    its own [C, block_m] tile in VMEM. TPU caveat: the [C, k] / [C, dim]
+    full-array operands assume k resp. dim pad to lane multiples on real
+    hardware; CPU CI exercises interpret mode only, like every kernel
+    here."""
+    C = updates.shape[0]
+    M = int(out_m) if out_m is not None else updates.shape[1]
+    out_dtype = updates.dtype if codec == "identity" else jnp.float32
     block_m = min(block_m, M)
     pad = (-M) % block_m
-    if pad:
-        updates = jnp.pad(updates, ((0, 0), (0, pad)))
-        if noise is not None:
-            noise = jnp.pad(noise, (0, pad))
     Mp = M + pad
     nm = Mp // block_m
+    if pad and noise is not None:
+        noise = jnp.pad(noise, (0, pad))
 
     vec_spec = pl.BlockSpec((C,), lambda im: (0,))
-    in_specs = [
-        pl.BlockSpec((C, block_m), lambda im: (0, im)),
-        vec_spec,
-        vec_spec,
-    ]
-    operands = [updates, weights, gates]
+    col_spec = pl.BlockSpec((block_m,), lambda im: (im,))
+
+    if codec == "identity":
+        if pad:
+            updates = jnp.pad(updates, ((0, 0), (0, pad)))
+        enc_specs = [pl.BlockSpec((C, block_m), lambda im: (0, im))]
+        enc_ops = [updates]
+        decode = _decode_identity
+    elif codec == "int8":
+        if dequant_scale is None:
+            raise ValueError("codec='int8' needs dequant_scale [C]")
+        if pad:
+            updates = jnp.pad(updates, ((0, 0), (0, pad)))
+        enc_specs = [pl.BlockSpec((C, block_m), lambda im: (0, im)), vec_spec]
+        enc_ops = [updates, dequant_scale]
+        decode = _decode_int8
+    elif codec == "topk":
+        if topk_idx is None or out_m is None:
+            raise ValueError("codec='topk' needs topk_idx [C, k] and out_m")
+        k = updates.shape[1]
+        full = pl.BlockSpec((C, k), lambda im: (0, 0))
+        enc_specs = [full, full]
+        enc_ops = [updates, topk_idx]
+        decode = functools.partial(_decode_topk, block_m)
+    elif codec == "sketch":
+        if sketch_h is None or sketch_sign is None or out_m is None:
+            raise ValueError(
+                "codec='sketch' needs sketch_h [M], sketch_sign [M], out_m")
+        if pad:
+            # sign pads with 0 -> padded columns decode to exact zero
+            sketch_h = jnp.pad(sketch_h, (0, pad))
+            sketch_sign = jnp.pad(sketch_sign, (0, pad))
+        dim = updates.shape[1]
+        enc_specs = [pl.BlockSpec((C, dim), lambda im: (0, 0)),
+                     col_spec, col_spec]
+        enc_ops = [updates, sketch_h, sketch_sign]
+        decode = _decode_sketch
+    else:
+        raise ValueError(f"unknown wire codec {codec!r}")
+
+    in_specs = enc_specs + [vec_spec, vec_spec]
+    operands = enc_ops + [weights, gates]
+    n_enc = len(enc_ops)
     if aggregator == "mean":
-        kernel = _mean_kernel
+        kernel = functools.partial(_mean_kernel, decode, n_enc)
     elif aggregator == "trimmed_mean":
-        kernel = functools.partial(_trimmed_kernel, float(trim_frac))
+        kernel = functools.partial(_trimmed_kernel, float(trim_frac), decode,
+                                   n_enc)
     elif aggregator == "median":
-        kernel = _median_kernel
+        kernel = functools.partial(_median_kernel, decode, n_enc)
     elif aggregator == "dp":
         if row_scale is None or noise is None:
             raise ValueError("aggregator='dp' needs row_scale [C] and noise [M]")
-        kernel = functools.partial(_dp_kernel, float(noise_scale))
-        in_specs += [vec_spec, pl.BlockSpec((block_m,), lambda im: (im,))]
+        kernel = functools.partial(_dp_kernel, float(noise_scale), decode,
+                                   n_enc)
+        in_specs += [vec_spec, col_spec]
         operands += [row_scale, noise]
     else:
         raise ValueError(f"unknown in-kernel aggregator {aggregator!r}")
@@ -233,8 +349,8 @@ def fedagg_pallas(updates, weights, gates, *, block_m=2048, interpret=False,
         kernel,
         grid=(nm,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((block_m,), lambda im: (im,)),
-        out_shape=jax.ShapeDtypeStruct((Mp,), updates.dtype),
+        out_specs=col_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp,), out_dtype),
         interpret=interpret,
     )(*operands)
     return out[:M]

@@ -166,9 +166,38 @@ def _fedagg_sorted_jnp(updates, gates, *, trim_frac=None):
     return out.astype(updates.dtype)
 
 
+def _decode_wire_jnp(updates, *, codec, dequant_scale=None, topk_idx=None,
+                     sketch_h=None, sketch_sign=None, out_m=None):
+    """Decode a wire-codec payload to the dense f32 [C, M] buffer.
+
+    Bit-comparable to the in-kernel decoders in kernels/fedagg.py: int8
+    multiplies the per-row scale after the f32 cast; topk scatter-adds the
+    (value, index) pairs (indices within a row are distinct, so order is
+    irrelevant); sketch gathers each column's CountSketch bucket and
+    applies its sign."""
+    if codec == "int8":
+        if dequant_scale is None:
+            raise ValueError("codec='int8' needs dequant_scale [C]")
+        return updates.astype(jnp.float32) * dequant_scale.astype(jnp.float32)[:, None]
+    if codec == "topk":
+        if topk_idx is None or out_m is None:
+            raise ValueError("codec='topk' needs topk_idx [C, k] and out_m")
+        C = updates.shape[0]
+        rows = jnp.arange(C, dtype=jnp.int32)[:, None]
+        buf = jnp.zeros((C, int(out_m)), jnp.float32)
+        return buf.at[rows, topk_idx].add(updates.astype(jnp.float32))
+    if codec == "sketch":
+        if sketch_h is None or sketch_sign is None:
+            raise ValueError("codec='sketch' needs sketch_h [M] and sketch_sign [M]")
+        return (jnp.take(updates.astype(jnp.float32), sketch_h, axis=1)
+                * sketch_sign.astype(jnp.float32)[None, :])
+    raise ValueError(f"unknown wire codec {codec!r}")
+
+
 def fedagg(updates, weights, gates, *, use_pallas=False, interpret=False,
            block_m=2048, aggregator="mean", trim_frac=0.0, row_scale=None,
-           noise=None, noise_scale=0.0):
+           noise=None, noise_scale=0.0, codec="identity", dequant_scale=None,
+           topk_idx=None, sketch_h=None, sketch_sign=None, out_m=None):
     """Gated client aggregation: [C,M],[C],[C] -> [M].
 
     The fused aggregation path (core/aggregation.py) calls this ONCE per
@@ -178,13 +207,29 @@ def fedagg(updates, weights, gates, *, use_pallas=False, interpret=False,
     ``aggregator`` selects the in-kernel reduction (mean | trimmed_mean |
     median | dp); all variants return an exact zero vector on a
     zero-inclusion round and mask gated-out rows before reducing. See
-    kernels/fedagg.py for the per-variant semantics and extra operands."""
+    kernels/fedagg.py for the per-variant semantics and extra operands.
+
+    ``codec`` (identity | int8 | topk | sketch) composes the wire decode
+    with the reduction: on the Pallas path the decode happens per grid
+    cell inside the same launch (no dense decode buffer in HBM); on this
+    jnp fallback the buffer is decoded then reduced. Non-identity codecs
+    output f32 regardless of the wire dtype; the extra operands
+    (``dequant_scale``, ``topk_idx``, ``sketch_h``/``sketch_sign``,
+    ``out_m``) are supplied by the codec's encode (core/aggregation.py)."""
     if use_pallas:
         from repro.kernels.fedagg import fedagg_pallas
         return fedagg_pallas(updates, weights, gates, block_m=block_m,
                              interpret=interpret, aggregator=aggregator,
                              trim_frac=trim_frac, row_scale=row_scale,
-                             noise=noise, noise_scale=noise_scale)
+                             noise=noise, noise_scale=noise_scale,
+                             codec=codec, dequant_scale=dequant_scale,
+                             topk_idx=topk_idx, sketch_h=sketch_h,
+                             sketch_sign=sketch_sign, out_m=out_m)
+    if codec != "identity":
+        updates = _decode_wire_jnp(updates, codec=codec,
+                                   dequant_scale=dequant_scale,
+                                   topk_idx=topk_idx, sketch_h=sketch_h,
+                                   sketch_sign=sketch_sign, out_m=out_m)
     if aggregator == "mean":
         return _fedagg_jnp(updates, weights, gates)
     if aggregator == "trimmed_mean":

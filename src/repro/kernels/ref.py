@@ -117,6 +117,33 @@ def fedagg_dp_ref(updates, weights, gates, row_scale, noise, noise_scale):
     return jnp.where(den > 0, noisy, 0.0).astype(updates.dtype)
 
 
+# ------------------------------------------------------------- wire decoders
+def decode_int8_ref(q, scale):
+    """Naive int8 row dequantization. q: [C, M] int8, scale: [C] -> [C, M] f32."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[:, None]
+
+
+def decode_topk_ref(vals, idx, M):
+    """Naive top-k densification via one-hot matmul.
+
+    vals: [C, k] f32, idx: [C, k] i32 column indices (distinct within a
+    row) -> [C, M] f32 with vals placed at their columns, zeros elsewhere.
+    """
+    onehot = (idx[..., None] == jnp.arange(M)[None, None, :]).astype(jnp.float32)
+    return jnp.einsum("ck,ckm->cm", vals.astype(jnp.float32), onehot)
+
+
+def decode_sketch_ref(s, h, sign):
+    """Naive CountSketch estimate via one-hot matmul.
+
+    s: [C, dim] f32 sketch rows, h: [M] i32 bucket ids, sign: [M] f32
+    Rademacher signs -> [C, M] f32 where out[c, m] = s[c, h[m]] * sign[m].
+    """
+    dim = s.shape[1]
+    onehot = (h[:, None] == jnp.arange(dim)[None, :]).astype(jnp.float32)  # [M, dim]
+    return jnp.einsum("cd,md->cm", s.astype(jnp.float32), onehot) * sign[None, :]
+
+
 # ------------------------------------------------------------------- rmsnorm
 def rmsnorm_ref(x, scale, eps=1e-6):
     xf = x.astype(jnp.float32)

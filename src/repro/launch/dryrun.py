@@ -389,6 +389,24 @@ def main():
                     help="lower the non-finite-aggregate guard: cond-skip "
                          "the apply and thread the consecutive-skip "
                          "counter leaf")
+    ap.add_argument("--wire-codec", default="identity",
+                    choices=["identity", "int8", "topk", "sketch"],
+                    help="WireCodec registry name (core/aggregation.py): "
+                         "lower the round with compressed uplink rows "
+                         "decoded in-register inside the fused fedagg "
+                         "kernel; non-identity codecs with error feedback "
+                         "add the [C x params] ef_accum leaves to the "
+                         "lowered FederationState")
+    ap.add_argument("--codec-topk-frac", type=float, default=0.01,
+                    help="topk: fraction of coordinates each client keeps "
+                         "(k = max(1, frac * M_total) value/index pairs on "
+                         "the wire)")
+    ap.add_argument("--codec-sketch-dim", type=int, default=2048,
+                    help="sketch: CountSketch width each client uplinks")
+    ap.add_argument("--no-error-feedback", dest="error_feedback",
+                    action="store_false", default=True,
+                    help="drop the per-client error-feedback accumulators "
+                         "(biased compression; no ef_accum leaves)")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
@@ -414,6 +432,11 @@ def main():
                           corrupt_scale=args.corrupt_scale)
     if args.divergence_guard:
         fed = fed.replace(divergence_guard=True)
+    if args.wire_codec != "identity":
+        fed = fed.replace(wire_codec=args.wire_codec,
+                          error_feedback=args.error_feedback,
+                          codec_topk_frac=args.codec_topk_frac,
+                          codec_sketch_dim=args.codec_sketch_dim)
 
     archs = ARCH_IDS if args.arch == "all" else [ALIASES.get(args.arch, args.arch)]
     shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
@@ -442,6 +465,10 @@ def main():
                 tag += f"__{args.failure_model}"
             if args.divergence_guard:
                 tag += "__guard"
+            if args.wire_codec != "identity":
+                tag += f"__codec-{args.wire_codec}"
+                if not args.error_feedback:
+                    tag += "-noef"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
                 print(f"[skip-existing] {tag}")

@@ -157,6 +157,20 @@ def main():
     ap.add_argument("--max-nonfinite-skips", type=int, default=0,
                     help="halt the driver after this many CONSECUTIVE "
                          "guarded skips (0 = never halt)")
+    ap.add_argument("--wire-codec", default="identity",
+                    choices=["identity", "int8", "topk", "sketch"],
+                    help="uplink compression (WireCodec registry): encode "
+                         "the flattened per-client delta rows before the "
+                         "fused fedagg call; decode happens in-register "
+                         "inside the kernel")
+    ap.add_argument("--codec-topk-frac", type=float, default=0.01,
+                    help="topk: fraction of coordinates each client keeps")
+    ap.add_argument("--codec-sketch-dim", type=int, default=2048,
+                    help="sketch: CountSketch width each client uplinks")
+    ap.add_argument("--no-error-feedback", dest="error_feedback",
+                    action="store_false", default=True,
+                    help="disable the per-client error-feedback "
+                         "accumulators (biased compression)")
     a = ap.parse_args()
     agg_kw = {} if a.aggregator == "mean" else dict(
         aggregator=a.aggregator, trim_frac=a.trim_frac, dp_clip=a.dp_clip,
@@ -172,6 +186,11 @@ def main():
     if a.divergence_guard:
         agg_kw.update(divergence_guard=True,
                       max_nonfinite_skips=a.max_nonfinite_skips)
+    if a.wire_codec != "identity":
+        agg_kw.update(wire_codec=a.wire_codec,
+                      error_feedback=a.error_feedback,
+                      codec_topk_frac=a.codec_topk_frac,
+                      codec_sketch_dim=a.codec_sketch_dim)
     run(arch=a.arch, smoke=a.smoke, rounds=a.rounds, clients=a.clients,
         seq=a.seq, lr=a.lr, **agg_kw)
 

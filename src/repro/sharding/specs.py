@@ -240,9 +240,22 @@ def federation_state_specs(fed, param_specs):
     latency_specs = ({"compute": rep, "net": rep}
                      if fed.latency_mode != "none" else ())
     skips_specs = rep if fed.divergence_guard else ()
+    # wire-codec error-feedback accumulators are params-shaped behind a
+    # leading [C] client axis — exactly the in-flight delta layout, and
+    # for the same reason: C x params of residual rows must shard like
+    # the params they re-enter, never hold a replicated copy per pod
+    from repro.core.aggregation import resolve_wire_codec
+    if (resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+            != "identity" and fed.error_feedback):
+        ef_specs = jax.tree.map(
+            lambda sp: P(*([None] + list(sp))), param_specs,
+            is_leaf=lambda x: isinstance(x, P))
+    else:
+        ef_specs = ()
     return FederationState(params=param_specs, opt_state=opt_specs,
                            backlog=rep, util_ema=rep, incl_ema=rep,
                            inflight=inflight_specs,
                            last_delta=last_delta_specs,
                            latency=latency_specs,
-                           nonfinite_skips=skips_specs)
+                           nonfinite_skips=skips_specs,
+                           ef_accum=ef_specs)

@@ -216,6 +216,86 @@ def test_backlog_zero_preserves_drop_worst():
     np.testing.assert_array_equal(np.asarray(a[0]), [0, 2, 4])
 
 
+def test_backlog_boost_rescues_float_match_starvation():
+    """The case the pure tie-break cannot touch: float-valued match gaps
+    almost never tie exactly, so a client 5e-4 worse-matched loses the
+    slot EVERY round no matter how much backlog it accrues — and with
+    ``backlog_boost`` > 0 its debt buys down the gap until it rotates
+    in."""
+    gates = jnp.ones((3,), jnp.float32)
+    align = jnp.asarray([0.0, 0.2, 0.2005])      # near-tie, NOT a tie
+    pm = jnp.asarray([1, 0, 0], jnp.float32)
+
+    # boost off: even a huge ledger never flips a non-tied comparison
+    idx, _, _ = engine.cohort_select(
+        gates, align, jnp.float32(0.0), pm, 2,
+        backlog=jnp.asarray([0, 0, 1000], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(idx), [0, 1])
+
+    # boost on: each starved round buys 1e-4 of the 5e-4 gap; client 2
+    # takes the slot once its debt covers the gap (the ledger tie-break
+    # finishes the last sub-ulp step), then the slot keeps rotating —
+    # winning resets the debt, so neither client starves again
+    backlog = jnp.zeros((3,), jnp.int32)
+    winners = []
+    for _ in range(8):
+        idx, _, eff = engine.cohort_select(gates, align, jnp.float32(0.0),
+                                           pm, 2, backlog=backlog,
+                                           backlog_boost=1e-4)
+        winners.append(int(np.asarray(idx)[1]))
+        backlog = engine.backlog_update(backlog, gates, eff)
+    first = winners.index(2)
+    assert winners[:first] == [1] * first and first >= 4
+    assert set(winners) == {1, 2} and winners[first + 1] == 1
+
+
+def test_backlog_boost_zero_bit_identical():
+    """``backlog_boost=0`` (the default) is LITERALLY the tie-break-only
+    policy — same outputs on a float-match case with a live ledger."""
+    gates = jnp.ones((5,), jnp.float32)
+    align = jnp.asarray([0.0, 0.31, 0.1007, 0.3, 0.2003])
+    pm = jnp.asarray([1, 0, 0, 0, 0], jnp.float32)
+    backlog = jnp.asarray([0, 4, 0, 2, 7], jnp.int32)
+    a = engine.cohort_select(gates, align, jnp.float32(0.0), pm, 3,
+                             backlog=backlog)
+    b = engine.cohort_select(gates, align, jnp.float32(0.0), pm, 3,
+                             backlog=backlog, backlog_boost=0.0)
+    for xa, xb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_backlog_boost_never_displaces_priority():
+    """No amount of boosted debt outranks a priority client: the boosted
+    rank pins priority at -inf, not the legacy -1.0 a deep-enough debt
+    could undercut."""
+    gates = jnp.ones((3,), jnp.float32)
+    align = jnp.asarray([0.5, 0.0, 0.0])
+    pm = jnp.asarray([1, 0, 0], jnp.float32)
+    idx, cg, _ = engine.cohort_select(
+        gates, align, jnp.float32(0.0), pm, 2,
+        backlog=jnp.asarray([0, 100000, 0], jnp.int32), backlog_boost=10.0)
+    assert 0 in np.asarray(idx)
+
+
+def test_backlog_boost_threads_through_engine_round():
+    """fed.backlog_boost reaches cohort_select: with a huge boost an
+    overflowing cohort rotates its non-priority slot from round to round;
+    with boost off the same (distinct-float-matched) winners repeat."""
+    for boost, expect_rotation in ((1000.0, True), (0.0, False)):
+        fed = FedConfig(num_clients=C, num_priority=3, rounds=10,
+                        local_epochs=1, epsilon=1e9, warmup_frac=0.0,
+                        align_stat="loss", max_cohort=4,
+                        backlog_boost=boost)
+        fn = jax.jit(engine.make_round_fn(LOSS, fed))
+        state = engine.init_state(PARAMS, fed, C)
+        picks = []
+        for i in range(2):
+            state, stats = fn(state, DATA, PM, W, jax.random.PRNGKey(1),
+                              jnp.int32(2 + i))
+            picks.append(tuple(np.nonzero(np.asarray(stats["gates"]))[0]))
+        assert (picks[0] != picks[1]) == expect_rotation, picks
+
+
 def test_backlog_untouched_for_selection_excluded():
     """Only OVERFLOW accrues backlog: clients the strategy never gated in
     keep their ledger, included clients reset it."""

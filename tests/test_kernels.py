@@ -141,6 +141,102 @@ def test_fedagg_shape_sweep_all_aggregators(C, M, agg):
                                atol=2e-5, rtol=2e-5)
 
 
+# ----------------------------------------------------- fedagg x wire codecs
+CODEC_EDGE_SHAPES = [
+    (1, 64),        # single client
+    (1, 7),         # single client, M far below the lane width
+    (4, 100),       # M not a lane multiple
+    (65, 513),      # C past the 64-lane sublane tile, ragged M
+    (3, 2065),      # multi-block grid with a ragged tail
+]
+
+
+def _codec_inputs(C, M, codec):
+    """Encode a random [C, M] buffer (row C//2 forced all-zero — the int8
+    scale-1.0 / topk zero-value / sketch empty-bucket edge) through the
+    registry codec, returning (enc, codec_kw, decoded_ref)."""
+    from repro.configs.base import FedConfig
+    from repro.core.aggregation import get_wire_codec
+
+    # sketch_dim < M forces hash collisions — a dim >= M sketch can be
+    # lossless and the decode parity would not exercise the gather
+    fed = FedConfig(codec_topk_frac=0.1, codec_sketch_dim=max(2, M // 3),
+                    seed=3)
+    u = rand((C, M), jnp.float32, k=C * 1013 + M)
+    u = u.at[C // 2].set(0.0)
+    cls = get_wire_codec(codec)
+    enc, kw = cls.encode(fed, u)
+    if codec == "int8":
+        want_dec = ref.decode_int8_ref(enc, kw["dequant_scale"])
+    elif codec == "topk":
+        want_dec = ref.decode_topk_ref(enc, kw["topk_idx"], M)
+    else:
+        want_dec = ref.decode_sketch_ref(enc, kw["sketch_h"],
+                                         kw["sketch_sign"])
+    dec = cls.decode(fed, enc, kw, M)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(want_dec),
+                               atol=2e-5, rtol=2e-5)
+    return enc, kw, want_dec
+
+
+@pytest.mark.parametrize("C,M", CODEC_EDGE_SHAPES)
+@pytest.mark.parametrize("codec", ["int8", "topk", "sketch"])
+@pytest.mark.parametrize("agg", ["mean", "trimmed_mean", "median", "dp"])
+def test_fedagg_codec_aggregator_sweep(C, M, codec, agg):
+    """Every codec x aggregator pair: the fused decode-and-reduce (Pallas
+    interpret and the jnp lowering) must match decode-then-reduce through
+    the naive refs on the same edge shapes the dense sweep pins — plus an
+    all-zero client row per case."""
+    enc, codec_kw, dec = _codec_inputs(C, M, codec)
+    w = jax.random.uniform(jax.random.fold_in(KEY, C * 7 + M), (C,)) + 0.05
+    g = (jax.random.uniform(jax.random.fold_in(KEY, C * 7 + M + 1), (C,))
+         > 0.3).astype(jnp.float32)
+    g = g.at[0].set(1.0)                       # never empty
+    g = g.at[C // 2].set(1.0)                  # the zero row is gated IN
+    kw = {}
+    if agg == "trimmed_mean":
+        kw = dict(trim_frac=0.25)
+        want = ref.fedagg_trimmed_ref(dec, w, g, 0.25)
+    elif agg == "median":
+        want = ref.fedagg_median_ref(dec, w, g)
+    elif agg == "dp":
+        norms = jnp.sqrt(jnp.sum(dec.astype(jnp.float32) ** 2, axis=1))
+        rs = jnp.minimum(1.0, 1.0 / jnp.maximum(norms, 1e-12))
+        nz = jax.random.normal(jax.random.fold_in(KEY, C * 11 + M), (M,))
+        kw = dict(row_scale=rs, noise=nz, noise_scale=0.7)
+        want = ref.fedagg_dp_ref(dec, w, g, rs, nz, 0.7)
+    else:
+        want = ref.fedagg_ref(dec, w, g)
+    got_jnp = ops.fedagg(enc, w, g, aggregator=agg, **kw, **codec_kw)
+    got_pal = fedagg_pallas(enc, w, g, block_m=256, interpret=True,
+                            aggregator=agg, **kw, **codec_kw)
+    assert got_jnp.dtype == jnp.float32 and got_pal.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got_jnp), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_pal), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_fedagg_codec_all_rows_zero():
+    """An entirely-zero buffer through every codec still aggregates to
+    exact zero (int8 scale floors at 1.0; sketch buckets are empty)."""
+    C, M = 5, 130
+    from repro.configs.base import FedConfig
+    from repro.core.aggregation import get_wire_codec
+
+    fed = FedConfig(codec_topk_frac=0.1, codec_sketch_dim=32, seed=3)
+    u = jnp.zeros((C, M), jnp.float32)
+    w = jnp.ones((C,))
+    g = jnp.ones((C,))
+    for codec in ("int8", "topk", "sketch"):
+        enc, kw = get_wire_codec(codec).encode(fed, u)
+        for out in (ops.fedagg(enc, w, g, **kw),
+                    fedagg_pallas(enc, w, g, block_m=64, interpret=True,
+                                  **kw)):
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.zeros((M,), np.float32))
+
+
 # -------------------------------------------------------------------- rmsnorm
 @pytest.mark.parametrize("shape", [(4, 37, 128), (2, 256), (1, 5, 7, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

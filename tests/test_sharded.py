@@ -199,6 +199,41 @@ def test_temporal_grad_sim_requires_sketch_opt_in():
         sharded.make_temporal_round(MODEL, fed, 4)
 
 
+def test_pod_rounds_identity_codec_knobs_inert():
+    """Both pod rounds under the identity wire: the codec-rate and
+    error-feedback knobs must not perturb a single bit of the round (the
+    codec-off branch is literally the legacy trace) and no ef_accum
+    leaves join the state."""
+    batch = _batch()
+    state = _state(FED)
+    knobbed = FED.replace(error_feedback=False, codec_topk_frac=0.5,
+                          codec_sketch_dim=7)
+    for make in (sharded.make_spatial_round, sharded.make_temporal_round):
+        sa, ta = jax.jit(make(MODEL, FED, 4))(state, batch)
+        sb, tb = jax.jit(make(MODEL, knobbed, 4))(state, batch)
+        assert sa.ef_accum == () and sb.ef_accum == ()
+        np.testing.assert_array_equal(np.asarray(ta["gates"]),
+                                      np.asarray(tb["gates"]))
+        for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pod_rounds_compressed_wire_ef_advances():
+    """Both pod rounds run the int8 wire end to end: finite server loss
+    and a non-zero EF accumulator after one round (the temporal round
+    must switch to the gathered path — its streamed (num, den) mean carry
+    never materializes the per-client rows a codec encodes)."""
+    fed = FED.replace(wire_codec="int8")
+    batch = _batch()
+    state = _state(fed)
+    for make in (sharded.make_spatial_round, sharded.make_temporal_round):
+        s1, t1 = jax.jit(make(MODEL, fed, 4))(state, batch)
+        assert np.isfinite(float(t1["server_loss"]))
+        total = sum(float(jnp.sum(jnp.abs(e)))
+                    for e in jax.tree.leaves(s1.ef_accum))
+        assert total > 0.0
+
+
 def test_sharded_cohort_select_is_engine_cohort_select():
     """The pod rounds must not grow their own gather copy: the overflow /
     backlog policy lives in engine.cohort_select ONLY."""

@@ -1,0 +1,264 @@
+"""WireCodec registry + error-feedback semantics at the engine level.
+
+Pins (1) the identity wire: the codec-rate / error-feedback knobs are
+INERT under ``wire_codec="identity"`` — bit-identical state and stats for
+every registered strategy x backend, and no ``ef_accum`` leaves; (2) the
+EF accumulator lifecycle — residual advance on transmitting rows only,
+push-time advance under ``scan_async`` (the accumulator moves while the
+pipe is still warming up and no delta has landed); (3) mid-flight
+checkpoint/resume bit-identity with a compressed wire; (4) the
+fingerprint refusal on codec/rate mismatch and the accumulator-naming
+layout errors (checkpoint/io.py); (5) the analytic ``wire_bytes_per_round``
+accounting the bench frontier rows are built on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import aggregation as agg
+from repro.data.synth import make_synth_federation
+from repro.fl import engine
+from repro.fl.simulator import (load_federation_state, run_federation,
+                                save_federation_state)
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+INIT, APPLY = SMALL_MODELS["synth_logreg"]
+LOSS = make_loss_fn(APPLY)
+FEDN = make_synth_federation(seed=7, n_priority=3, n_nonpriority=5,
+                             samples_per_client=64)
+DATA = {"x": jnp.asarray(FEDN.x), "y": jnp.asarray(FEDN.y)}
+PM = jnp.asarray(FEDN.priority_mask)
+W = jnp.asarray(FEDN.weights)
+C = int(PM.shape[0])
+PARAMS = INIT(jax.random.PRNGKey(0))
+
+BACKENDS = ("vmap_spatial", "scan_temporal", "scan_async")
+
+
+def _base(**kw):
+    d = dict(num_clients=C, num_priority=3, rounds=10, local_epochs=2,
+             epsilon=0.5, warmup_frac=0.0, align_stat="loss", topk=2,
+             welfare_floor=0.05)
+    d.update(kw)
+    return FedConfig(**d)
+
+
+def _run(fed, backend, r=2, seed=1, rounds=2):
+    fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
+    state = engine.init_state(PARAMS, fed, C)
+    for i in range(rounds):
+        state, stats = fn(state, DATA, PM, W, jax.random.PRNGKey(seed + i),
+                          jnp.int32(r + i))
+    return state, stats
+
+
+# ===================================================== identity bit-identity
+@pytest.mark.parametrize("selection", sorted(engine.STRATEGIES))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_identity_knobs_inert_per_strategy_backend(selection, backend):
+    """The acceptance pin: under the identity wire the codec-rate and
+    error-feedback knobs must not perturb a single bit of the round, for
+    every strategy x backend — the codec-off branch is LITERALLY the
+    legacy trace."""
+    fed = _base(selection=selection)
+    knobbed = fed.replace(wire_codec="identity", error_feedback=False,
+                          codec_topk_frac=0.5, codec_sketch_dim=7)
+    sa, ta = _run(fed, backend)
+    sb, tb = _run(knobbed, backend)
+    assert sa.ef_accum == () and sb.ef_accum == ()
+    np.testing.assert_array_equal(np.asarray(ta["gates"]),
+                                  np.asarray(tb["gates"]))
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_identity_with_ef_accum_refuses():
+    """Passing accumulators alongside the identity codec is a caller bug
+    (the residual is identically zero); the aggregation layer refuses."""
+    cp = {"w": jnp.ones((3, 4))}
+    ones = jnp.ones((3,))
+    with pytest.raises(ValueError, match="identity"):
+        agg.aggregate_clients(cp, ones, ones,
+                              ef_accum={"w": jnp.zeros((3, 4))})
+
+
+def test_codec_requires_fused_agg():
+    with pytest.raises(ValueError, match="fused_agg"):
+        agg.check_codec_config(_base(wire_codec="int8", fused_agg=False))
+    with pytest.raises(ValueError, match="codec_topk_frac"):
+        agg.check_codec_config(_base(wire_codec="topk", codec_topk_frac=0.0))
+    with pytest.raises(ValueError, match="codec_sketch_dim"):
+        agg.check_codec_config(_base(wire_codec="sketch",
+                                     codec_sketch_dim=0))
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        agg.get_wire_codec("zstd")
+
+
+# ======================================================= EF accumulator
+def test_ef_accum_layout_follows_config():
+    st_id = engine.init_state(PARAMS, _base(), C)
+    assert st_id.ef_accum == ()
+    st_i8 = engine.init_state(PARAMS, _base(wire_codec="int8"), C)
+    for p, e in zip(jax.tree.leaves(PARAMS), jax.tree.leaves(st_i8.ef_accum)):
+        assert e.shape == (C,) + p.shape and e.dtype == jnp.float32
+        assert float(jnp.sum(jnp.abs(e))) == 0.0
+    st_noef = engine.init_state(
+        PARAMS, _base(wire_codec="int8", error_feedback=False), C)
+    assert st_noef.ef_accum == ()
+
+
+def test_ef_residual_matches_codec_identity():
+    """One aggregate_clients call: the returned accumulator IS the codec
+    residual buf - decode(encode(buf)) on transmitting rows and the old
+    accumulator elsewhere (gated-out rows keep their debt)."""
+    fed = _base(wire_codec="int8")
+    key = jax.random.PRNGKey(3)
+    cp = {"w": jax.random.normal(key, (4, 6))}
+    w = jnp.ones((4,))
+    g = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    ef0 = {"w": jnp.full((4, 6), 0.25, jnp.float32)}
+    out, ef1 = agg.aggregate_clients(cp, w, g, fed=fed, wire_codec="int8",
+                                     ef_accum=ef0)
+    buf = cp["w"].astype(jnp.float32) + ef0["w"]
+    codec = agg.get_wire_codec("int8")
+    enc, kw = codec.encode(fed, buf)
+    resid = buf - codec.decode(fed, enc, kw, buf.shape[1])
+    want = jnp.where(g[:, None] > 0, resid, ef0["w"])
+    np.testing.assert_allclose(np.asarray(ef1["w"]), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+    assert float(jnp.max(jnp.abs(ef1["w"][2] - 0.25))) == 0.0
+
+
+@pytest.mark.parametrize("codec,kw", [
+    ("int8", {}),
+    ("topk", dict(codec_topk_frac=0.2)),
+    # sketch_dim=2 << M forces collisions; at dim >= M the CountSketch can
+    # be lossless and the residual (hence this advance check) exactly zero
+    ("sketch", dict(codec_sketch_dim=2)),
+])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ef_advances_and_loss_stays_finite(codec, kw, backend):
+    fed = _base(wire_codec=codec, **kw)
+    state, stats = _run(fed, backend)
+    assert np.isfinite(float(stats["global_loss"]))
+    total = sum(float(jnp.sum(jnp.abs(e)))
+                for e in jax.tree.leaves(state.ef_accum))
+    assert total > 0.0, f"{codec} EF accumulator never advanced"
+
+
+def test_async_ef_advances_at_push_time():
+    """scan_async with a warming pipe: after round 0 NO delta has been
+    applied (params bit-equal to init) but the EF accumulator has already
+    advanced — the residual is charged when the cohort's delta is encoded
+    and pushed, not when it lands."""
+    fed = _base(wire_codec="int8", backend="scan_async", async_depth=2,
+                selection="all")
+    fn = jax.jit(engine.make_round_fn(LOSS, fed))
+    st0 = engine.init_state(PARAMS, fed, C)
+    st1, _ = fn(st0, DATA, PM, W, jax.random.PRNGKey(1), jnp.int32(2))
+    for a, b in zip(jax.tree.leaves(st0.params), jax.tree.leaves(st1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    total = sum(float(jnp.sum(jnp.abs(e)))
+                for e in jax.tree.leaves(st1.ef_accum))
+    assert total > 0.0
+
+
+# ================================================= checkpoint / resume
+def test_ef_checkpoint_resume_mid_flight(tmp_path):
+    """Interrupt a compressed-wire async run with cohorts still in flight
+    AND live EF debt; the resumed run must be bit-identical to the
+    uninterrupted one — accumulators included."""
+    path = str(tmp_path / "ef.msgpack")
+    fed = FedConfig(num_clients=C, num_priority=3, rounds=8, local_epochs=2,
+                    epsilon=0.3, lr=0.1, warmup_frac=0.0, batch_size=32,
+                    align_stat="loss", server_opt="yogi", server_lr=0.3,
+                    max_cohort=5, backend="scan_async", async_depth=2,
+                    staleness_decay=0.9, wire_codec="int8")
+    full = run_federation(LOSS, PARAMS, fed, FEDN, eval_every=4)
+
+    half = run_federation(LOSS, PARAMS, fed.replace(rounds=5), FEDN,
+                          eval_every=4)
+    assert float(jnp.sum(half.state.inflight["valid"])) == 2.0
+    assert sum(float(jnp.sum(jnp.abs(e)))
+               for e in jax.tree.leaves(half.state.ef_accum)) > 0.0
+    save_federation_state(path, half.state, half.rng, 5)
+    state, rng, step = load_federation_state(
+        path, engine.init_state(PARAMS, fed, C))
+    for a, b in zip(jax.tree.leaves(half.state), jax.tree.leaves(state)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    resumed = run_federation(LOSS, None, fed, FEDN, eval_every=4,
+                             state=state, rng=rng, start_round=step)
+    for a, b in zip(jax.tree.leaves(full.state),
+                    jax.tree.leaves(resumed.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fingerprint_refuses_codec_mismatch(tmp_path):
+    """A checkpoint written under one codec (or rate) must not resume
+    under another: the restored accumulators would re-inject residuals of
+    a wire that no longer exists. The refusal names the codec fields."""
+    path = str(tmp_path / "codec.msgpack")
+    fed = _base(wire_codec="int8")
+    st = engine.init_state(PARAMS, fed, C)
+    save_federation_state(path, st, jax.random.PRNGKey(0), 3, fed=fed)
+    like = engine.init_state(PARAMS, fed, C)
+    # same codec round-trips bit-identically
+    st2, _, _ = load_federation_state(path, like, fed=fed)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="wire_codec"):
+        load_federation_state(path, like, fed=fed.replace(wire_codec="topk"))
+    with pytest.raises(ValueError, match="error.feedback"):
+        load_federation_state(path, like,
+                              fed=fed.replace(error_feedback=False))
+
+    # rate knobs are part of the wire identity too
+    tfed = _base(wire_codec="topk", codec_topk_frac=0.1)
+    tpath = str(tmp_path / "topk.msgpack")
+    save_federation_state(tpath, engine.init_state(PARAMS, tfed, C),
+                          jax.random.PRNGKey(0), 3, fed=tfed)
+    with pytest.raises(ValueError, match="codec_topk_frac"):
+        load_federation_state(tpath, engine.init_state(PARAMS, tfed, C),
+                              fed=tfed.replace(codec_topk_frac=0.2))
+
+    # under the identity wire the rate knobs stay inert — no refusal
+    ifed = _base()
+    ipath = str(tmp_path / "id.msgpack")
+    save_federation_state(ipath, engine.init_state(PARAMS, ifed, C),
+                          jax.random.PRNGKey(0), 3, fed=ifed)
+    load_federation_state(ipath, engine.init_state(PARAMS, ifed, C),
+                          fed=ifed.replace(codec_topk_frac=0.9))
+
+
+def test_layout_error_names_ef_accum(tmp_path):
+    """The leaf-count refusal for an EF-bearing checkpoint loaded into an
+    EF-free structure (or vice versa) must name the accumulator leaves —
+    the actionable-ValueError contract of checkpoint/io.py."""
+    path = str(tmp_path / "layout.msgpack")
+    fed = _base(wire_codec="int8")
+    save_federation_state(path, engine.init_state(PARAMS, fed, C),
+                          jax.random.PRNGKey(0), 3)
+    with pytest.raises(ValueError, match="ef_accum"):
+        load_federation_state(path, engine.init_state(PARAMS, _base(), C))
+
+
+# ======================================================== bytes accounting
+def test_wire_bytes_analytics():
+    M = 10_000
+    fed = _base(codec_topk_frac=0.01, codec_sketch_dim=256)
+    ident = agg.wire_bytes_per_round(fed, C, M)
+    assert ident == C * M * 4
+    i8 = agg.wire_bytes_per_round(fed.replace(wire_codec="int8"), C, M)
+    assert i8 == C * M + C * 4
+    # the exact int8 ratio is 4M/(M+4) — strictly under 4x (f32 row scales)
+    assert 3.9 < ident / i8 < 4.0
+    tk = agg.wire_bytes_per_round(fed.replace(wire_codec="topk"), C, M)
+    assert tk == C * 100 * 8
+    sk = agg.wire_bytes_per_round(fed.replace(wire_codec="sketch"), C, M)
+    assert sk == C * 256 * 4
+    # bfloat16 identity wire halves the baseline the codecs compete with
+    bf = agg.wire_bytes_per_round(fed.replace(agg_dtype="bfloat16"), C, M)
+    assert bf == C * M * 2
