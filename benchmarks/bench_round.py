@@ -16,7 +16,11 @@ priority-loss target that the plain mean, NaN-divergent, misses).
 
 Times full engine rounds at C=64 clients on a small MLP across inclusion
 rates, reporting rounds/sec and the wasted-local-epoch fraction (clients
-that paid E local epochs but were dropped at aggregation). Every gated
+that paid E local epochs but were dropped at aggregation). The ``pool:*``
+rows sweep the POPULATION size over a log axis (C = 1e3..1e5) at a fixed
+``candidate_pool`` and assert the pooled round time stays flat (< 1.3x)
+while the dense contrast rows scale ~linearly, plus a pool-vs-dense
+rounds-to-target pair at C=256 pricing the sampling. Every gated
 row also reports ``bytes_per_round`` — the analytic uplink cost of its
 client rows under the configured wire codec — and the ``codec:*`` /
 ``codec_frontier:*`` rows sweep the WireCodec registry (identity / int8 /
@@ -969,6 +973,199 @@ def run_chaos(fast=True):
     return _run_builders([lambda: _build_chaos(fast=fast)])
 
 
+# ------------------------------------------------------------ candidate pool
+POOL_P = 64                       # candidate pool size for the scaling rows
+POOL_CLIENTS = (1_000, 10_000, 100_000)   # log axis; 1e5 is the memory
+# bound of the host-resident [C, samples, 60] federation, not of the round
+POOL_DENSE_CLIENTS = (256, 512, 1024)     # dense contrast: O(C) rounds
+
+
+def _pool_data(C, samples=16, seed=0):
+    """Direct synthetic federation — make_synth_federation materializes
+    per-client mixtures client by client, too slow at C=1e5; the pool rows
+    only need consistently-labeled rows of the right SHAPE."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((C, samples, 60), dtype=np.float32)
+    w_true = rng.standard_normal((60, 10), dtype=np.float32)
+    y = np.einsum("csd,dk->csk", x, w_true).argmax(-1).astype(np.int32)
+    pm = np.zeros(C, bool)
+    pm[:N_PRIORITY] = True
+    w = np.full(C, 1.0 / C, np.float32)
+    return ({"x": jnp.asarray(x), "y": jnp.asarray(y)},
+            jnp.asarray(pm), jnp.asarray(w))
+
+
+def _pool_scan(round_fn, n=SCAN_ROUNDS):
+    """Like ``_make_round_scan`` but the federation enters as a traced
+    ARGUMENT: the usual closure capture would embed the [C, samples, 60]
+    client tensor as an XLA literal — a 384MB constant at C=1e5 that
+    stalls compilation for minutes."""
+
+    @jax.jit
+    def scan_state(state, data, pm, w, rng):
+        def body(carry, i):
+            st, key = carry
+            key, rkey = jax.random.split(key)
+            st, _ = round_fn(st, data, pm, w, rkey, i)
+            return (st, key), None
+
+        (state, rng), _ = jax.lax.scan(body, (state, rng),
+                                       jnp.arange(n, dtype=jnp.int32))
+        return state
+
+    return scan_state
+
+
+def _build_pool(fast=True):
+    """Candidate-pool population scaling (``FedConfig.candidate_pool``).
+
+    ``pool:rounds_per_sec:C*`` sweeps the POPULATION size C over a log
+    axis at a fixed pool P=64: every round samples P candidates
+    (Gumbel top-k, priority pinned in-pool) and runs eval/gate/train/
+    fedagg on the [P] slice only, so round time must stay FLAT in C —
+    asserted < 1.3x from the smallest to the largest C, while the
+    ``pool:dense:C*`` contrast rows scale ~linearly (asserted > 1.5x over
+    a 4x client range). The per-round O(C) work that remains (the [C]
+    Gumbel draw + top_k and the [C]-row state scatter) is exactly what
+    the flatness assertion budgets.
+
+    ``pool_rounds_to_target:*`` prices the sampling: at C=256, dense
+    rounds train all 256 clients, pooled rounds 64/round — the row pair
+    reports how many extra rounds the pool needs to the dense run's +5%
+    target (priority clients are always in-pool, so the priority loss
+    keeps stepping every round).
+
+    Parity before timing: at C=256 the candidate_pool=0 and
+    candidate_pool=C rounds are asserted BIT-identical to the dense
+    round before any pool row is emitted."""
+    loss_fn = make_loss_fn(mlp2_apply)
+    params = init_mlp2(jax.random.PRNGKey(42), in_dim=60, hidden=256,
+                      num_classes=10)
+
+    def fed_for(C, pool, **kw):
+        d = dict(num_clients=C, num_priority=N_PRIORITY, rounds=100,
+                 local_epochs=5, epsilon=1e9, warmup_frac=0.0,
+                 align_stat="loss", selection="all", batch_size=16, seed=0,
+                 candidate_pool=pool)
+        d.update(kw)
+        return FedConfig(**d)
+
+    # --- correctness before timing: disabled / >= C pools ARE the dense round
+    data, pm, w = _pool_data(256)
+    fed = fed_for(256, 0)
+    args = (engine.init_state(params, fed, 256), data, pm, w,
+            jax.random.PRNGKey(0), jnp.int32(1))
+    sd, td = jax.jit(engine.make_round_fn(loss_fn, fed))(*args)
+    sf, tf = jax.jit(engine.make_round_fn(loss_fn, fed_for(256, 256)))(*args)
+    np.testing.assert_array_equal(np.asarray(td["gates"]),
+                                  np.asarray(tf["gates"]))
+    for a, b in zip(jax.tree.leaves(sd), jax.tree.leaves(sf)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    rows, jobs, pool_rows, dense_rows = [], [], [], []
+    for C in POOL_CLIENTS:
+        data, pm, w = _pool_data(C)
+        fedp = fed_for(C, POOL_P)
+        scan = _pool_scan(engine.make_round_fn(loss_fn, fedp))
+        s0 = engine.init_state(params, fedp, C)
+        row = {
+            "path": f"pool:rounds_per_sec:C{C}",
+            "clients": C,
+            "candidate_pool": POOL_P,
+            "max_cohort": 0,
+            "scan_rounds": SCAN_ROUNDS,
+        }
+        row.update(_wire_row_fields(fedp, params, POOL_P))
+        rows.append(row)
+        pool_rows.append(row)
+        jobs.append((row, lambda f=scan, s=s0, d=data, p=pm, ww=w:
+                     f(s, d, p, ww, jax.random.PRNGKey(0)), SCAN_ROUNDS))
+
+    for C in POOL_DENSE_CLIENTS:
+        data, pm, w = _pool_data(C)
+        fedd = fed_for(C, 0)
+        scan = _pool_scan(engine.make_round_fn(loss_fn, fedd))
+        s0 = engine.init_state(params, fedd, C)
+        row = {
+            "path": f"pool:dense:C{C}",
+            "clients": C,
+            "max_cohort": 0,
+            "scan_rounds": SCAN_ROUNDS,
+        }
+        row.update(_wire_row_fields(fedd, params, C))
+        rows.append(row)
+        dense_rows.append(row)
+        jobs.append((row, lambda f=scan, s=s0, d=data, p=pm, ww=w:
+                     f(s, d, p, ww, jax.random.PRNGKey(0)), SCAN_ROUNDS))
+
+    def post_flat():
+        secs = [r["sec_per_round"] for r in pool_rows]
+        for r in pool_rows:
+            r["slowdown_vs_smallest_population"] = round(
+                r["sec_per_round"] / secs[0], 3)
+        ratio = max(secs) / min(secs)
+        assert ratio < 1.3, (
+            f"pooled round time varies {ratio:.2f}x across C in "
+            f"{POOL_CLIENTS} — candidate_pool no longer decouples round "
+            "cost from population size (budget: < 1.3x)")
+        dsecs = [r["sec_per_round"] for r in dense_rows]
+        for r in dense_rows:
+            r["slowdown_vs_smallest_population"] = round(
+                r["sec_per_round"] / dsecs[0], 3)
+        assert dsecs[-1] / dsecs[0] > 1.5, (
+            f"dense rounds only grew {dsecs[-1] / dsecs[0]:.2f}x over a "
+            f"{POOL_DENSE_CLIENTS[-1] // POOL_DENSE_CLIENTS[0]}x client "
+            "range — the contrast rows no longer demonstrate O(C) scaling")
+
+    # --- the sampling price: pool-vs-dense rounds-to-target at C=256
+    R = 16 if fast else 40
+    data, pm, w = _pool_data(256)
+    conv = {}
+    for label, fed in (("dense", fed_for(256, 0, local_epochs=1)),
+                       ("pool", fed_for(256, POOL_P, local_epochs=1))):
+        rf = engine.make_round_fn(loss_fn, fed)
+        s0 = engine.init_state(params, fed, 256)
+
+        @jax.jit
+        def scan_losses(state, rng, rf=rf):
+            def body(carry, i):
+                st, key = carry
+                key, rkey = jax.random.split(key)
+                st, stats = rf(st, data, pm, w, rkey, i)
+                return (st, key), stats["global_loss"]
+
+            (state, rng), gl = jax.lax.scan(body, (state, rng),
+                                            jnp.arange(R, dtype=jnp.int32))
+            return gl
+
+        conv[label] = np.asarray(scan_losses(s0, jax.random.PRNGKey(0)))
+
+    target = float(conv["dense"][-1]) * 1.05
+    for label in ("dense", "pool"):
+        gl = conv[label]
+        hit = np.nonzero(gl <= target)[0]
+        row = {
+            "path": f"pool_rounds_to_target:{label}",
+            "clients": 256,
+            "scan_rounds": R,
+            "target_loss": round(target, 5),
+            "final_loss": round(float(gl[-1]), 5),
+            "rounds_to_target": int(hit[0]) if hit.size else None,
+        }
+        if label == "pool":
+            row["candidate_pool"] = POOL_P
+        rows.append(row)
+    assert np.isfinite(conv["pool"][-1]), (
+        "the pooled C=256 run diverged — priority clients should keep the "
+        "priority loss finite from inside every round's pool")
+
+    return rows, jobs, [post_flat]
+
+
+def run_pool(fast=True):
+    return _run_builders([lambda: _build_pool(fast=fast)])
+
+
 def _run_builders(builders):
     """Build every suite first, then time ALL gated rows in one interleaved
     session (see ``_timed_rows``), then fill the derived ratios."""
@@ -994,6 +1191,7 @@ def run(fast=True):
             lambda: _build_codec(fast=fast),
             lambda: _build_byzantine(fast=fast),
             lambda: _build_chaos(fast=fast),
+            lambda: _build_pool(fast=fast),
         ]
     )
 

@@ -45,16 +45,17 @@ import sys
 # deliberately absent (they are what we compare, not how we match).
 # async_mode/min_lag joined in PR 5 (fifo-vs-ready rows), aggregator in
 # PR 6 (robust-aggregation ablation rows), the failure knobs in PR 7
-# (chaos:* fault-injection rows), and the wire-codec knobs in PR 8
-# (codec:* / codec_frontier:* uplink-compression rows): rows missing a
+# (chaos:* fault-injection rows), the wire-codec knobs in PR 8
+# (codec:* / codec_frontier:* uplink-compression rows), and
+# candidate_pool in PR 9 (pool:* population-scaling rows): rows missing a
 # field simply omit it from their key, so pre-existing baselines still
-# match — only rows that NAME a mode/aggregator/failure model/codec are
-# distinguished by it.
+# match — only rows that NAME a mode/aggregator/failure model/codec/pool
+# are distinguished by it.
 KEY_FIELDS = ("path", "target_inclusion_rate", "max_cohort", "clients",
               "scan_rounds", "async_depth", "async_mode", "min_lag",
               "aggregator", "failure_model", "crash_rate", "round_deadline",
               "latency_mode", "wire_codec", "error_feedback",
-              "codec_topk_frac", "codec_sketch_dim")
+              "codec_topk_frac", "codec_sketch_dim", "candidate_pool")
 
 METRIC = "rounds_per_sec"
 

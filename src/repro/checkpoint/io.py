@@ -70,11 +70,14 @@ def load_pytree(path: str, like: Any):
     — the ``latency_*``/``round_deadline``/failure-model knobs, whose
     mismatch replays a different fault/timer schedule against the restored
     buffer, ``aggregator``, whose mismatch silently feeds the restored
-    optimizer moments a differently reduced delta stream, or the codec
+    optimizer moments a differently reduced delta stream, the codec
     identity/rate knobs — restored EF accumulators re-injected under a
-    different codec describe a wire that no longer exists) can't be caught
-    here; the writer records them in the payload ``meta`` and
-    ``fl.simulator.load_federation_state(fed=...)`` validates them."""
+    different codec describe a wire that no longer exists — or
+    ``candidate_pool``/``pool_weighting``, whose mismatch samples
+    different candidate pools from the resume round on, advancing the
+    restored backlog/EMA rows for different clients than the writer's run)
+    can't be caught here; the writer records them in the payload ``meta``
+    and ``fl.simulator.load_federation_state(fed=...)`` validates them."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), object_hook=_decode, strict_map_key=False)
     leaves, treedef = jax.tree.flatten(like)

@@ -186,6 +186,39 @@ class FedConfig:
                                       # every (2 + k % period) rounds — the
                                       # paper's App. A.4 arbitrary-participation
                                       # model (stragglers)
+    candidate_pool: int = 0           # sample-then-evaluate population scaling
+                                      # (cross-device regime of arXiv:
+                                      # 2211.01549): each round draws a
+                                      # candidate pool of P clients — priority
+                                      # clients always in-pool, the remaining
+                                      # P - num_priority sampled without
+                                      # replacement from the round PRNG
+                                      # stream — and ONLY the [P] slice pays
+                                      # the eval pre-pass, gating, cohort
+                                      # gather, training, and the fused
+                                      # fedagg; the dense [C] state leaves
+                                      # (backlog, util/incl EMAs, ef_accum)
+                                      # are touched by gather/scatter at the
+                                      # sampled indices only, so round cost
+                                      # is O(P), flat in C. 0 disables
+                                      # pooling; P >= num_clients also runs
+                                      # the dense round (everyone is a
+                                      # candidate) — both are bit-identical
+                                      # to the legacy trace. Requires
+                                      # P >= num_priority when on
+    pool_weighting: str = "uniform"   # candidate-pool sampling weights for
+                                      # the non-priority draw (Gumbel top-k,
+                                      # i.e. sampling without replacement
+                                      # proportional to the weight):
+                                      # "uniform" — every non-priority client
+                                      # equally likely | "backlog" — weight
+                                      # 1 + backlog_k, so clients starved by
+                                      # cohort overflow re-enter the pool
+                                      # sooner | "ema" — weight
+                                      # (1 + tiny) - incl_ema_k, so rarely-
+                                      # included clients are re-sampled and
+                                      # their utility estimate keeps
+                                      # refreshing
     algorithm: str = "fedavg"         # local solver: fedavg | fedprox
     prox_mu: float = 1.0              # FedProx proximal coefficient
     selection: str = "fedalign"       # SelectionStrategy name (fl/engine.py
@@ -472,3 +505,59 @@ class FedConfig:
 
     def replace(self, **kw) -> "FedConfig":
         return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# Config validation: ONE entry point, decorator-registered subsystem hooks.
+#
+# The async, clock, aggregator, and codec checks used to be four scattered
+# ``check_*_config`` functions every caller had to know to call (and in the
+# right combination); now each subsystem contributes its check with
+# ``@register_validator("name")`` at import time and every round builder /
+# driver / CLI calls the single ``validate_config(fed)``. The old names
+# survive as thin deprecated aliases of the registered hooks.
+_VALIDATORS: dict = {}
+
+
+def register_validator(name: str):
+    """Decorator: contribute a subsystem's FedConfig check to
+    ``validate_config``. The hook takes ``fed`` and raises ``ValueError``
+    (with an actionable message) on an invalid knob combination; hooks run
+    in sorted-name order, so error precedence is deterministic."""
+    def deco(fn):
+        _VALIDATORS[name] = fn
+        return fn
+    return deco
+
+
+def validate_config(fed: "FedConfig") -> "FedConfig":
+    """Run every registered subsystem validator against ``fed``.
+
+    Returns ``fed`` unchanged so call sites can validate inline:
+    ``fed = validate_config(fed)``. Importing the standard subsystems here
+    (they register their hooks at import) means a bare
+    ``validate_config(fed)`` never silently skips checks the caller's
+    import graph happened not to pull in."""
+    from repro.core import aggregation  # noqa: F401  (registers hooks)
+    from repro.fl import engine         # noqa: F401  (registers hooks)
+    for name in sorted(_VALIDATORS):
+        _VALIDATORS[name](fed)
+    return fed
+
+
+@register_validator("population")
+def check_pool_config(fed: "FedConfig") -> None:
+    """Candidate-pool knobs (the population-scaling subsystem's hook)."""
+    if fed.candidate_pool < 0:
+        raise ValueError(
+            f"candidate_pool must be >= 0, got {fed.candidate_pool} "
+            "(0 disables pooling)")
+    if fed.pool_weighting not in ("uniform", "backlog", "ema"):
+        raise ValueError(
+            f"unknown pool_weighting {fed.pool_weighting!r}; "
+            "valid: ['backlog', 'ema', 'uniform']")
+    if 0 < fed.candidate_pool < fed.num_priority:
+        raise ValueError(
+            f"candidate_pool={fed.candidate_pool} is smaller than "
+            f"num_priority={fed.num_priority}: priority clients are always "
+            "in-pool, so the pool must hold at least all of them")

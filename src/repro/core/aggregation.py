@@ -45,9 +45,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import register_validator
 from repro.kernels import ops as kops
 from repro.optim import optimizers as _opt
-from repro.utils import fold_in_name
+from repro.utils import Registry, fold_in_name
 
 
 def check_client_weights(weights, *, where="client weights"):
@@ -240,7 +241,7 @@ def _aggregate_coded(codec_name, leaves, treedef, client_params, weights,
 
 
 # ================================================================ aggregators
-AGGREGATORS: dict[str, Callable] = {}
+AGGREGATORS = Registry("aggregator", aliases={None: "mean", "none": "mean"})
 
 
 def register_aggregator(name: str, *, needs_key=False, in_kernel=True):
@@ -259,27 +260,17 @@ def register_aggregator(name: str, *, needs_key=False, in_kernel=True):
     aggregators: the round loop derives a per-round key
     (``aggregator_key``) only for those, so deterministic traces are
     untouched."""
-    def deco(prepare):
-        prepare.agg_name = name
-        prepare.needs_key = needs_key
-        prepare.in_kernel = in_kernel
-        AGGREGATORS[name] = prepare
-        return prepare
-    return deco
+    return AGGREGATORS.register(name, agg_name=name, needs_key=needs_key,
+                                in_kernel=in_kernel)
 
 
 def resolve_aggregator(name) -> str:
     """Canonical registry name ('none' / None is the plain gated mean)."""
-    return "mean" if name in (None, "none") else name
+    return AGGREGATORS.resolve(name)
 
 
 def get_aggregator(name: str) -> Callable:
-    name = resolve_aggregator(name)
-    try:
-        return AGGREGATORS[name]
-    except KeyError:
-        raise ValueError(f"unknown aggregator {name!r}; "
-                         f"registered: {sorted(AGGREGATORS)}") from None
+    return AGGREGATORS.lookup(name)
 
 
 def aggregator_key(fed, round_idx):
@@ -306,9 +297,12 @@ def inclusion_mass(fed, weights, gates):
     return jnp.sum(weights.astype(jnp.float32) * gates.astype(jnp.float32))
 
 
+@register_validator("aggregator")
 def check_aggregator_config(fed):
     """Validate the aggregator knobs whose bad values would corrupt the
-    aggregate silently (like check_async_config for the async knobs)."""
+    aggregate silently (like check_async_config for the async knobs).
+    Registered as the ``validate_config`` "aggregator" hook; direct calls
+    are deprecated — call ``repro.configs.base.validate_config(fed)``."""
     name = resolve_aggregator(fed.aggregator)
     get_aggregator(name)
     if name == "trimmed_mean" and not 0.0 <= fed.trim_frac < 0.5:
@@ -474,7 +468,9 @@ def _agg_cosine(fed, client_deltas, weights, gates, key):
 
 
 # ============================================================== wire codecs
-WIRE_CODECS: dict[str, object] = {}
+WIRE_CODECS = Registry(
+    "wire codec", aliases={None: "identity", "": "identity",
+                           "none": "identity"})
 
 
 def register_wire_codec(name: str):
@@ -501,31 +497,25 @@ def register_wire_codec(name: str):
     - ``wire_bytes(fed, C, M) -> int``: analytic uplink bytes per round
       (the bench's ``bytes_per_round`` metric).
     """
-    def deco(codec):
-        codec.codec_name = name
-        WIRE_CODECS[name] = codec
-        return codec
-    return deco
+    return WIRE_CODECS.register(name, codec_name=name)
 
 
 def resolve_wire_codec(name) -> str:
     """Canonical registry name ('none' / None / '' mean identity)."""
-    return "identity" if name in (None, "", "none") else name
+    return WIRE_CODECS.resolve(name)
 
 
 def get_wire_codec(name):
-    name = resolve_wire_codec(name)
-    try:
-        return WIRE_CODECS[name]
-    except KeyError:
-        raise ValueError(f"unknown wire codec {name!r}; "
-                         f"registered: {sorted(WIRE_CODECS)}") from None
+    return WIRE_CODECS.lookup(name)
 
 
+@register_validator("codec")
 def check_codec_config(fed):
     """Validate the wire-codec knobs whose bad values would corrupt the
     uplink silently (same contract as ``check_aggregator_config``:
-    actionable errors at the engine boundary, no-op when disabled)."""
+    actionable errors at the engine boundary, no-op when disabled).
+    Registered as the ``validate_config`` "codec" hook; direct calls are
+    deprecated."""
     name = resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
     get_wire_codec(name)
     if name == "identity":
@@ -677,7 +667,8 @@ class _SketchCodec:
 
 
 # ========================================================= server optimizers
-SERVER_OPTIMIZERS: dict[str, Callable] = {}
+SERVER_OPTIMIZERS = Registry("server optimizer",
+                             aliases={None: "sgd", "none": "sgd"})
 
 
 def register_server_optimizer(name: str):
@@ -688,25 +679,16 @@ def register_server_optimizer(name: str):
     Optimizer's ``init(params)`` builds the moment pytree carried in
     ``FederationState.opt_state`` and ``update`` consumes the aggregated
     delta as a pseudo-gradient."""
-    def deco(factory):
-        factory.opt_name = name
-        SERVER_OPTIMIZERS[name] = factory
-        return factory
-    return deco
+    return SERVER_OPTIMIZERS.register(name, opt_name=name)
 
 
 def resolve_server_opt(name) -> str:
     """Canonical registry name ('none', the legacy no-op, is plain sgd)."""
-    return "sgd" if name in (None, "none") else name
+    return SERVER_OPTIMIZERS.resolve(name)
 
 
 def get_server_optimizer(name: str) -> Callable:
-    name = resolve_server_opt(name)
-    try:
-        return SERVER_OPTIMIZERS[name]
-    except KeyError:
-        raise ValueError(f"unknown server optimizer {name!r}; "
-                         f"registered: {sorted(SERVER_OPTIMIZERS)}") from None
+    return SERVER_OPTIMIZERS.lookup(name)
 
 
 def server_optimizer(fed):

@@ -98,8 +98,9 @@ from repro.core.aggregation import (aggregate_delta, aggregator_key,
                                     resolve_aggregator, resolve_wire_codec,
                                     server_optimizer)
 from repro.core.alignment import epsilon_at, global_loss_from_locals
+from repro.configs.base import register_validator, validate_config
 from repro.optim.schedules import make_schedule
-from repro.utils import fold_in_name, tree_axpy
+from repro.utils import Registry, fold_in_name, tree_axpy
 
 BACKENDS = ("vmap_spatial", "scan_temporal", "scan_async")
 
@@ -186,9 +187,14 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
+@register_validator("async")
 def check_async_config(fed):
     """Validate the scan_async knobs whose bad values would corrupt the
-    in-flight buffer silently (clamped indices) instead of failing."""
+    in-flight buffer silently (clamped indices) instead of failing.
+
+    Registered as the ``validate_config`` "async" hook; calling it directly
+    is deprecated — call ``repro.configs.base.validate_config(fed)``, the
+    one entry point that runs every subsystem's checks."""
     if fed.async_depth <= 0:
         return
     if fed.async_mode not in ("fifo", "ready"):
@@ -204,13 +210,15 @@ def check_async_config(fed):
             "the pop phase, so min_lag=0 would silently behave as 1")
 
 
+@register_validator("clock")
 def check_clock_config(fed):
     """Validate the event-clock / deadline / failure-model knobs whose bad
     values would otherwise corrupt rounds silently — a zero or negative
     deadline marks every client late and force-lands every slot with no
     finished members, a rate outside [0, 1] draws garbage Bernoullis.
     Same contract as ``check_async_config``: actionable errors at the
-    engine boundary, no-op when everything is disabled."""
+    engine boundary, no-op when everything is disabled. Registered as the
+    ``validate_config`` "clock" hook; direct calls are deprecated."""
     lm = fed.latency_mode
     if lm not in ("none", "lognormal"):
         raise ValueError(f"unknown FedConfig.latency_mode {lm!r}; known: "
@@ -334,9 +342,7 @@ def init_state(params, fed, num_clients: Optional[int] = None) -> FederationStat
     (event clock), the divergence-guard skip counter, and the wire codec's
     error-feedback accumulators exist only when their feature is enabled —
     disabled configs keep the exact legacy leaf layout."""
-    check_async_config(fed)
-    check_clock_config(fed)
-    check_codec_config(fed)
+    validate_config(fed)
     C = int(num_clients if num_clients is not None else fed.num_clients)
     return FederationState(
         params=params,
@@ -383,7 +389,7 @@ class SelectionContext:
     welfare_floor: float = 0.0         # welfare fairness floor on incl_ema
 
 
-STRATEGIES: dict[str, Callable] = {}
+STRATEGIES = Registry("selection strategy")
 
 
 def register_strategy(name: str, *, needs_deltas: bool = False,
@@ -395,21 +401,13 @@ def register_strategy(name: str, *, needs_deltas: bool = False,
     backend to populate ``ctx.delta_cos``. ``warmup_excludes_nonpriority``
     controls whether warm-up rounds force priority-only aggregation (True
     for alignment-style rules; False for the unconditional ``all``)."""
-    def deco(fn):
-        fn.strategy_name = name
-        fn.needs_deltas = needs_deltas
-        fn.warmup_excludes_nonpriority = warmup_excludes_nonpriority
-        STRATEGIES[name] = fn
-        return fn
-    return deco
+    return STRATEGIES.register(
+        name, strategy_name=name, needs_deltas=needs_deltas,
+        warmup_excludes_nonpriority=warmup_excludes_nonpriority)
 
 
 def get_strategy(name: str) -> Callable:
-    try:
-        return STRATEGIES[name]
-    except KeyError:
-        raise ValueError(f"unknown selection strategy {name!r}; "
-                         f"registered: {sorted(STRATEGIES)}") from None
+    return STRATEGIES.lookup(name)
 
 
 @register_strategy("fedalign")
@@ -875,21 +873,57 @@ def sketch_key(fed, round_idx):
     return jax.random.fold_in(jax.random.PRNGKey(fed.seed ^ 0x5E7C), round_idx)
 
 
-def participation_mask(fed, key, priority_mask, round_idx):
+def participation_mask(fed, key, priority_mask, round_idx, client_ids=None):
     """Paper App. C.3 / A.4: Bernoulli participation sampling (priority set
     never empty) plus straggler cadence (non-priority client k joins every
-    2 + k % period rounds)."""
+    2 + k % period rounds).
+
+    ``client_ids`` carries a candidate-pool round's [P] global identities:
+    the Bernoulli draw keys on the identity (``fold_in``) and the
+    straggler cadence uses the GLOBAL client index, so a client's
+    availability schedule is the same whichever pool it got sampled into.
+    Dense rounds (``client_ids=None``) keep the legacy shaped draw —
+    bit-identical trace."""
     C = priority_mask.shape[0]
+    ids = jnp.arange(C) if client_ids is None else client_ids
     if fed.participation < 1.0:
-        part = jax.random.bernoulli(key, fed.participation, (C,))
+        part = _identity_bernoulli(key, fed.participation, C, client_ids)
         part = part | (jnp.sum(part & priority_mask) == 0) & priority_mask
     else:
         part = jnp.ones((C,), bool)
     if fed.straggler_period > 0:
-        cadence = 2 + jnp.arange(C) % fed.straggler_period
+        cadence = 2 + ids % fed.straggler_period
         available = (round_idx % cadence) == 0
         part = part & (available | priority_mask)
     return part
+
+
+def pool_select(fed, key, priority_mask, backlog, incl_ema, pool: int):
+    """Draw one round's candidate pool: [P] sorted global client indices.
+
+    Priority clients are ALWAYS in-pool (score pinned at +inf); the
+    remaining P - num_priority slots go to non-priority clients sampled
+    WITHOUT replacement via the Gumbel-top-k trick — score = log(weight) +
+    Gumbel noise, take the top P. ``fed.pool_weighting`` sets the weight:
+
+      uniform — every non-priority client equally likely (weight 1)
+      backlog — weight 1 + backlog_k: clients starved by cohort overflow
+                get sampled back in sooner
+      ema     — weight (1 + eps) - incl_ema_k: clients the aggregation has
+                rarely honoured get a boost (welfare-style coverage)
+
+    The returned indices are SORTED ascending, so the pool's index space
+    is a stable, order-preserving slice of the dense one — the gather /
+    scatter contract every pooled round relies on."""
+    g = jax.random.gumbel(key, priority_mask.shape, jnp.float32)
+    if fed.pool_weighting == "backlog":
+        g = g + jnp.log1p(backlog.astype(jnp.float32))
+    elif fed.pool_weighting == "ema":
+        g = g + jnp.log(jnp.maximum(
+            1.0 + 1e-6 - incl_ema.astype(jnp.float32), 1e-6))
+    score = jnp.where(priority_mask.astype(bool), jnp.inf, g)
+    _, idx = jax.lax.top_k(score, int(pool))
+    return jnp.sort(idx)
 
 
 # ============================================================ failure models
@@ -914,34 +948,29 @@ class FailurePlan:
     corrupt: Any = None
 
 
-FAILURE_MODELS: dict[str, Callable] = {}
+FAILURE_MODELS = Registry("failure model", aliases={None: "none", "": "none"})
 
 
 def register_failure_model(name: str):
-    """Register ``fn(fed, key, round_idx, num_clients) -> FailurePlan``
-    under ``name`` (decorator, like ``register_strategy`` /
+    """Register ``fn(fed, key, round_idx, num_clients, client_ids=None) ->
+    FailurePlan`` under ``name`` (decorator, like ``register_strategy`` /
     ``register_aggregator``). ``key`` is the round's failure stream
     (``failure_key``); models must draw ONLY from it (optionally split by
     ``fold_in_name``) so injected faults are bit-reproducible, resume-safe,
-    and independent of the main round PRNG chain."""
-    def deco(fn):
-        fn.failure_name = name
-        FAILURE_MODELS[name] = fn
-        return fn
-    return deco
+    and independent of the main round PRNG chain. ``client_ids`` carries
+    the [P] global client identities of a candidate-pool round: with it,
+    per-client draws must key on the IDENTITY (``jax.random.fold_in``), so
+    a client's fault stream is independent of which pool it landed in."""
+    return FAILURE_MODELS.register(name, failure_name=name)
 
 
 def resolve_failure_model(name) -> str:
     """Canonical failure-model name: None/'' mean 'none' (disabled)."""
-    return "none" if name in (None, "", "none") else str(name)
+    return str(FAILURE_MODELS.resolve(name))
 
 
 def get_failure_model(name) -> Callable:
-    try:
-        return FAILURE_MODELS[resolve_failure_model(name)]
-    except KeyError:
-        raise ValueError(f"unknown failure model {name!r}; registered: "
-                         f"{sorted(FAILURE_MODELS)}") from None
+    return FAILURE_MODELS.lookup(name)
 
 
 def failure_key(fed, round_idx):
@@ -953,72 +982,89 @@ def failure_key(fed, round_idx):
     return jax.random.fold_in(base, round_idx)
 
 
-def failure_plan(fed, round_idx, num_clients):
+def failure_plan(fed, round_idx, num_clients, client_ids=None):
     """Evaluate the configured FailureModel for one round, or None when
-    disabled (callers keep the fault-free trace untouched)."""
+    disabled (callers keep the fault-free trace untouched). With
+    ``client_ids`` (a candidate-pool round's [P] global identities) the
+    plan's masks live in POOL space, drawn per-identity so a client's
+    fault stream does not depend on who else got sampled."""
     name = resolve_failure_model(fed.failure_model)
     if name == "none":
         return None
     return FAILURE_MODELS[name](fed, failure_key(fed, round_idx), round_idx,
-                                int(num_clients))
+                                int(num_clients), client_ids=client_ids)
 
 
 @register_failure_model("none")
-def _fm_none(fed, key, round_idx, num_clients):
+def _fm_none(fed, key, round_idx, num_clients, client_ids=None):
     return FailurePlan()
 
 
-def _crashed_mask(fed, key, num_clients):
-    return jax.random.bernoulli(fold_in_name(key, "crash"),
-                                fed.crash_rate, (num_clients,))
+def _identity_bernoulli(key, rate, num_clients, client_ids):
+    """[num_clients] Bernoulli draws. Dense rounds (``client_ids=None``)
+    keep the legacy one-shot shaped draw (bit-identity); pool rounds key
+    each draw on the client IDENTITY via ``fold_in``, so the draw for
+    client k is the same whichever pool k landed in — O(P), never O(C)."""
+    if client_ids is None:
+        return jax.random.bernoulli(key, rate, (num_clients,))
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, client_ids)
+    return jax.vmap(lambda k: jax.random.bernoulli(k, rate))(keys)
 
 
-def _corrupt_mask(fed, key, num_clients):
-    return jax.random.bernoulli(fold_in_name(key, "corrupt"),
-                                fed.corrupt_rate, (num_clients,))
+def _crashed_mask(fed, key, num_clients, client_ids=None):
+    return _identity_bernoulli(fold_in_name(key, "crash"),
+                               fed.crash_rate, num_clients, client_ids)
 
 
-def _dropout_available(fed, round_idx, num_clients):
+def _corrupt_mask(fed, key, num_clients, client_ids=None):
+    return _identity_bernoulli(fold_in_name(key, "corrupt"),
+                               fed.corrupt_rate, num_clients, client_ids)
+
+
+def _dropout_available(fed, round_idx, num_clients, client_ids=None):
     # window-stateless draw: one Bernoulli per (window, client), a window
     # spanning dropout_len rounds — the SAME clients sit out every round
-    # of the window, reproduced exactly from any resume point
+    # of the window, reproduced exactly from any resume point (and, under
+    # pooling, whichever candidate pools the window's rounds sampled)
     window = round_idx // max(int(fed.dropout_len), 1)
     base = fold_in_name(jax.random.PRNGKey(fed.seed), "failure_dropout")
     k = jax.random.fold_in(base, window)
-    return ~jax.random.bernoulli(k, fed.dropout_rate, (num_clients,))
+    return ~_identity_bernoulli(k, fed.dropout_rate, num_clients, client_ids)
 
 
 @register_failure_model("crash")
-def _fm_crash(fed, key, round_idx, num_clients):
+def _fm_crash(fed, key, round_idx, num_clients, client_ids=None):
     """Per-round Bernoulli crash: the client trains, then dies before its
     delta reaches the server."""
-    return FailurePlan(crashed=_crashed_mask(fed, key, num_clients))
+    return FailurePlan(crashed=_crashed_mask(fed, key, num_clients,
+                                             client_ids))
 
 
 @register_failure_model("dropout")
-def _fm_dropout(fed, key, round_idx, num_clients):
+def _fm_dropout(fed, key, round_idx, num_clients, client_ids=None):
     """Transient drop-out: clients disappear for whole ``dropout_len``-round
     windows (folded into the participation mask)."""
     return FailurePlan(
-        available=_dropout_available(fed, round_idx, num_clients))
+        available=_dropout_available(fed, round_idx, num_clients, client_ids))
 
 
 @register_failure_model("corrupt")
-def _fm_corrupt(fed, key, round_idx, num_clients):
+def _fm_corrupt(fed, key, round_idx, num_clients, client_ids=None):
     """Delta corruption in transit: NaN'd (``corrupt_scale == 0``) or scaled
     rows, injected through the ``delta_transform`` seam."""
-    return FailurePlan(corrupt=_corrupt_mask(fed, key, num_clients))
+    return FailurePlan(corrupt=_corrupt_mask(fed, key, num_clients,
+                                             client_ids))
 
 
 @register_failure_model("chaos")
-def _fm_chaos(fed, key, round_idx, num_clients):
+def _fm_chaos(fed, key, round_idx, num_clients, client_ids=None):
     """All three fault classes composed. Each draws from its own named
     substream, so chaos with two rates zeroed matches the remaining single
     model bit-for-bit."""
     return FailurePlan(
-        available=_dropout_available(fed, round_idx, num_clients),
-        crashed=_crashed_mask(fed, key, num_clients),
-        corrupt=_corrupt_mask(fed, key, num_clients))
+        available=_dropout_available(fed, round_idx, num_clients, client_ids),
+        crashed=_crashed_mask(fed, key, num_clients, client_ids),
+        corrupt=_corrupt_mask(fed, key, num_clients, client_ids))
 
 
 def corruption_transform(fed, corrupt_mask):
@@ -1223,7 +1269,17 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
     ``staleness_decay ** D`` under fifo, measured ``staleness_decay **
     age`` under ready, times the drift cosine when
     ``fed.adaptive_staleness``). At D = 0 the async round degenerates to
-    the synchronous one and is bit-identical to ``vmap_spatial``."""
+    the synchronous one and is bit-identical to ``vmap_spatial``.
+
+    ``fed.candidate_pool = P`` (0 < P < C) decouples population size from
+    round cost: the round draws a candidate pool of P clients
+    (``pool_select`` — priority always in-pool, non-priority Gumbel-top-k
+    sampled from the round PRNG stream), runs eval/gating/cohort/train/
+    fedagg on the [P] slice only, and scatter-updates the per-client state
+    leaves at the sampled indices — dense [C] leaves are touched by one
+    gather and one scatter, so rounds/sec is flat in C. ``candidate_pool
+    = 0`` (and P >= C) is the dense round, bit-identical to the legacy
+    trace for every strategy x backend."""
     backend = backend or fed.backend
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")
@@ -1233,10 +1289,7 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
             f"'scan_async' backend; {backend!r} applies every delta at its "
             "own round barrier and would silently ignore the in-flight "
             "buffer (set async_depth=0 or backend='scan_async')")
-    check_async_config(fed)
-    check_aggregator_config(fed)
-    check_clock_config(fed)
-    check_codec_config(fed)
+    validate_config(fed)
     # stochastic aggregators (dp) get a per-round key; deterministic ones
     # keep a key-free trace (python-level branch, not a traced cond)
     agg_needs_key = get_aggregator(fed.aggregator).needs_key
@@ -1257,9 +1310,13 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
     # static pipeline depth: 0 (and thus the fully synchronous application
     # path, bit-identical to vmap_spatial) unless scan_async asks for more
     async_depth = int(fed.async_depth) if backend == "scan_async" else 0
+    # candidate pool size (0 disables); the wrapper below python-branches
+    # on it per federation size, so disabled (and P >= C) rounds run the
+    # dense body with LITERALLY the legacy trace
+    pool = int(getattr(fed, "candidate_pool", 0))
 
-    def round_fn(state: FederationState, data, priority_mask, weights, rng,
-                 round_idx):
+    def _round_body(state: FederationState, data, priority_mask, weights,
+                    rng, round_idx, client_ids=None):
         global_params = state.params
         C = priority_mask.shape[0]
         lr = sched(round_idx)
@@ -1283,13 +1340,15 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
 
         # participation sampling (paper App. C.3 / A.4)
         rng, pkey = jax.random.split(rng)
-        part = participation_mask(fed, pkey, priority_mask, round_idx)
+        part = participation_mask(fed, pkey, priority_mask, round_idx,
+                                  client_ids=client_ids)
 
         # fault injection: the plan's availability folds into participation
         # (selection never sees a dropped-out client); crashes and
         # deadline-late clients are masked AFTER training (lost_mask);
         # corruption rides the delta_transform seam
-        plan = failure_plan(fed, round_idx, C) if failure_on else None
+        plan = (failure_plan(fed, round_idx, C, client_ids=client_ids)
+                if failure_on else None)
         if plan is not None and plan.available is not None:
             part = part & plan.available
         lost = lost_mask(fed, state, plan)
@@ -1307,7 +1366,13 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
         # per-client PRNG fan-out is by client IDENTITY (index in [C]), so
         # gathered cohorts train with exactly the keys the dense round uses
         rng, lkey = jax.random.split(rng)
-        lkeys = jax.random.split(lkey, C)
+        if client_ids is None:
+            lkeys = jax.random.split(lkey, C)
+        else:
+            # pool rounds fan out by GLOBAL identity in O(P) — splitting C
+            # keys would put the population size back on the round's
+            # critical path, the exact cost pooling exists to remove
+            lkeys = jax.vmap(jax.random.fold_in, (None, 0))(lkey, client_ids)
 
         akey = aggregator_key(fed, round_idx) if agg_needs_key else None
         # carried error-feedback rows; reassigned by the aggregation site
@@ -1511,6 +1576,60 @@ def make_round_fn(loss_fn: Callable, fed, *, backend: Optional[str] = None,
             # consecutive non-finite skips — run_federation halts-and-
             # reports once this crosses fed.max_nonfinite_skips
             stats["skipped_nonfinite"] = nonfinite_skips
+        return new_state, stats
+
+    def round_fn(state: FederationState, data, priority_mask, weights, rng,
+                 round_idx):
+        C = priority_mask.shape[0]
+        # python branch on static shapes: candidate_pool = 0 (disabled) and
+        # candidate_pool >= C both fall through to the dense body — the
+        # parity guarantee is trivially the identity of traces
+        if not 0 < pool < C:
+            return _round_body(state, data, priority_mask, weights, rng,
+                               round_idx)
+        # the pool key is split FIRST (only on this branch), so the rest of
+        # the round consumes the same per-purpose chain order as dense
+        # rounds: participation, then local keys
+        rng, pool_key = jax.random.split(rng)
+        pool_idx = pool_select(fed, pool_key, priority_mask, state.backlog,
+                               state.incl_ema, pool)
+
+        def take(a):
+            return a[pool_idx]
+
+        # [P] view of the federation: per-client leaves gather at the
+        # sampled indices, global leaves (params, moments, in-flight
+        # buffer, drift sketch, skip counter) pass through untouched
+        view = state.replace(
+            backlog=take(state.backlog),
+            util_ema=take(state.util_ema),
+            incl_ema=take(state.incl_ema),
+            latency=(jax.tree.map(take, state.latency) if clock_on
+                     else state.latency),
+            ef_accum=(jax.tree.map(take, state.ef_accum) if ef_on
+                      else state.ef_accum))
+        sub, stats = _round_body(
+            view, jax.tree.map(take, data), take(priority_mask),
+            take(weights), rng, round_idx, client_ids=pool_idx)
+
+        # scatter the pool's per-client leaves back at the sampled
+        # indices; every out-of-pool row is bit-identical to before the
+        # round (pinned by tests/test_pool.py)
+        new_state = sub.replace(
+            backlog=state.backlog.at[pool_idx].set(sub.backlog),
+            util_ema=state.util_ema.at[pool_idx].set(sub.util_ema),
+            incl_ema=state.incl_ema.at[pool_idx].set(sub.incl_ema),
+            latency=state.latency,      # read-only: drawn once at init
+            ef_accum=(jax.tree.map(
+                lambda full, s: full.at[pool_idx].set(s),
+                state.ef_accum, sub.ef_accum) if ef_on else state.ef_accum))
+        # per-client stats scatter to the dense [C] layout (out-of-pool
+        # rows report 0) so loss-curve tooling keeps one index space
+        for name in ("local_losses", "gates"):
+            stats[name] = (jnp.zeros((C,), stats[name].dtype)
+                           .at[pool_idx].set(stats[name]))
+        stats["backlog"] = new_state.backlog
+        stats["pool_idx"] = pool_idx
         return new_state, stats
 
     return round_fn

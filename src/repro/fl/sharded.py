@@ -63,14 +63,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import validate_config
 from repro.core.aggregation import (aggregator_key, apply_server_opt,
-                                    check_aggregator_config,
-                                    check_codec_config, flatten_stacked,
-                                    get_aggregator, inclusion_mass,
-                                    resolve_aggregator, resolve_wire_codec)
+                                    flatten_stacked, get_aggregator,
+                                    inclusion_mass, resolve_aggregator,
+                                    resolve_wire_codec)
 from repro.core.alignment import epsilon_at
 from repro.fl import engine
-from repro.utils import tree_axpy, tree_sub
+from repro.utils import fold_in_name, tree_axpy, tree_sub
 
 FSDP_ARCHS = {"jamba-1.5-large-398b", "llava-next-34b"}
 
@@ -195,6 +195,80 @@ def _failure_stats(fed, stats, lost, nonfinite_skips):
     return stats
 
 
+def pool_round_key(fed, round_idx):
+    """The pod rounds take no rng argument, so the candidate-pool draw is a
+    NAMED stream off the config seed folded with the ABSOLUTE round index —
+    deterministic across processes (crc32 ``fold_in_name``), resume-safe
+    (round r redraws r's exact pool), and independent of the failure /
+    aggregator / latency streams."""
+    base = fold_in_name(jax.random.PRNGKey(fed.seed), "candidate_pool")
+    return jax.random.fold_in(base, round_idx)
+
+
+def _pool_wrap(fed, round_step):
+    """Candidate-pool wrapper shared by both pod rounds: sample P of the C
+    clients (``engine.pool_select`` — priority always in-pool), run the
+    wrapped round on the [P] gather of the batch and the per-client state
+    leaves, and scatter the updated leaves back at the sampled indices.
+    The pool slice keeps the existing mesh layout: client-sharded leaves
+    gather into [P] shards, shard-local aggregation runs unchanged, and
+    the cross-pod reduce stays the one [M_total] all-reduce.
+
+    ``candidate_pool = 0`` (and P >= C) returns the wrapped round itself —
+    the dense trace, bit-identical to the legacy pod round."""
+    pool = int(getattr(fed, "candidate_pool", 0))
+    if pool <= 0:
+        return round_step
+    clock_on = fed.latency_mode != "none"
+    ef_on = (resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+             != "identity") and bool(fed.error_feedback)
+
+    def pooled_step(state, batch, round_idx=0):
+        pm = batch["priority_mask"]
+        C = pm.shape[0]
+        if pool >= C:
+            return round_step(state, batch, round_idx)
+        pool_idx = engine.pool_select(fed, pool_round_key(fed, round_idx),
+                                      pm, state.backlog, state.incl_ema,
+                                      pool)
+
+        def take(a):
+            return a[pool_idx]
+
+        view = state.replace(
+            backlog=take(state.backlog),
+            util_ema=take(state.util_ema),
+            incl_ema=take(state.incl_ema),
+            latency=(jax.tree.map(take, state.latency) if clock_on
+                     else state.latency),
+            ef_accum=(jax.tree.map(take, state.ef_accum) if ef_on
+                      else state.ef_accum))
+        sub_batch = dict(batch)
+        sub_batch["clients"] = jax.tree.map(take, batch["clients"])
+        sub_batch["priority_mask"] = take(pm)
+        sub_batch["weights"] = take(batch["weights"])
+        sub, stats = round_step(view, sub_batch, round_idx,
+                                client_ids=pool_idx)
+        new_state = sub.replace(
+            backlog=state.backlog.at[pool_idx].set(sub.backlog),
+            util_ema=state.util_ema.at[pool_idx].set(sub.util_ema),
+            incl_ema=state.incl_ema.at[pool_idx].set(sub.incl_ema),
+            latency=state.latency,      # read-only: drawn once at init
+            ef_accum=(jax.tree.map(
+                lambda full, s: full.at[pool_idx].set(s),
+                state.ef_accum, sub.ef_accum) if ef_on else state.ef_accum))
+        # per-client stats keep the dense [C] index space downstream
+        # tooling expects; out-of-pool rows report 0
+        for name in ("local_losses", "gates"):
+            stats[name] = (jnp.zeros((C,), stats[name].dtype)
+                           .at[pool_idx].set(stats[name]))
+        stats["backlog"] = new_state.backlog
+        stats["pool_idx"] = pool_idx
+        return new_state, stats
+
+    return pooled_step
+
+
 def make_spatial_round(model, fed, num_clients: int):
     """Returns round_step(state, batch, round_idx=0) -> (new_state, stats).
 
@@ -210,10 +284,7 @@ def make_spatial_round(model, fed, num_clients: int):
     """
     E = fed.local_epochs
     lr = fed.lr
-    engine.check_async_config(fed)
-    engine.check_clock_config(fed)
-    check_aggregator_config(fed)
-    check_codec_config(fed)
+    validate_config(fed)
     agg_needs_key = get_aggregator(fed.aggregator).needs_key
     strategy = engine.get_strategy(fed.selection)
     use_cohort = fed.max_cohort > 0 and not strategy.needs_deltas
@@ -226,7 +297,7 @@ def make_spatial_round(model, fed, num_clients: int):
                 != "identity")
     ef_on = codec_on and bool(fed.error_feedback)
 
-    def round_step(state, batch, round_idx=0):
+    def round_step(state, batch, round_idx=0, client_ids=None):
         params = state.params
         client_batch = batch["clients"]
         pm = batch["priority_mask"]
@@ -239,8 +310,11 @@ def make_spatial_round(model, fed, num_clients: int):
 
         # fault injection mirrors the engine round: availability folds into
         # the selection context, crashes/deadline-late clients are masked
-        # AFTER training (lost_mask), corruption rides the same transform
-        plan = engine.failure_plan(fed, round_idx, C) if failure_on else None
+        # AFTER training (lost_mask), corruption rides the same transform.
+        # client_ids (a pooled round's [P] global identities) keys the
+        # fault draws on the IDENTITY, pool-independent
+        plan = (engine.failure_plan(fed, round_idx, C, client_ids=client_ids)
+                if failure_on else None)
         part = (plan.available if plan is not None
                 and plan.available is not None else None)
         lost = engine.lost_mask(fed, state, plan)
@@ -349,7 +423,7 @@ def make_spatial_round(model, fed, num_clients: int):
         stats = _failure_stats(fed, stats, lost, new_state.nonfinite_skips)
         return new_state, stats
 
-    return round_step
+    return _pool_wrap(fed, round_step)
 
 
 def make_temporal_round(model, fed, cohort: int):
@@ -381,10 +455,7 @@ def make_temporal_round(model, fed, cohort: int):
     """
     E = fed.local_epochs
     lr = fed.lr
-    engine.check_async_config(fed)
-    engine.check_clock_config(fed)
-    check_aggregator_config(fed)
-    check_codec_config(fed)
+    validate_config(fed)
     codec_on = (resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
                 != "identity")
     ef_on = codec_on and bool(fed.error_feedback)
@@ -415,7 +486,7 @@ def make_temporal_round(model, fed, cohort: int):
             "(the spatial round then sketches too, keeping the modes "
             "identical), or use the spatial round for exact cosines")
 
-    def round_step(state, batch, round_idx=0):
+    def round_step(state, batch, round_idx=0, client_ids=None):
         params = state.params
         pm = batch["priority_mask"]
         w = batch["weights"]
@@ -424,8 +495,10 @@ def make_temporal_round(model, fed, cohort: int):
         ef_accum = state.ef_accum
 
         # fault injection (corruption excluded above): availability masks
-        # selection, crashes/deadline-late clients lose their mass post-train
-        plan = engine.failure_plan(fed, round_idx, C) if failure_on else None
+        # selection, crashes/deadline-late clients lose their mass
+        # post-train; client_ids keys pooled draws on the global identity
+        plan = (engine.failure_plan(fed, round_idx, C, client_ids=client_ids)
+                if failure_on else None)
         part = (plan.available if plan is not None
                 and plan.available is not None else None)
         lost = engine.lost_mask(fed, state, plan)
@@ -544,7 +617,7 @@ def make_temporal_round(model, fed, cohort: int):
         stats = _failure_stats(fed, stats, lost, new_state.nonfinite_skips)
         return new_state, stats
 
-    return round_step
+    return _pool_wrap(fed, round_step)
 
 
 def make_round_step(model, fed, num_clients: int, *, fsdp: bool):

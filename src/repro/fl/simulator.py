@@ -122,6 +122,16 @@ def _state_fingerprint(fed) -> Optional[dict]:
             fp["codec_topk_frac"] = float(fed.codec_topk_frac)
         if wc == "sketch":
             fp["codec_sketch_dim"] = int(fed.codec_sketch_dim)
+    # candidate pool: shape-invisible (pooling adds NO leaves — the dense
+    # [C] leaves are only gathered/scattered), but a resume under a
+    # different pool size or weighting samples different candidate pools
+    # from round r on, so the restored backlog/EMA leaves would advance
+    # for different clients than the writer's run
+    cp = int(getattr(fed, "candidate_pool", 0))
+    if cp > 0:
+        fp.update(candidate_pool=cp,
+                  pool_weighting=str(getattr(fed, "pool_weighting",
+                                             "uniform")))
     return fp or None
 
 
@@ -161,10 +171,12 @@ def load_federation_state(path: str, like_state, fed=None):
                 "aggregator, the restored error-feedback accumulators "
                 "would re-inject residuals of a different wire codec (or "
                 "topk/sketch rate), and/or the fault-injection stream "
-                "would diverge from the writer's. Resume with the writer's "
-                "async_mode/min_lag/adaptive_staleness/aggregator/"
-                "latency_*/round_deadline/failure-model/wire_codec/"
-                "error_feedback/codec-rate knobs (or drain the buffer "
+                "would diverge from the writer's, and/or the candidate-pool "
+                "sampler would draw different pools from this round on. "
+                "Resume with the writer's async_mode/min_lag/"
+                "adaptive_staleness/aggregator/latency_*/round_deadline/"
+                "failure-model/wire_codec/error_feedback/codec-rate/"
+                "candidate_pool/pool_weighting knobs (or drain the buffer "
                 "before switching policies)")
     return tree["state"], tree["rng"], step
 

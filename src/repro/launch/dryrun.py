@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, ALIASES, INPUT_SHAPES, get_config
 from repro.configs.base import FedConfig
+from repro.configs.cli import add_fed_args, fed_from_args
 from repro.fl import sharded
 from repro.launch.mesh import make_production_mesh
 from repro.models import get_model
@@ -312,131 +313,26 @@ def _mem_dict(mem):
     return out
 
 
-def main():
+def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--variant", default="baseline", choices=["baseline", "opt"])
-    ap.add_argument("--async-depth", type=int, default=0,
-                    help="lower the train rounds with scan_async overlapped "
-                         "cohorts: the in-flight delta buffer (async_depth "
-                         "stacked param-shaped deltas, plus per-slot "
-                         "age/validity vectors) joins the lowered "
-                         "FederationState")
-    ap.add_argument("--async-mode", default="fifo", choices=["fifo", "ready"],
-                    help="in-flight pop policy: strict fixed-lag pipe, or "
-                         "FedBuff-style variable-lag readiness buffer "
-                         "(pops every slot aged >= --min-lag, oldest "
-                         "first)")
-    ap.add_argument("--min-lag", type=int, default=1,
-                    help="ready mode: rounds a buffered delta must age "
-                         "before it may be applied (1 <= min_lag <= "
-                         "async_depth)")
-    ap.add_argument("--adaptive-staleness", action="store_true",
-                    help="discount applied deltas by measured drift "
-                         "(staleness_decay**age * max(0, cos vs the last "
-                         "applied delta)); adds the [sketch_dim] "
-                         "last_delta sketch leaf to the lowered state")
-    ap.add_argument("--aggregator", default="mean",
-                    choices=["mean", "trimmed_mean", "median", "dp",
-                             "cosine_filter"],
-                    help="Aggregator registry name (core/aggregation.py): "
-                         "how the gated client deltas are reduced inside "
-                         "the one fused fedagg call. trimmed_mean/median "
-                         "lower the in-kernel sort network; the temporal "
-                         "(FSDP) round then gathers the client axis "
-                         "([C, ...] leaves) instead of streaming a "
-                         "weighted sum")
-    ap.add_argument("--trim-frac", type=float, default=0.1,
-                    help="trimmed_mean: fraction of included clients "
-                         "trimmed from EACH side per coordinate (< 0.5)")
-    ap.add_argument("--dp-clip", type=float, default=1.0,
-                    help="dp: per-client delta L2 clip bound (the DP "
-                         "sensitivity)")
-    ap.add_argument("--dp-noise", type=float, default=0.0,
-                    help="dp: Gaussian noise multiplier z (sigma = "
-                         "z*dp_clip/inclusion_mass per coordinate; 0 = "
-                         "clip-only)")
-    ap.add_argument("--outlier-cos", type=float, default=0.0,
-                    help="cosine_filter: gate out clients whose sketch-"
-                         "estimated delta-direction cosine to the gated "
-                         "mean direction falls below this")
-    ap.add_argument("--latency-mode", default="none",
-                    choices=["none", "lognormal"],
-                    help="event-driven client clock: draw per-client "
-                         "lognormal compute+network times into the lowered "
-                         "FederationState ([C] latency leaves) and give "
-                         "each in-flight slot its own countdown timer "
-                         "(requires --async-mode ready at depth > 0)")
-    ap.add_argument("--round-deadline", type=float, default=float("inf"),
-                    help="force-land any in-flight slot older than this "
-                         "many round units with only its finished members' "
-                         "mass (finite values require --latency-mode)")
-    ap.add_argument("--failure-model", default="none",
-                    choices=["none", "crash", "dropout", "corrupt", "chaos"],
-                    help="fault-injection FailureModel (fl/engine.py "
-                         "registry) lowered into the round: Bernoulli "
-                         "crash (delta lost post-train), transient "
-                         "drop-out (availability masks selection), delta "
-                         "corruption in transit, or all three (chaos)")
-    ap.add_argument("--crash-rate", type=float, default=0.0)
-    ap.add_argument("--dropout-rate", type=float, default=0.0)
-    ap.add_argument("--dropout-len", type=int, default=1)
-    ap.add_argument("--corrupt-rate", type=float, default=0.0)
-    ap.add_argument("--corrupt-scale", type=float, default=0.0)
-    ap.add_argument("--divergence-guard", action="store_true",
-                    help="lower the non-finite-aggregate guard: cond-skip "
-                         "the apply and thread the consecutive-skip "
-                         "counter leaf")
-    ap.add_argument("--wire-codec", default="identity",
-                    choices=["identity", "int8", "topk", "sketch"],
-                    help="WireCodec registry name (core/aggregation.py): "
-                         "lower the round with compressed uplink rows "
-                         "decoded in-register inside the fused fedagg "
-                         "kernel; non-identity codecs with error feedback "
-                         "add the [C x params] ef_accum leaves to the "
-                         "lowered FederationState")
-    ap.add_argument("--codec-topk-frac", type=float, default=0.01,
-                    help="topk: fraction of coordinates each client keeps "
-                         "(k = max(1, frac * M_total) value/index pairs on "
-                         "the wire)")
-    ap.add_argument("--codec-sketch-dim", type=int, default=2048,
-                    help="sketch: CountSketch width each client uplinks")
-    ap.add_argument("--no-error-feedback", dest="error_feedback",
-                    action="store_false", default=True,
-                    help="drop the per-client error-feedback accumulators "
-                         "(biased compression; no ef_accum leaves)")
+    # every federation knob — async/aggregator/clock/failure/guard/codec/
+    # pool — comes from the shared surface so this CLI can never drift
+    # from the trainer's (tests/test_pool.py pins the two flag sets equal)
+    add_fed_args(ap)
     ap.add_argument("--out", default="results/dryrun")
-    args = ap.parse_args()
+    return ap
 
-    fed = DRYRUN_FED
-    if args.async_depth > 0:
-        fed = fed.replace(async_depth=args.async_depth, backend="scan_async",
-                          async_mode=args.async_mode, min_lag=args.min_lag,
-                          adaptive_staleness=args.adaptive_staleness)
-    if args.aggregator != "mean":
-        fed = fed.replace(aggregator=args.aggregator,
-                          trim_frac=args.trim_frac, dp_clip=args.dp_clip,
-                          dp_noise=args.dp_noise,
-                          outlier_cos=args.outlier_cos)
-    if args.latency_mode != "none":
-        fed = fed.replace(latency_mode=args.latency_mode,
-                          round_deadline=args.round_deadline)
-    if args.failure_model != "none":
-        fed = fed.replace(failure_model=args.failure_model,
-                          crash_rate=args.crash_rate,
-                          dropout_rate=args.dropout_rate,
-                          dropout_len=args.dropout_len,
-                          corrupt_rate=args.corrupt_rate,
-                          corrupt_scale=args.corrupt_scale)
-    if args.divergence_guard:
-        fed = fed.replace(divergence_guard=True)
-    if args.wire_codec != "identity":
-        fed = fed.replace(wire_codec=args.wire_codec,
-                          error_feedback=args.error_feedback,
-                          codec_topk_frac=args.codec_topk_frac,
-                          codec_sketch_dim=args.codec_sketch_dim)
+
+def main():
+    args = build_parser().parse_args()
+
+    # a default command line yields {} -> fed stays LITERALLY DRYRUN_FED,
+    # so the lowered round is bit-identical to the pre-CLI-refactor one
+    fed = DRYRUN_FED.replace(**fed_from_args(args))
 
     archs = ARCH_IDS if args.arch == "all" else [ALIASES.get(args.arch, args.arch)]
     shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
@@ -469,6 +365,10 @@ def main():
                 tag += f"__codec-{args.wire_codec}"
                 if not args.error_feedback:
                     tag += "-noef"
+            if args.candidate_pool > 0:
+                tag += f"__pool{args.candidate_pool}"
+                if args.pool_weighting != "uniform":
+                    tag += f"-{args.pool_weighting}"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
                 print(f"[skip-existing] {tag}")

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.configs.base import FedConfig
+from repro.configs.cli import add_fed_args, fed_from_args
 from repro.data.tokens import make_token_federation
 from repro.fl import engine, sharded
 from repro.models import get_model
@@ -115,7 +116,7 @@ def run(arch="qwen1.5-0.5b", smoke=True, rounds=10, clients=8, n_priority=4,
     return state.params, history
 
 
-def main():
+def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -124,75 +125,17 @@ def main():
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--aggregator", default="mean",
-                    choices=["mean", "trimmed_mean", "median", "dp",
-                             "cosine_filter"],
-                    help="client-delta reduction (Aggregator registry)")
-    ap.add_argument("--trim-frac", type=float, default=0.1)
-    ap.add_argument("--dp-clip", type=float, default=1.0)
-    ap.add_argument("--dp-noise", type=float, default=0.0)
-    ap.add_argument("--dp-delta", type=float, default=1e-5,
-                    help="dp: target delta for the RDP (epsilon, delta) "
-                         "report printed after the run")
-    ap.add_argument("--outlier-cos", type=float, default=0.0)
-    ap.add_argument("--latency-mode", default="none",
-                    choices=["none", "lognormal"],
-                    help="event-driven client clock (per-client lognormal "
-                         "compute+network times; async depth > 0 requires "
-                         "async_mode='ready')")
-    ap.add_argument("--round-deadline", type=float, default=float("inf"),
-                    help="force-land in-flight slots after this many round "
-                         "units with only their finished members' mass")
-    ap.add_argument("--failure-model", default="none",
-                    choices=["none", "crash", "dropout", "corrupt", "chaos"],
-                    help="fault injection (FailureModel registry)")
-    ap.add_argument("--crash-rate", type=float, default=0.0)
-    ap.add_argument("--dropout-rate", type=float, default=0.0)
-    ap.add_argument("--dropout-len", type=int, default=1)
-    ap.add_argument("--corrupt-rate", type=float, default=0.0)
-    ap.add_argument("--corrupt-scale", type=float, default=0.0)
-    ap.add_argument("--divergence-guard", action="store_true",
-                    help="skip non-finite aggregates bit-exactly and track "
-                         "consecutive skips")
-    ap.add_argument("--max-nonfinite-skips", type=int, default=0,
-                    help="halt the driver after this many CONSECUTIVE "
-                         "guarded skips (0 = never halt)")
-    ap.add_argument("--wire-codec", default="identity",
-                    choices=["identity", "int8", "topk", "sketch"],
-                    help="uplink compression (WireCodec registry): encode "
-                         "the flattened per-client delta rows before the "
-                         "fused fedagg call; decode happens in-register "
-                         "inside the kernel")
-    ap.add_argument("--codec-topk-frac", type=float, default=0.01,
-                    help="topk: fraction of coordinates each client keeps")
-    ap.add_argument("--codec-sketch-dim", type=int, default=2048,
-                    help="sketch: CountSketch width each client uplinks")
-    ap.add_argument("--no-error-feedback", dest="error_feedback",
-                    action="store_false", default=True,
-                    help="disable the per-client error-feedback "
-                         "accumulators (biased compression)")
-    a = ap.parse_args()
-    agg_kw = {} if a.aggregator == "mean" else dict(
-        aggregator=a.aggregator, trim_frac=a.trim_frac, dp_clip=a.dp_clip,
-        dp_noise=a.dp_noise, dp_delta=a.dp_delta, outlier_cos=a.outlier_cos)
-    if a.latency_mode != "none":
-        agg_kw.update(latency_mode=a.latency_mode,
-                      round_deadline=a.round_deadline)
-    if a.failure_model != "none":
-        agg_kw.update(failure_model=a.failure_model, crash_rate=a.crash_rate,
-                      dropout_rate=a.dropout_rate, dropout_len=a.dropout_len,
-                      corrupt_rate=a.corrupt_rate,
-                      corrupt_scale=a.corrupt_scale)
-    if a.divergence_guard:
-        agg_kw.update(divergence_guard=True,
-                      max_nonfinite_skips=a.max_nonfinite_skips)
-    if a.wire_codec != "identity":
-        agg_kw.update(wire_codec=a.wire_codec,
-                      error_feedback=a.error_feedback,
-                      codec_topk_frac=a.codec_topk_frac,
-                      codec_sketch_dim=a.codec_sketch_dim)
+    # every federation knob — aggregator/clock/failure/guard/codec/async/
+    # pool — comes from the shared surface so this CLI can never drift
+    # from the dry-run's (tests/test_pool.py pins the two flag sets equal)
+    add_fed_args(ap)
+    return ap
+
+
+def main():
+    a = build_parser().parse_args()
     run(arch=a.arch, smoke=a.smoke, rounds=a.rounds, clients=a.clients,
-        seq=a.seq, lr=a.lr, **agg_kw)
+        seq=a.seq, lr=a.lr, **fed_from_args(a))
 
 
 if __name__ == "__main__":

@@ -203,7 +203,14 @@ def federation_state_specs(fed, param_specs):
     ``scan_async`` in-flight buffer (``fed.async_depth`` stacked aggregated
     deltas) is params-shaped behind its leading ring-buffer axis, so every
     delta slot shards exactly like the param it will eventually update —
-    the buffer adds D x params of sharded bytes, never a replicated copy."""
+    the buffer adds D x params of sharded bytes, never a replicated copy.
+
+    ``fed.candidate_pool`` changes NOTHING here on purpose: pooling adds
+    no FederationState leaves — the dense [C] client vectors keep their
+    replicated specs and are touched only by the pool wrapper's gather /
+    scatter, so the same spec tree covers pooled and dense runs (the
+    resume-safety of the pool knobs rides the checkpoint fingerprint
+    instead, see ``fl.simulator._state_fingerprint``)."""
     from repro.core.aggregation import resolve_server_opt
     from repro.fl.engine import FederationState
 

@@ -12,6 +12,55 @@ import numpy as np
 Pytree = Any
 
 
+class Registry(dict):
+    """One generic name -> implementation table for every pluggable seam.
+
+    The strategy / aggregator / wire-codec / failure-model / server-
+    optimizer registries used to be copy-pasted dict + decorator +
+    resolver triples whose unknown-name errors drifted apart; this class
+    is the single implementation. It IS a dict — existing call sites like
+    ``sorted(engine.STRATEGIES)`` or ``"mean" in AGGREGATORS`` keep
+    working — plus:
+
+    * ``register(name, **attrs)`` — decorator factory; stamps ``attrs``
+      on the function (``strategy_name``, ``needs_deltas``, ...) and
+      refuses duplicate names.
+    * ``resolve(name)`` — the canonical registered name with the seam's
+      aliases applied (e.g. aggregator ``None``/``"none"`` -> ``"mean"``).
+    * ``lookup(name)`` — resolve + fetch, raising the ONE consistent
+      unknown-name error that lists the valid entries.
+    * ``names()`` — sorted registered names (what the error shows).
+    """
+
+    def __init__(self, kind: str, *, aliases: dict | None = None):
+        super().__init__()
+        self.kind = kind
+        self.aliases = dict(aliases or {})
+
+    def register(self, name: str, **attrs):
+        def deco(fn):
+            if name in self:
+                raise ValueError(f"duplicate {self.kind} {name!r}")
+            for k, v in attrs.items():
+                setattr(fn, k, v)
+            self[name] = fn
+            return fn
+        return deco
+
+    def resolve(self, name):
+        return self.aliases.get(name, name)
+
+    def lookup(self, name):
+        canonical = self.resolve(name)
+        if canonical not in self:
+            raise ValueError(
+                f"unknown {self.kind} {name!r}; registered: {self.names()}")
+        return self[canonical]
+
+    def names(self) -> list:
+        return sorted(self)
+
+
 def tree_zeros_like(tree: Pytree) -> Pytree:
     return jax.tree.map(jnp.zeros_like, tree)
 

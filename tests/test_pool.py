@@ -1,0 +1,350 @@
+"""Candidate-pool population scaling (``fed.candidate_pool``).
+
+Pins (1) the parity contract — ``candidate_pool=0`` (disabled) and
+``candidate_pool >= C`` are BIT-identical to the dense round for every
+strategy on every backend, and for the sharded pod rounds; (2) the
+scatter contract — a client outside the round's pool keeps its backlog /
+EMA / error-feedback state leaves bit-identical through the round,
+including under ``scan_async`` mid-flight checkpoint/resume; (3) the
+sampler — priority clients are always in-pool, weighting tilts are
+sampled from the round PRNG stream only; (4) the unified config API —
+``validate_config`` fan-in, the generic ``utils.Registry`` behind every
+registry, and the shared launcher CLI surface."""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, validate_config
+from repro.configs.cli import add_fed_args, fed_from_args
+from repro.data.synth import make_synth_federation
+from repro.fl import engine
+from repro.fl.simulator import (load_federation_state, run_federation,
+                                save_federation_state)
+from repro.models.small import SMALL_MODELS, make_loss_fn
+from repro.utils import Registry
+
+INIT, APPLY = SMALL_MODELS["synth_logreg"]
+LOSS = make_loss_fn(APPLY)
+FEDN = make_synth_federation(seed=11, n_priority=3, n_nonpriority=9,
+                             samples_per_client=64)
+DATA = {"x": jnp.asarray(FEDN.x), "y": jnp.asarray(FEDN.y)}
+PM = jnp.asarray(FEDN.priority_mask)
+W = jnp.asarray(FEDN.weights)
+C = int(PM.shape[0])
+PARAMS = INIT(jax.random.PRNGKey(0))
+
+STRATEGIES = sorted(engine.STRATEGIES)
+POOL = 6                                    # 3 priority + 3 sampled of 9
+
+
+def _run(fed, backend, r=2, seed=1, state=None, rounds=1):
+    fn = jax.jit(engine.make_round_fn(LOSS, fed, backend=backend))
+    if state is None:
+        state = engine.init_state(PARAMS, fed, C)
+    for i in range(rounds):
+        state, stats = fn(state, DATA, PM, W, jax.random.PRNGKey(seed + i),
+                          jnp.int32(r + i))
+    return state, stats
+
+
+def _assert_bit_identical(a, b):
+    (sa, ta), (sb, tb) = a, b
+    np.testing.assert_array_equal(np.asarray(ta["gates"]),
+                                  np.asarray(tb["gates"]))
+    for la, lb in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        assert la.dtype == lb.dtype
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _base(**kw):
+    base = dict(num_clients=C, num_priority=3, rounds=10, local_epochs=1,
+                epsilon=0.5, warmup_frac=0.0, align_stat="loss")
+    base.update(kw)
+    return FedConfig(**base)
+
+
+# ================================================ disabled / >= C parity
+@pytest.mark.parametrize("backend", engine.BACKENDS)
+@pytest.mark.parametrize("selection", STRATEGIES)
+def test_pool_disabled_and_full_are_dense(selection, backend):
+    """candidate_pool=0 and candidate_pool >= C take the dense python
+    branch: the round is LITERALLY the legacy trace, so every state leaf
+    and the gates are bit-identical — per strategy, per backend."""
+    fed = _base(selection=selection, topk=2, sim_threshold=0.0,
+                welfare_floor=0.05)
+    dense = _run(fed, backend)
+    _assert_bit_identical(dense, _run(fed.replace(candidate_pool=0), backend))
+    _assert_bit_identical(dense, _run(fed.replace(candidate_pool=C), backend))
+    _assert_bit_identical(dense,
+                          _run(fed.replace(candidate_pool=C + 7), backend))
+
+
+def test_pool_parity_with_server_optimizer_and_cohort():
+    """The dense pin survives composition: adam moments + max_cohort +
+    participation masks, three threaded rounds."""
+    fed = _base(server_opt="adam", server_lr=0.5, max_cohort=8,
+                participation=0.7, epsilon=1e9)
+    dense = _run(fed, "vmap_spatial", rounds=3)
+    pooled = _run(fed.replace(candidate_pool=C), "vmap_spatial", rounds=3)
+    _assert_bit_identical(dense, pooled)
+
+
+# ================================================ scatter correctness
+@pytest.mark.parametrize("backend", ["vmap_spatial", "scan_temporal"])
+def test_out_of_pool_client_state_untouched(backend):
+    """A client outside the round's pool must end the round with
+    bit-identical backlog / util_ema / incl_ema rows."""
+    fed = _base(candidate_pool=POOL, epsilon=1e9)
+    state0 = engine.init_state(PARAMS, fed, C)
+    # age the ledgers so "unchanged" is not just "still zero"
+    state0 = state0.replace(
+        backlog=jnp.arange(C, dtype=state0.backlog.dtype),
+        util_ema=jnp.linspace(0.1, 0.9, C).astype(state0.util_ema.dtype),
+        incl_ema=jnp.linspace(0.9, 0.1, C).astype(state0.incl_ema.dtype))
+    state, stats = _run(fed, backend, state=state0)
+    pool_idx = np.asarray(stats["pool_idx"])
+    assert pool_idx.shape == (POOL,)
+    out = np.setdiff1d(np.arange(C), pool_idx)
+    assert out.size == C - POOL
+    for name in ("backlog", "util_ema", "incl_ema"):
+        np.testing.assert_array_equal(np.asarray(getattr(state, name))[out],
+                                      np.asarray(getattr(state0, name))[out])
+    # stats scatter back to dense [C] rows: out-of-pool slots are zero
+    for name in ("local_losses", "gates"):
+        np.testing.assert_array_equal(np.asarray(stats[name])[out], 0.0)
+
+
+def test_out_of_pool_ef_accum_untouched():
+    """With a lossy wire codec + error feedback, only in-pool clients'
+    residual accumulator rows may move."""
+    fed = _base(candidate_pool=POOL, epsilon=1e9, wire_codec="int8",
+                error_feedback=True, lr=0.2)
+    state0 = engine.init_state(PARAMS, fed, C)
+    state, stats = _run(fed, "vmap_spatial", state=state0, seed=4)
+    out = np.setdiff1d(np.arange(C), np.asarray(stats["pool_idx"]))
+    for l0, l1 in zip(jax.tree.leaves(state0.ef_accum),
+                      jax.tree.leaves(state.ef_accum)):
+        np.testing.assert_array_equal(np.asarray(l1)[out],
+                                      np.asarray(l0)[out])
+    # ...and at least one in-pool row accrued residual (int8 is lossy)
+    moved = sum(float(np.abs(np.asarray(l1) - np.asarray(l0)).sum())
+                for l0, l1 in zip(jax.tree.leaves(state0.ef_accum),
+                                  jax.tree.leaves(state.ef_accum)))
+    assert moved > 0.0
+
+
+def test_priority_always_in_pool():
+    """Every round's pool contains every priority client, whatever the
+    weighting; non-priority membership varies with the round key."""
+    pri = np.nonzero(np.asarray(PM))[0]
+    seen = set()
+    for weighting in ("uniform", "backlog", "ema"):
+        fed = _base(candidate_pool=POOL, pool_weighting=weighting,
+                    epsilon=1e9)
+        for seed in range(4):
+            _, stats = _run(fed, "vmap_spatial", seed=seed, r=seed)
+            pool_idx = np.asarray(stats["pool_idx"])
+            assert set(pri) <= set(pool_idx.tolist())
+            np.testing.assert_array_equal(pool_idx, np.sort(pool_idx))
+            seen.add(tuple(pool_idx.tolist()))
+    assert len(seen) > 1                    # the sampler actually samples
+
+
+def test_pool_scan_async_mid_flight_resume(tmp_path):
+    """Interrupt a POOLED scan_async run with cohorts still in flight;
+    the resumed run must be bit-identical to the uninterrupted one —
+    pool draws included (the pool key rides the carried PRNG stream)."""
+    path = str(tmp_path / "pool_async.msgpack")
+    fed = _base(candidate_pool=POOL, rounds=8, epsilon=0.3, lr=0.1,
+                batch_size=32, server_opt="yogi", server_lr=0.3,
+                backend="scan_async", async_depth=2, staleness_decay=0.9)
+    full = run_federation(LOSS, PARAMS, fed, FEDN, eval_every=4)
+
+    half = run_federation(LOSS, PARAMS, fed.replace(rounds=5), FEDN,
+                          eval_every=4)
+    assert float(jnp.sum(half.state.inflight["valid"])) > 0.0
+    save_federation_state(path, half.state, half.rng, 5, fed=fed)
+    like = engine.init_state(PARAMS, fed, C)
+    state, rng, step = load_federation_state(path, like, fed=fed)
+    assert step == 5
+    resumed = run_federation(LOSS, None, fed, FEDN, eval_every=4,
+                             state=state, rng=rng, start_round=step)
+    for a, b in zip(jax.tree.leaves(full.state),
+                    jax.tree.leaves(resumed.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pool_fingerprint_guards_resume(tmp_path):
+    """Resuming a pooled checkpoint under different pool knobs would
+    advance different clients' rows from the resume round on — the
+    fingerprint catches the mismatch."""
+    path = str(tmp_path / "pool_fp.msgpack")
+    fed = _base(candidate_pool=POOL, epsilon=1e9)
+    state, _ = _run(fed, "vmap_spatial")
+    save_federation_state(path, state, jax.random.PRNGKey(3), 1, fed=fed)
+    like = engine.init_state(PARAMS, fed, C)
+    with pytest.raises(ValueError, match="candidate_pool"):
+        load_federation_state(path, like, fed=fed.replace(candidate_pool=0))
+    with pytest.raises(ValueError, match="pool_weighting"):
+        load_federation_state(
+            path, like, fed=fed.replace(pool_weighting="backlog"))
+    # matching knobs load clean
+    got, _, step = load_federation_state(path, like, fed=fed)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ================================================ pod rounds
+def _pod_fixture():
+    from repro.configs import get_smoke
+    from repro.launch.train import build_batches
+    from repro.data.tokens import make_token_federation
+    from repro.models import get_model
+    cfg = get_smoke("qwen1_5_0_5b").replace(remat=False)
+    model = get_model(cfg)
+    rng = np.random.default_rng(0)
+    fd = make_token_federation(seed=0, vocab=cfg.vocab_size, n_clients=4,
+                               n_priority=2, seq_len=32,
+                               tokens_per_client=33 * 8)
+    batch = build_batches(cfg, fd, clients=4, per_client=2, seq=32, rng=rng)
+    return model, batch
+
+
+@pytest.mark.parametrize("make", ["make_spatial_round", "make_temporal_round"])
+def test_pod_round_pool_parity_and_invariance(make):
+    """Pod rounds: candidate_pool >= C is bit-identical to dense, and a
+    pooled P < C round leaves out-of-pool client rows untouched (pool key
+    comes from the named deterministic per-round stream)."""
+    from repro.fl import sharded
+    model, batch = _pod_fixture()
+    mk = getattr(sharded, make)
+    fed = FedConfig(local_epochs=1, epsilon=1e9, lr=0.05)
+    state = engine.init_state(model.init(jax.random.PRNGKey(0)), fed, 4)
+
+    sd, td = jax.jit(mk(model, fed, 4))(state, batch)
+    sf, tf = jax.jit(mk(model, fed.replace(candidate_pool=4), 4))(state, batch)
+    for a, b in zip(jax.tree.leaves(sd), jax.tree.leaves(sf)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(td["gates"]),
+                                  np.asarray(tf["gates"]))
+
+    fedp = fed.replace(candidate_pool=3)
+    state0 = state.replace(backlog=jnp.arange(4, dtype=state.backlog.dtype))
+    sp, tp = jax.jit(mk(model, fedp, 4))(state0, batch)
+    pool_idx = np.asarray(tp["pool_idx"])
+    assert pool_idx.shape == (3,)
+    assert {0, 1} <= set(pool_idx.tolist())            # priority in-pool
+    out = np.setdiff1d(np.arange(4), pool_idx)
+    for name in ("backlog", "util_ema", "incl_ema"):
+        np.testing.assert_array_equal(np.asarray(getattr(sp, name))[out],
+                                      np.asarray(getattr(state0, name))[out])
+    # same round twice -> same pool (the named stream is deterministic)
+    _, tp2 = jax.jit(mk(model, fedp, 4))(state0, batch)
+    np.testing.assert_array_equal(pool_idx, np.asarray(tp2["pool_idx"]))
+
+
+# ================================================ unified config API
+def test_validate_config_runs_every_hook():
+    """One entry point covers aggregator, async, clock, codec AND pool
+    validation."""
+    validate_config(_base())                            # clean config: no-op
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        validate_config(_base(aggregator="nope"))
+    with pytest.raises(ValueError, match="min_lag"):
+        validate_config(_base(backend="scan_async", async_depth=2,
+                              async_mode="ready", min_lag=5))
+    with pytest.raises(ValueError, match="pool_weighting"):
+        validate_config(_base(candidate_pool=POOL, pool_weighting="nope"))
+    with pytest.raises(ValueError, match="smaller than num_priority"):
+        validate_config(_base(candidate_pool=2))
+
+
+def test_deprecated_check_aliases_still_work():
+    """The old per-subsystem check_* names stay importable and callable."""
+    from repro.core.aggregation import (check_aggregator_config,
+                                        check_codec_config)
+    from repro.fl.engine import check_async_config, check_clock_config
+    fed = _base()
+    for check in (check_aggregator_config, check_codec_config,
+                  check_async_config, check_clock_config):
+        check(fed)
+    with pytest.raises(ValueError):
+        check_aggregator_config(_base(aggregator="nope"))
+
+
+def test_registry_error_texts_and_aliases():
+    """Every registry rides utils.Registry yet keeps its legacy naming:
+    error texts enumerate registrations, aliases pin the legacy synonyms."""
+    from repro.core import aggregation
+    with pytest.raises(ValueError, match=r"unknown selection strategy 'x'"):
+        engine.get_strategy("x")
+    with pytest.raises(ValueError, match=r"unknown failure model 'x'"):
+        engine.get_failure_model("x")
+    with pytest.raises(ValueError, match=r"unknown aggregator 'x'"):
+        aggregation.get_aggregator("x")
+    with pytest.raises(ValueError, match=r"unknown wire codec 'x'"):
+        aggregation.get_wire_codec("x")
+    assert engine.resolve_failure_model(None) == "none"
+    assert engine.resolve_failure_model("") == "none"
+    assert aggregation.resolve_aggregator(None) == "mean"
+    assert aggregation.resolve_wire_codec("none") == "identity"
+    assert aggregation.resolve_server_opt(None) == "sgd"
+    assert "fedalign" in engine.STRATEGIES.names()
+    assert "mean" in aggregation.AGGREGATORS.names()
+
+
+def test_registry_rejects_duplicates_and_stamps_attrs():
+    reg = Registry("widget", aliases={None: "a"})
+
+    @reg.register("a", color="red")
+    def widget_a():
+        return "a"
+
+    assert reg.lookup(None) is widget_a and widget_a.color == "red"
+    with pytest.raises(ValueError, match="duplicate widget 'a'"):
+        reg.register("a")(lambda: None)
+    with pytest.raises(ValueError, match="unknown widget 'b'"):
+        reg.lookup("b")
+    assert reg.names() == ["a"]
+
+
+# ================================================ shared CLI surface
+def _fed_flag_set(parser):
+    return {s for a in parser._actions for s in a.option_strings} \
+        - {"-h", "--help"}
+
+
+def test_launchers_share_the_federation_flag_set():
+    """train and dryrun must expose the SAME federation flags — the whole
+    point of configs.cli is that the two CLIs can no longer drift."""
+    from repro.launch import train
+    saved = os.environ.get("XLA_FLAGS")
+    try:
+        from repro.launch import dryrun
+    finally:
+        if saved is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = saved
+    ref = _fed_flag_set(add_fed_args(argparse.ArgumentParser()))
+    assert {"--candidate-pool", "--pool-weighting", "--aggregator",
+            "--async-depth", "--wire-codec"} <= ref
+    assert ref <= _fed_flag_set(train.build_parser())
+    assert ref <= _fed_flag_set(dryrun.build_parser())
+
+
+def test_fed_from_args_default_is_empty():
+    """A default command line produces NO overrides: the launcher's config
+    stays literally untouched (bit-identical trace guarantee)."""
+    ap = add_fed_args(argparse.ArgumentParser())
+    assert fed_from_args(ap.parse_args([])) == {}
+    kw = fed_from_args(ap.parse_args(
+        ["--candidate-pool", "128", "--pool-weighting", "backlog"]))
+    assert kw == {"candidate_pool": 128, "pool_weighting": "backlog"}
+    fed = FedConfig(**kw)
+    assert fed.candidate_pool == 128 and fed.pool_weighting == "backlog"
