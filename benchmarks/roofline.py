@@ -7,8 +7,12 @@ For every (arch x shape x mesh) record in results/dryrun:
     collective term = coll_bytes_dev / link_bw      (~50 GB/s/link ICI)
 
 FLOPs/bytes/collective-bytes are the SCAN-CORRECTED per-device numbers from
-launch/hlo_analysis.py (XLA's cost_analysis counts while bodies once; we
-multiply by known_trip_count along the call graph). MODEL_FLOPS (useful
+repro.analysis.hlo (XLA's cost_analysis counts while bodies once; we
+multiply by known_trip_count along the call graph). Rows also carry the
+per-program collective CALL COUNTS at trip-count multiplicity
+(``coll_n_by_op``) and the total collective bytes (``coll_bytes_dev``),
+the same numbers fedlint's collective-budget rule gates on. MODEL_FLOPS
+(useful
 compute) is 6*N*D for training, 2*N_active*D for inference, computed from
 the config; the ratio MODEL_FLOPS / (FLOPs_dev * devices) flags remat /
 dispatch / padding waste.
@@ -80,17 +84,19 @@ def analyze_record(path: str, *, use_hlo=True) -> dict | None:
 
     hlo_path = path.replace(".json", ".hlo.txt.gz")
     if use_hlo and os.path.exists(hlo_path):
-        from repro.launch.hlo_analysis import analyze_file
+        from repro.analysis.hlo import analyze_file
         agg = analyze_file(hlo_path)
         flops_dev = agg["flops"]
         bytes_dev = agg["bytes"]
         coll_dev = agg["coll_total"]
         coll_by_op = {k: float(v) for k, v in agg["coll"].items()}
+        coll_n_by_op = {k: float(v) for k, v in agg["coll_n"].items()}
     else:   # fall back to (scan-undercounted) XLA numbers
         flops_dev = rec.get("flops_per_device") or 0
         bytes_dev = rec.get("bytes_per_device") or 0
         coll_by_op = rec.get("collective_bytes_per_device", {})
         coll_dev = sum(coll_by_op.values())
+        coll_n_by_op = {}
 
     t_comp = flops_dev / PEAK_FLOPS
     t_mem = bytes_dev / HBM_BW
@@ -109,6 +115,8 @@ def analyze_record(path: str, *, use_hlo=True) -> dict | None:
         "hlo_flops_total": hlo_total,
         "useful_ratio": (mf / hlo_total) if hlo_total else None,
         "coll_by_op": coll_by_op,
+        "coll_n_by_op": coll_n_by_op,
+        "coll_bytes_dev": coll_dev,
         "peak_bytes_dev": (rec.get("memory") or {}).get("peak_memory_in_bytes"),
         "fits_hbm": ((rec.get("memory") or {}).get("peak_memory_in_bytes", 0)
                      or 0) < 16e9,

@@ -1,0 +1,152 @@
+"""fedlint sweep: statically lint every federation program the repo can emit.
+
+For each combo of selection strategy x engine backend x aggregator x wire
+codec, capture the simulator's jitted multi-round chunk program
+(``fl/simulator.capture_chunk_program`` — the exact ``run_chunk`` the
+training loop jits, donation pattern included), trace and compile it, and
+run every registered lint rule over the jaxpr and the optimized HLO.
+Nothing executes: a full 108-combo sweep is pure trace/compile time and
+runs on the CPU CI shard.
+
+    PYTHONPATH=src python scripts/fedlint.py --out fedlint-report.json
+
+Exit status is the number of combos with violations (0 = clean), so CI
+can gate on it directly. ``--only-strategy/--only-backend/...`` narrow
+the grid while iterating locally; ``--hlo-dir DIR`` skips the sweep and
+instead runs the HLO-only rule subset over dryrun ``--dump-hlo``
+artifacts (pod programs compiled elsewhere), reading each artifact's
+``.lintmeta.json`` sidecar for the config facts rules key on.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import itertools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import lint_hlo_text, lint_program
+from repro.analysis.hlo import read_hlo_file
+from repro.configs.base import FedConfig
+from repro.data.synth import make_synth_federation
+from repro.fl import simulator
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+STRATEGIES = ("fedalign", "all", "priority_only", "topk_align",
+              "grad_sim", "welfare")
+BACKENDS = ("vmap_spatial", "scan_temporal", "scan_async")
+AGGREGATORS = ("mean", "trimmed_mean", "dp")
+CODECS = ("identity", "int8")
+
+# tiny federation: the chunk closes over the client data by design, so
+# the capture must stay far below the 1 MiB no-large-literal threshold
+CLIENTS, N_PRIORITY, SAMPLES = 12, 4, 16
+
+
+def make_fed(strategy, backend, aggregator, codec):
+    """One sweep point's FedConfig, with the documented pairing fixes:
+    scan_async needs a pipeline depth; grad_sim under scan_temporal needs
+    the sketch (full-delta scoring is spatial-only)."""
+    kw = dict(num_clients=CLIENTS, num_priority=N_PRIORITY, rounds=4,
+              local_epochs=1, warmup_frac=0.0, selection=strategy,
+              backend=backend, aggregator=aggregator, wire_codec=codec)
+    if backend == "scan_async":
+        kw.update(async_depth=2, async_mode="ready", min_lag=1)
+    if strategy == "grad_sim" and backend != "vmap_spatial":
+        kw.update(grad_sim_sketch=True)
+    if aggregator == "dp":
+        kw.update(dp_clip=1.0, dp_noise=0.5)
+    return FedConfig(**kw)
+
+
+def lint_combo(loss_fn, init_params, fedn, fed, label):
+    fn, args, donate, meta = simulator.capture_chunk_program(
+        loss_fn, init_params, fed, fedn, n=2)
+    # second lowering differs only in VALUES (rng, start round): the
+    # recompile-stability rule asserts the trace is identical
+    args2 = (args[0], jax.random.PRNGKey(1234), jnp.int32(17))
+    return lint_program(fn, args, fed, args2=args2, donate_argnums=donate,
+                        meta=meta, label=label)
+
+
+def run_sweep(args):
+    init_fn, apply_fn = SMALL_MODELS["synth_logreg"]
+    loss_fn = make_loss_fn(apply_fn)
+    fedn = make_synth_federation(seed=0, n_priority=N_PRIORITY,
+                                 n_nonpriority=CLIENTS - N_PRIORITY,
+                                 samples_per_client=SAMPLES)
+    init_params = init_fn(jax.random.PRNGKey(0))
+
+    strategies = [args.only_strategy] if args.only_strategy else STRATEGIES
+    backends = [args.only_backend] if args.only_backend else BACKENDS
+    aggs = [args.only_aggregator] if args.only_aggregator else AGGREGATORS
+    codecs = [args.only_codec] if args.only_codec else CODECS
+
+    reports = []
+    for strat, bk, agg, codec in itertools.product(
+            strategies, backends, aggs, codecs):
+        label = f"{strat}/{bk}/{agg}/{codec}"
+        fed = make_fed(strat, bk, agg, codec)
+        rep = lint_combo(loss_fn, init_params, fedn, fed, label)
+        reports.append(rep)
+        print(rep.summary(), flush=True)
+    return reports
+
+
+def run_hlo_dir(args):
+    reports = []
+    for path in sorted(glob.glob(os.path.join(args.hlo_dir, "*.hlo.txt*"))):
+        tag = os.path.basename(path).split(".hlo.txt")[0]
+        meta_path = os.path.join(args.hlo_dir, tag + ".lintmeta.json")
+        meta = {}
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                meta = json.load(f)
+        rep = lint_hlo_text(read_hlo_file(path), meta=meta, label=tag)
+        reports.append(rep)
+        print(rep.summary(), flush=True)
+    if not reports:
+        print(f"[fedlint] no *.hlo.txt[.gz] artifacts under {args.hlo_dir}",
+              file=sys.stderr)
+        return reports, 1
+    return reports, 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here")
+    ap.add_argument("--hlo-dir", default=None,
+                    help="lint dumped HLO artifacts (dryrun --dump-hlo DIR) "
+                         "instead of sweeping the simulator grid")
+    ap.add_argument("--only-strategy", default=None, choices=STRATEGIES)
+    ap.add_argument("--only-backend", default=None, choices=BACKENDS)
+    ap.add_argument("--only-aggregator", default=None, choices=AGGREGATORS)
+    ap.add_argument("--only-codec", default=None, choices=CODECS)
+    args = ap.parse_args()
+
+    if args.hlo_dir:
+        reports, err = run_hlo_dir(args)
+        if err:
+            return err
+    else:
+        reports = run_sweep(args)
+
+    bad = [r for r in reports if not r.ok]
+    payload = {"n_programs": len(reports), "n_dirty": len(bad),
+               "reports": [r.to_dict() for r in reports]}
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[fedlint] report -> {args.out}")
+    print(f"[fedlint] {len(reports)} programs linted, "
+          f"{len(bad)} with violations")
+    return len(bad)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

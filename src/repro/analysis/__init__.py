@@ -1,0 +1,23 @@
+"""Static analysis over federation programs ("fedlint").
+
+Two entry points:
+
+* ``lint_program(fn, args, fed=...)`` — trace ``fn`` to a jaxpr, compile
+  it to optimized HLO, and run every registered ``LintRule`` against the
+  program WITHOUT executing a round (scripts/fedlint.py sweeps the
+  strategy x backend x aggregator x codec matrix through this).
+* ``lint_hlo_text(text, fed=...)`` — run the HLO-only rules against an
+  already-dumped artifact (``launch/dryrun.py --dump-hlo``), so fedlint
+  and the roofline share one set of lowered programs.
+
+``analysis.hlo`` is the scan-aware HLO cost/shape parser (relocated from
+``launch/hlo_analysis.py``, which remains as a re-export shim);
+``analysis.jaxpr_walk`` is the recursive jaxpr walker the jaxpr-level
+rules ride on.
+"""
+from repro.analysis.hlo import (analyze_file, analyze_text,  # noqa: F401
+                                parse_hlo, parse_input_output_alias)
+from repro.analysis.lint import (LINT_RULES, LintReport,  # noqa: F401
+                                 LintViolation, lint_hlo_text, lint_program,
+                                 lint_rule)
+from repro.analysis import rules as _rules  # noqa: F401  (registers rules)

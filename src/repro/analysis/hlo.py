@@ -1,0 +1,382 @@
+"""Scan-aware HLO cost and shape analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts every ``while`` body
+ONCE, so any program built from ``lax.scan`` (our layer stacks, local-epoch
+loops, loss chunking) is undercounted by the trip counts. This module
+re-derives roofline quantities directly from the optimized HLO text:
+
+  * builds the computation call graph (entry -> fusions / calls / while
+    bodies) and multiplies while bodies by ``known_trip_count``,
+  * counts dot/convolution FLOPs exactly from operand shapes (two-pass
+    name->shape symbol table per computation: CPU HLO references operands
+    by name only),
+  * estimates HBM traffic as 2x result bytes of non-aliasing top-level ops
+    (each tensor written once, read ~once; fusion internals stay on-chip),
+  * attributes collective bytes AND op counts at true multiplicity,
+  * records every ``constant`` op's materialized size (the fedlint
+    no-large-literal rule's input) and the module's ``input_output_alias``
+    config (the donation-honored rule's input).
+
+All quantities are per-device (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import gzip
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that move no HBM bytes of their own
+_ALIAS_KINDS = {"tuple", "get-tuple-element", "parameter", "constant",
+                "bitcast", "after-all", "iota", "broadcast", "reshape",
+                "while", "conditional", "call"}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_OP = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_KIND = re.compile(r"^(?:\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+# one aliasing entry of the module-level input_output_alias config:
+#   { <output index> }: (<param number>, { <param index> }[, <kind>])
+_ALIAS_ENTRY = re.compile(
+    r"\{\s*([\d,\s]*)\}\s*:\s*\(\s*(\d+)\s*,\s*\{\s*([\d,\s]*)\}"
+    r"(?:\s*,\s*([\w\-]+))?\s*\)")
+
+
+def _dims_of(blob: str):
+    m = _SHAPE.search(blob)
+    return [int(d) for d in m.group(2).split(",") if d] if m else None
+
+
+def _split_operands(blob: str) -> list[str]:
+    """Split an operand list at top-level commas only. Operand entries may
+    carry inline shapes (``f32[32,48]{1,0} %arg``) whose dims/layout contain
+    commas, so a naive ``split(",")`` truncates them."""
+    parts, cur, depth = [], [], 0
+    for ch in blob:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return parts
+
+
+def _operand_dims(operand: str, shapes: dict):
+    """Dims of one operand: inline shape if present, else symbol table."""
+    if "[" in operand:
+        return _dims_of(operand)
+    name = operand.split(" ")[-1].lstrip("%")
+    return shapes[name][1] if name in shapes else None
+
+
+def _result_bytes(blob: str) -> int:
+    """Bytes of the result shape(s) — the text before the op kind."""
+    total = 0
+    for dt, dims in _SHAPE.findall(blob):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Comp:
+    name: str
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll: dict = field(default_factory=dict)        # kind -> bytes
+    coll_n: dict = field(default_factory=dict)      # kind -> op count
+    transcendental: float = 0.0
+    calls: list = field(default_factory=list)       # (callee, multiplier)
+    constants: list = field(default_factory=list)   # (op name, bytes, shape blob)
+    coll_ops: list = field(default_factory=list)    # per-op collective records
+
+
+def _split_result_op(rhs: str):
+    """rhs = '<result shapes> kind(<operands>), attrs' -> (result_blob, kind, rest)."""
+    m = _KIND.match(rhs)
+    if not m:
+        return rhs, "", ""
+    kind = m.group(1)
+    idx = rhs.find(kind + "(")
+    return rhs[:idx], kind, rhs[idx:]
+
+
+def parse_input_output_alias(text: str) -> list[dict]:
+    """The module's ``input_output_alias`` config as a list of entries
+    ``{"output_index": tuple, "param_number": int, "param_index": tuple,
+    "kind": str}``. XLA emits it in the ``HloModule`` header when buffer
+    donation survived compilation; a donated-but-dropped buffer simply has
+    no entry — which is exactly what the donation-honored rule checks."""
+    start = text.find("input_output_alias={")
+    if start < 0:
+        return []
+    # the config nests braces ({ {0}: (0, {}) }): take the balanced span
+    i = start + len("input_output_alias=")
+    depth, j = 0, i
+    for j in range(i, min(len(text), i + 100_000)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    blob = text[i + 1:j]
+    entries = []
+    for out_idx, param, param_idx, kind in _ALIAS_ENTRY.findall(blob):
+        entries.append({
+            "output_index": tuple(int(i) for i in out_idx.split(",") if i.strip()),
+            "param_number": int(param),
+            "param_index": tuple(int(i) for i in param_idx.split(",") if i.strip()),
+            "kind": kind or "may-alias",
+        })
+    return entries
+
+
+def _groups_blob(rest: str):
+    """The raw ``replica_groups=...`` attribute of one collective op, or
+    None if absent. Handles both the explicit brace form
+    (``{{0,1},{2,3}}``, ``{}``) and the iota form
+    (``[32,16]<=[16,16,2]T(2,0,1)``) — returned verbatim;
+    ``replica_group_members`` decides which are decodable."""
+    key = "replica_groups="
+    i = rest.find(key)
+    if i < 0:
+        return None
+    j = i + len(key)
+    if j >= len(rest):
+        return None
+    if rest[j] == "{":
+        depth, k = 0, j
+        while k < len(rest):
+            if rest[k] == "{":
+                depth += 1
+            elif rest[k] == "}":
+                depth -= 1
+                if depth == 0:
+                    return rest[j:k + 1]
+            k += 1
+        return rest[j:]
+    # iota form: runs to the first comma at bracket depth 0
+    depth, k = 0, j
+    while k < len(rest):
+        ch = rest[k]
+        if ch in "[(":
+            depth += 1
+        elif ch in "])":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            break
+        k += 1
+    return rest[j:k]
+
+
+def replica_group_members(blob) -> "list[list[int]] | None":
+    """Decode an explicit replica_groups blob into member lists.
+    ``{}`` (all devices, one group) decodes to ``[]``; the iota form (and
+    anything else undecodable) returns None — callers must treat those
+    conservatively."""
+    if blob is None:
+        return None
+    blob = blob.strip()
+    if not blob.startswith("{"):
+        return None
+    inner = blob[1:-1].strip()
+    if not inner:
+        return []
+    groups = re.findall(r"\{([\d,\s]*)\}", inner)
+    if not groups:
+        return None
+    return [[int(d) for d in g.split(",") if d.strip()] for g in groups]
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    comps: dict[str, Comp] = {}
+    entry = None
+    # --- split into computation blocks --------------------------------------
+    blocks: list[tuple[str, bool, list[str]]] = []
+    cur_name, cur_lines, cur_entry = None, [], False
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            if cur_name is not None:
+                blocks.append((cur_name, cur_entry, cur_lines))
+            cur_name, cur_lines = hdr.group(1), []
+            cur_entry = line.startswith("ENTRY")
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name is not None:
+        blocks.append((cur_name, cur_entry, cur_lines))
+
+    for name, is_entry, lines in blocks:
+        comp = Comp(name)
+        comps[name] = comp
+        if is_entry:
+            entry = name
+        shapes: dict[str, list] = {}
+        parsed = []
+        for line in lines:
+            op = _OP.match(line)
+            if not op:
+                continue
+            oname, rhs = op.group(1), op.group(2)
+            result_blob, kind, rest = _split_result_op(rhs)
+            dims = _dims_of(result_blob)
+            if dims is not None:
+                shapes[oname] = (result_blob, dims)
+            parsed.append((oname, rhs, result_blob, kind, rest))
+
+        for oname, rhs, result_blob, kind, rest in parsed:
+            if kind == "dot":
+                res_dims = _dims_of(result_blob) or []
+                opm = _OPERANDS.search(rest)
+                lhs_dims = None
+                if opm:
+                    operands = _split_operands(opm.group(1))
+                    if operands:
+                        lhs_dims = _operand_dims(operands[0], shapes)
+                cm = _LHS_CONTRACT.search(rest)
+                contract = [int(i) for i in cm.group(1).split(",") if i] if cm else []
+                if lhs_dims is not None:
+                    k = 1
+                    for i in contract:
+                        if i < len(lhs_dims):
+                            k *= lhs_dims[i]
+                    out = 1
+                    for d in res_dims:
+                        out *= d
+                    comp.dot_flops += 2.0 * out * k
+            elif kind == "convolution":
+                res_dims = _dims_of(result_blob) or []
+                opm = _OPERANDS.search(rest)
+                kern_dims = None
+                if opm:
+                    parts = _split_operands(opm.group(1))
+                    if len(parts) >= 2:
+                        kern_dims = _operand_dims(parts[1], shapes)
+                if kern_dims and res_dims:
+                    out = 1
+                    for d in res_dims:
+                        out *= d
+                    kf = 1
+                    for d in kern_dims:
+                        kf *= d
+                    comp.dot_flops += 2.0 * out * max(kf // max(res_dims[-1], 1), 1)
+            elif kind in ("exponential", "tanh", "log", "rsqrt", "power", "logistic"):
+                dims = _dims_of(result_blob)
+                if dims:
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    comp.transcendental += n
+            elif kind == "constant":
+                comp.constants.append(
+                    (oname, _result_bytes(result_blob), result_blob.strip()))
+
+            if kind in COLLECTIVES:
+                comp.coll[kind] = comp.coll.get(kind, 0) + _result_bytes(result_blob)
+                comp.coll_n[kind] = comp.coll_n.get(kind, 0) + 1
+                comp.coll_ops.append({"kind": kind,
+                                      "bytes": _result_bytes(result_blob),
+                                      "groups": _groups_blob(rest), "n": 1.0})
+
+            if kind not in _ALIAS_KINDS:
+                comp.bytes_accessed += 2.0 * _result_bytes(result_blob)
+
+            called = _CALLED.search(rest)
+            if called:
+                mult = 1.0
+                if kind == "while":
+                    tm = _TRIP.search(rest)
+                    mult = float(tm.group(1)) if tm else 1.0
+                comp.calls.append((called.group(1), mult))
+                condm = _COND.search(rest)
+                if condm:
+                    comp.calls.append((condm.group(1), 1.0))
+    return comps, entry
+
+
+def aggregate(comps: dict, entry: str) -> dict:
+    memo: dict[str, dict] = {}
+
+    def visit(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return {"flops": 0.0, "bytes": 0.0, "coll": {}, "coll_n": {},
+                    "coll_ops": [], "transc": 0.0}
+        on_chip = ("fused" in name) or name.startswith("region")
+        total = {"flops": c.dot_flops,
+                 "bytes": 0.0 if on_chip else c.bytes_accessed,
+                 "coll": dict(c.coll), "coll_n": dict(c.coll_n),
+                 "coll_ops": [dict(op) for op in c.coll_ops],
+                 "transc": c.transcendental}
+        memo[name] = total      # (cycles impossible in HLO)
+        for callee, mult in c.calls:
+            sub = visit(callee)
+            total["flops"] += mult * sub["flops"]
+            total["transc"] += mult * sub["transc"]
+            total["bytes"] += mult * sub["bytes"]
+            for k, v in sub["coll"].items():
+                total["coll"][k] = total["coll"].get(k, 0) + mult * v
+            for k, v in sub["coll_n"].items():
+                total["coll_n"][k] = total["coll_n"].get(k, 0) + mult * v
+            total["coll_ops"].extend(
+                {**op, "n": mult * op["n"]} for op in sub["coll_ops"])
+        return total
+
+    return visit(entry)
+
+
+def hlo_constants(comps: dict) -> list[tuple[str, str, int]]:
+    """Every materialized ``constant`` op across the module:
+    (computation name, op name, bytes). Constants are materialized once
+    regardless of while-body trip counts, so no multiplicity applies."""
+    out = []
+    for cname, comp in comps.items():
+        for oname, nbytes, _blob in comp.constants:
+            out.append((cname, oname, nbytes))
+    return out
+
+
+def analyze_text(text: str) -> dict:
+    comps, entry = parse_hlo(text)
+    agg = aggregate(comps, entry)
+    agg["coll_total"] = float(sum(agg["coll"].values()))
+    return agg
+
+
+def analyze_file(path: str) -> dict:
+    op = gzip.open if path.endswith(".gz") else open
+    with op(path, "rt") as f:
+        return analyze_text(f.read())
+
+
+def read_hlo_file(path: str) -> str:
+    """Raw HLO text of a dryrun artifact (gzip-aware) — the lint entry
+    point for ``lint_hlo_text`` over ``--dump-hlo`` output."""
+    op = gzip.open if path.endswith(".gz") else open
+    with op(path, "rt") as f:
+        return f.read()

@@ -1,0 +1,95 @@
+"""Recursive jaxpr traversal for the jaxpr-level lint rules.
+
+``jax.make_jaxpr`` gives a ``ClosedJaxpr`` whose equations nest more
+jaxprs inside their params (``pjit``'s ``jaxpr``, ``scan``'s ``jaxpr``,
+``cond``'s ``branches``, ``custom_jvp``'s ``call_jaxpr``, ...). The rules
+need a flat view of every equation at any depth, every closure-captured
+constant, and a lowering-stable fingerprint; this module provides exactly
+those three walks and nothing jax-version-specific — sub-jaxprs are
+discovered structurally (anything in ``eqn.params`` with ``.eqns``),
+never by primitive name.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+
+def _sub_jaxprs(value):
+    """Yield every (Closed)Jaxpr nested in one eqn.params value."""
+    items = value if isinstance(value, (list, tuple)) else [value]
+    for item in items:
+        inner = getattr(item, "jaxpr", None)   # ClosedJaxpr -> Jaxpr
+        if inner is not None and hasattr(inner, "eqns"):
+            yield item                          # keep the Closed wrapper
+        elif hasattr(item, "eqns"):
+            yield item
+
+
+def iter_eqns(jaxpr):
+    """Every equation of ``jaxpr`` (a Jaxpr or ClosedJaxpr), recursing into
+    sub-jaxprs carried in equation params (scan bodies, cond branches,
+    pjit calls) — depth-first, parents before children."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        yield eqn
+        for value in eqn.params.values():
+            for sub in _sub_jaxprs(value):
+                yield from iter_eqns(sub)
+
+
+def closure_consts(closed_jaxpr) -> list[tuple[str, int]]:
+    """Closure-captured constants of the program, at any nesting depth:
+    one ``(dtype-and-shape label, nbytes)`` pair per const. These are the arrays a traced function
+    closed over instead of taking as arguments — the exact class that XLA
+    embeds as literal constants (the PR 9 federation-tensor bug)."""
+    out = []
+    seen = set()
+
+    def visit(cj):
+        if id(cj) in seen:
+            return
+        seen.add(id(cj))
+        for const in getattr(cj, "consts", ()):
+            shape = getattr(const, "shape", None)
+            dtype = getattr(const, "dtype", None)
+            if shape is None or dtype is None:
+                continue
+            nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+            out.append((f"{np.dtype(dtype).name}{list(shape)}", int(nbytes)))
+        for eqn in iter_eqns(cj):
+            for value in eqn.params.values():
+                for sub in _sub_jaxprs(value):
+                    if hasattr(sub, "consts"):
+                        visit(sub)
+
+    visit(closed_jaxpr)
+    return out
+
+
+def eqn_out_avals(eqn):
+    """Shaped output avals of one equation (skips tokens/abstract units)."""
+    for var in eqn.outvars:
+        aval = getattr(var, "aval", None)
+        if aval is not None and hasattr(aval, "shape") and hasattr(aval, "dtype"):
+            yield aval
+
+
+def jaxpr_fingerprint(closed_jaxpr) -> str:
+    """Content hash of the program SHAPE: the printed jaxpr (whose variable
+    naming is deterministic per trace) plus the avals — not the values —
+    of its closure constants. Two lowerings of the same function at
+    different ``round_idx``/state VALUES hash equal iff nothing about the
+    values leaked into the trace as a literal, weak type, or shape — the
+    recompile-stability invariant."""
+    inner = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    h = hashlib.sha256(str(inner).encode())
+    for desc, nbytes in closure_consts(closed_jaxpr):
+        h.update(f"|const {desc} {nbytes}".encode())
+    # the printed jaxpr elides weak_type, but jit's cache does not: a
+    # python-scalar round_idx (weak i32) and a device one (strong i32)
+    # recompile against each other — include the full in-aval reprs
+    for aval in getattr(closed_jaxpr, "in_avals", ()):
+        h.update(f"|in {aval}".encode())
+    return h.hexdigest()

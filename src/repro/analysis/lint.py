@@ -1,0 +1,220 @@
+"""fedlint core: the LintRule registry, context, report, and entry points.
+
+A lint rule is a function ``rule(ctx) -> list[LintViolation]`` registered
+with ``@lint_rule("name")`` on the generic ``utils.Registry`` (the same
+machinery behind the strategy/aggregator/codec tables). Rules are STATIC:
+they inspect the jaxpr and the optimized HLO of a federation program —
+nothing is ever executed.
+
+    from repro.analysis import lint_program
+    report = lint_program(fn, args, fed=fed, donate_argnums=(0, 1),
+                          args2=args_at_other_round, meta={"m_total": M})
+    assert report.ok, report.summary()
+
+``lint_program`` traces/compiles ``fn`` itself; ``lint_hlo_text`` runs
+the HLO-only subset of rules over an already-dumped artifact
+(``launch/dryrun.py --dump-hlo``). Rules declare what they need
+(``needs_hlo`` / ``needs_second`` / ``needs_fed``) and are skipped — and
+reported as skipped, never silently dropped — when the invocation cannot
+provide it. ``suppress=("rule-name",)`` disables a rule for a documented
+exception; suppressions are recorded on the report.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.analysis import hlo as hlo_mod
+from repro.utils import Registry
+
+LINT_RULES = Registry("lint rule")
+
+
+def lint_rule(name: str, *, needs_jaxpr: bool = False, needs_hlo: bool = False,
+              needs_second: bool = False, needs_fed: bool = False):
+    """Decorator: register a lint rule under ``name``.
+
+    ``needs_jaxpr`` — the rule walks the traced jaxpr; ``needs_hlo`` —
+    the rule reads the compiled HLO (alias config, constants,
+    collectives); ``needs_second`` — the rule compares two lowerings
+    (recompile-stability); ``needs_fed`` — the rule is config-conditional
+    and needs the FedConfig to decide what "clean" means. A rule whose
+    inputs are unavailable is reported in ``LintReport.skipped`` instead
+    of running on partial data; a rule declaring neither jaxpr nor HLO
+    runs on whichever the invocation has."""
+    return LINT_RULES.register(name, rule_name=name, needs_jaxpr=needs_jaxpr,
+                               needs_hlo=needs_hlo, needs_second=needs_second,
+                               needs_fed=needs_fed)
+
+
+@dataclass
+class LintViolation:
+    rule: str
+    message: str
+    detail: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "message": self.message,
+                "detail": {k: v for k, v in self.detail.items()}}
+
+
+@dataclass
+class LintReport:
+    label: str
+    violations: list
+    checked: list                      # rule names that actually ran
+    skipped: dict = field(default_factory=dict)   # name -> why not run
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> str:
+        if self.ok:
+            return (f"[fedlint] {self.label}: clean "
+                    f"({len(self.checked)} rules)")
+        lines = [f"[fedlint] {self.label}: "
+                 f"{len(self.violations)} violation(s)"]
+        for v in self.violations:
+            lines.append(f"  {v.rule}: {v.message}")
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        return {"label": self.label, "ok": self.ok,
+                "checked": list(self.checked), "skipped": dict(self.skipped),
+                "violations": [v.to_dict() for v in self.violations]}
+
+
+@dataclass
+class LintContext:
+    """Everything a rule may look at. HLO derivatives (parsed computations,
+    alias config) are computed lazily and memoized — most rules touch one
+    of them, no invocation needs all."""
+    fed: Any = None
+    jaxpr: Any = None                  # ClosedJaxpr of the program
+    jaxpr2: Any = None                 # second lowering (other round/state)
+    hlo_text: Optional[str] = None     # optimized HLO of the compiled program
+    donated: list = field(default_factory=list)   # donated entry params
+    meta: dict = field(default_factory=dict)
+    _parsed: Any = None
+    _aliases: Any = None
+
+    @property
+    def comps(self):
+        if self._parsed is None and self.hlo_text is not None:
+            self._parsed = hlo_mod.parse_hlo(self.hlo_text)
+        return self._parsed[0] if self._parsed else None
+
+    @property
+    def entry(self):
+        if self._parsed is None and self.hlo_text is not None:
+            self._parsed = hlo_mod.parse_hlo(self.hlo_text)
+        return self._parsed[1] if self._parsed else None
+
+    @property
+    def alias_entries(self):
+        if self._aliases is None and self.hlo_text is not None:
+            self._aliases = hlo_mod.parse_input_output_alias(self.hlo_text)
+        return self._aliases or []
+
+
+def _flat_params(args, donate_argnums):
+    """Entry-parameter table of a jitted call: jax flattens the positional
+    args in order, one flat leaf per XLA parameter (``lint_program``
+    compiles with ``keep_unused=True`` so numbering is exactly the flat
+    index). Returns the donated subset: (flat index, path, nbytes)."""
+    donated, flat_idx = [], 0
+    donate = set(donate_argnums)
+    for i, arg in enumerate(args):
+        leaves_with_path = jax.tree_util.tree_flatten_with_path(arg)[0]
+        for path, leaf in leaves_with_path:
+            if i in donate:
+                shape = getattr(leaf, "shape", ())
+                dtype = getattr(leaf, "dtype", None)
+                nbytes = (int(np.prod(shape, dtype=np.int64))
+                          * np.dtype(dtype).itemsize) if dtype else 0
+                donated.append(
+                    {"param": flat_idx,
+                     "path": f"args[{i}]" + jax.tree_util.keystr(path),
+                     "nbytes": int(nbytes)})
+            flat_idx += 1
+    return donated
+
+
+def _select_rules(rules, suppress):
+    names = list(rules) if rules is not None else LINT_RULES.names()
+    return [n for n in names if n not in set(suppress)], \
+           [n for n in names if n in set(suppress)]
+
+
+def _run_rules(ctx, names, *, have_hlo, have_second):
+    violations, checked, skipped = [], [], {}
+    for name in names:
+        rule = LINT_RULES.lookup(name)
+        if rule.needs_jaxpr and ctx.jaxpr is None:
+            skipped[name] = "jaxpr-level rule, HLO-only invocation"
+            continue
+        if rule.needs_hlo and not have_hlo:
+            skipped[name] = "no compiled HLO for this invocation"
+            continue
+        if rule.needs_second and not have_second:
+            skipped[name] = "no second lowering (pass args2=)"
+            continue
+        if rule.needs_fed and ctx.fed is None:
+            skipped[name] = "config-conditional rule needs fed="
+            continue
+        violations.extend(rule(ctx))
+        checked.append(name)
+    return violations, checked, skipped
+
+
+def lint_program(fn, args, fed=None, *, args2=None, donate_argnums=(),
+                 rules=None, suppress=(), meta=None, compile_hlo=True,
+                 label="program") -> LintReport:
+    """Run the registered lint rules over one federation program.
+
+    ``fn(*args)`` is traced with ``jax.make_jaxpr`` (args may be real
+    arrays or ShapeDtypeStructs — nothing executes) and, when
+    ``compile_hlo``, compiled with ``jax.jit(fn, donate_argnums=...,
+    keep_unused=True)`` to optimized HLO. ``args2`` triggers a second
+    trace for the recompile-stability rule; it must differ from ``args``
+    only in VALUES (round index, state contents), never shapes.
+    ``meta`` carries program facts rules key on — ``m_total`` (wire
+    width), ``pod`` (cross-device program), per-rule thresholds — and is
+    merged into the violation details."""
+    meta = dict(meta or {})
+    closed = jax.make_jaxpr(fn)(*args)
+    closed2 = jax.make_jaxpr(fn)(*args2) if args2 is not None else None
+    hlo_text = None
+    if compile_hlo:
+        jitted = jax.jit(fn, donate_argnums=donate_argnums, keep_unused=True)
+        hlo_text = jitted.lower(*args).compile().as_text()
+    ctx = LintContext(fed=fed, jaxpr=closed, jaxpr2=closed2,
+                      hlo_text=hlo_text,
+                      donated=_flat_params(args, donate_argnums), meta=meta)
+    names, suppressed = _select_rules(rules, suppress)
+    violations, checked, skipped = _run_rules(
+        ctx, names, have_hlo=hlo_text is not None,
+        have_second=closed2 is not None)
+    for name in suppressed:
+        skipped[name] = "suppressed"
+    return LintReport(label=label, violations=violations, checked=checked,
+                      skipped=skipped)
+
+
+def lint_hlo_text(text, fed=None, *, rules=None, suppress=(), meta=None,
+                  label="hlo") -> LintReport:
+    """HLO-only lint pass over an already-compiled module (a dryrun
+    ``--dump-hlo`` artifact): runs the subset of rules that read the HLO
+    alone, skipping jaxpr-level ones."""
+    ctx = LintContext(fed=fed, hlo_text=text, meta=dict(meta or {}))
+    names, suppressed = _select_rules(rules, suppress)
+    violations, checked, skipped = _run_rules(ctx, names, have_hlo=True,
+                                              have_second=False)
+    for name in suppressed:
+        skipped[name] = "suppressed"
+    return LintReport(label=label, violations=violations, checked=checked,
+                      skipped=skipped)

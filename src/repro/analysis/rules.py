@@ -1,0 +1,270 @@
+"""The core fedlint rules. Each targets a bug class this repo has hit (or
+the ROADMAP promises never to hit) at trace level, invisible to pytest:
+
+  no-large-literal     — a closure-captured federation-sized tensor
+                         embedded as an XLA literal (PR 9: stalled
+                         compilation at C=1e5)
+  donation-honored     — a donated FederationState leaf silently dropped
+                         from input_output_alias (doubles peak memory)
+  dtype-discipline     — an f32 upcast sneaking into the bf16 / coded
+                         [C, M_total] wire buffer
+  collective-budget    — a surprise all-gather (or extra all-reduce) in
+                         the pod round's mean path
+  recompile-stability  — a round_idx / state value baked into the trace
+                         (silent per-round recompiles)
+
+Thresholds live in ``meta`` with the defaults below; allowances for
+DOCUMENTED exceptions (grad_sim's f32 scoring flatten, the coded wire's
+f32 pre-encode buffer, order-statistic aggregators' client-axis gather)
+are derived from the FedConfig, never hardcoded per call site.
+"""
+from __future__ import annotations
+
+from repro.analysis.hlo import hlo_constants
+from repro.analysis.jaxpr_walk import (closure_consts, eqn_out_avals,
+                                       iter_eqns, jaxpr_fingerprint)
+from repro.analysis.lint import LintViolation, lint_rule
+
+# any single literal above this is a captured-tensor smell, not a table
+DEFAULT_LITERAL_BYTES = 1 << 20          # 1 MiB
+# donated buffers smaller than this may legally lose aliasing (scalars,
+# tiny counters: XLA packs/reallocates them freely and nothing is at stake)
+DEFAULT_MIN_DONATION_BYTES = 1 << 10     # 1 KiB
+# collectives at or below this are control-plane scalars (loss sums,
+# inclusion mass), not delta traffic — exempt from the budget
+DEFAULT_SMALL_COLLECTIVE_BYTES = 1 << 12  # 4 KiB
+
+
+def _resolved(fed, what):
+    if what == "codec":
+        from repro.core.aggregation import resolve_wire_codec
+        return resolve_wire_codec(getattr(fed, "wire_codec", "identity"))
+    from repro.core.aggregation import resolve_aggregator
+    return resolve_aggregator(getattr(fed, "aggregator", "mean"))
+
+
+@lint_rule("no-large-literal")
+def no_large_literal(ctx):
+    """No constant bigger than ``meta['literal_threshold']`` bytes may be
+    materialized inside the program — neither as a closure-captured jaxpr
+    const nor as an HLO ``constant`` op (XLA constant-folds captures into
+    literals: the PR 9 class). Round-invariant inputs must enter as
+    arguments, where they are device buffers, not program text."""
+    thresh = int(ctx.meta.get("literal_threshold", DEFAULT_LITERAL_BYTES))
+    out = []
+    if ctx.jaxpr is not None:
+        for desc, nbytes in closure_consts(ctx.jaxpr):
+            if nbytes > thresh:
+                out.append(LintViolation(
+                    "no-large-literal",
+                    f"closure-captured constant {desc} is {nbytes} bytes "
+                    f"(> {thresh}): pass it as a traced argument instead",
+                    {"where": "jaxpr const", "bytes": nbytes}))
+    if ctx.hlo_text is not None:
+        for cname, oname, nbytes in hlo_constants(ctx.comps):
+            if nbytes > thresh:
+                out.append(LintViolation(
+                    "no-large-literal",
+                    f"HLO constant {oname} in computation {cname} is "
+                    f"{nbytes} bytes (> {thresh}): a tensor was embedded "
+                    "as program text (captured closure or constant-folded "
+                    "input)",
+                    {"where": f"{cname}/{oname}", "bytes": nbytes}))
+    return out
+
+
+@lint_rule("donation-honored", needs_hlo=True)
+def donation_honored(ctx):
+    """Every donated entry buffer above ``meta['min_donation_bytes']``
+    must appear in the module's ``input_output_alias`` config. XLA drops
+    an alias silently whenever the output can't reuse the buffer (dtype /
+    size change on the carry), which doubles peak memory on exactly the
+    state the simulator promised to update in place."""
+    if not ctx.donated:
+        return []
+    min_bytes = int(ctx.meta.get("min_donation_bytes",
+                                 DEFAULT_MIN_DONATION_BYTES))
+    aliased = {e["param_number"] for e in ctx.alias_entries}
+    out = []
+    for p in ctx.donated:
+        if p["nbytes"] >= min_bytes and p["param"] not in aliased:
+            out.append(LintViolation(
+                "donation-honored",
+                f"donated buffer {p['path']} ({p['nbytes']} bytes, entry "
+                f"parameter {p['param']}) has no input_output_alias entry: "
+                "the donation was dropped (shape/dtype of the returned "
+                "carry no longer matches the input)",
+                {"param": p["param"], "path": p["path"],
+                 "bytes": p["nbytes"]}))
+    return out
+
+
+@lint_rule("dtype-discipline", needs_jaxpr=True, needs_fed=True)
+def dtype_discipline(ctx):
+    """The [C, M_total] wire buffer must be built at the configured wire
+    dtype. ``flatten_stacked`` concatenates the reshaped leaves along
+    axis 1; under ``agg_dtype=bfloat16`` (identity codec) any axis-1 f32
+    concatenate of wire width is an upcast that doubles the aggregation
+    collective. Allowances, derived from the config: grad_sim without the
+    sketch flattens deltas at f32 for its cosine scoring (one buffer);
+    non-identity codecs build one f32 pre-encode buffer by design (plus
+    one for the error-feedback residual) — for those the rule instead
+    checks the ENCODED wire exists (int8: an int8 buffer of wire width).
+    Axis-0 concatenates are kernel-internal f32 accumulation (the
+    documented sort-path padding) and are exempt."""
+    fed = ctx.fed
+    m_total = ctx.meta.get("m_total")
+    if not m_total:
+        return []        # wire width unknown: nothing to anchor the walk
+    m_total = int(m_total)
+    codec = _resolved(fed, "codec")
+
+    f32_wire_concats = []
+    int8_wire_outputs = 0
+    for eqn in iter_eqns(ctx.jaxpr):
+        for aval in eqn_out_avals(eqn):
+            if len(aval.shape) != 2 or aval.shape[1] != m_total:
+                continue
+            if (eqn.primitive.name == "concatenate"
+                    and eqn.params.get("dimension") == 1
+                    and str(aval.dtype) == "float32"):
+                f32_wire_concats.append(tuple(aval.shape))
+            if str(aval.dtype) == "int8":
+                int8_wire_outputs += 1
+
+    out = []
+    if codec == "identity":
+        if str(getattr(fed, "agg_dtype", "float32")) != "bfloat16":
+            return []     # f32 wire is the configured wire: nothing to check
+        allowance = int(fed.selection == "grad_sim"
+                        and not fed.grad_sim_sketch)
+        if len(f32_wire_concats) > allowance:
+            out.append(LintViolation(
+                "dtype-discipline",
+                f"{len(f32_wire_concats)} f32 axis-1 concatenate(s) of wire "
+                f"width M_total={m_total} under agg_dtype=bfloat16 "
+                f"(allowance {allowance}): an upcast sneaked into the bf16 "
+                "wire buffer",
+                {"shapes": [list(s) for s in f32_wire_concats],
+                 "allowance": allowance}))
+    elif codec == "int8":
+        if int8_wire_outputs == 0:
+            out.append(LintViolation(
+                "dtype-discipline",
+                f"wire_codec=int8 but no int8 buffer of wire width "
+                f"M_total={m_total} exists in the program: the encode was "
+                "dropped and the wire travels uncompressed",
+                {"m_total": m_total}))
+    # topk/sketch travel at non-M_total widths; their rate knobs are
+    # validated by check_codec_config and not re-checked here
+    return out
+
+
+def _is_cross_pod(op, devices_per_pod):
+    """Does one collective op's replica grouping straddle a pod boundary?
+
+    With no ``devices_per_pod`` every collective counts (single-program
+    callers, handcrafted fixtures). With it, explicit replica groups are
+    decoded and checked member-by-member; an empty group list means "all
+    devices in one group" (cross-pod iff the module spans several pods);
+    the iota form is undecodable from text and is treated as intra-pod
+    sharding traffic — per-layer TP/FSDP collectives, which the budget
+    deliberately does not police."""
+    from repro.analysis.hlo import replica_group_members
+    if devices_per_pod is None:
+        return True
+    members = replica_group_members(op.get("groups"))
+    if members is None:
+        return False
+    dpp = int(devices_per_pod)
+    if not members:                       # {}: one group of every device
+        return op.get("all_devices_cross", True)
+    return any(len({d // dpp for d in g}) > 1 for g in members)
+
+
+@lint_rule("collective-budget", needs_hlo=True)
+def collective_budget(ctx):
+    """Pod programs (``meta['pod']``) must keep the promised collective
+    schedule: the mean-path round performs exactly ONE CROSS-POD
+    all-reduce of delta size per round and no cross-pod all-gathers.
+    Intra-pod sharding collectives (per-layer TP reduce, FSDP param
+    gathers) are the pod round's normal traffic and never count —
+    cross-pod is decided per op from its replica groups against
+    ``meta['devices_per_pod']`` (absent: every collective counts).
+    Order-statistic aggregators (trimmed_mean/median) and non-identity
+    codecs gather the client axis before reducing — the documented
+    allowance. Collectives at or below ``meta['small_collective_bytes']``
+    are control-plane scalars (loss sums, inclusion mass) and never
+    count. Counts are taken at true trip-count multiplicity, divided by
+    ``meta['rounds']`` for scanned multi-round programs. Non-pod
+    (single-device) programs must contain no collectives at all."""
+    from repro.analysis.hlo import aggregate
+    agg = aggregate(ctx.comps, ctx.entry)
+    small = int(ctx.meta.get("small_collective_bytes",
+                             DEFAULT_SMALL_COLLECTIVE_BYTES))
+    rounds = max(int(ctx.meta.get("rounds", 1)), 1)
+    dpp = ctx.meta.get("devices_per_pod")
+    multi_pod = (ctx.meta.get("devices", 0) or 0) > (dpp or 0)
+    # per-op payload decides "control-plane scalar" vs delta traffic
+    big = [op for op in agg["coll_ops"] if op["bytes"] > small]
+
+    out = []
+    if not ctx.meta.get("pod"):
+        if big:
+            kinds = sorted({op["kind"] for op in big})
+            out.append(LintViolation(
+                "collective-budget",
+                f"single-device program contains cross-device collectives: "
+                f"{kinds}",
+                {"coll_n": dict(agg['coll_n'])}))
+        return out
+
+    cross = [dict(op, all_devices_cross=multi_pod) if dpp else op
+             for op in big]
+    cross = [op for op in cross if _is_cross_pod(op, dpp)]
+    n_by_kind = {}
+    for op in cross:
+        n_by_kind[op["kind"]] = n_by_kind.get(op["kind"], 0) + op["n"] / rounds
+
+    fed = ctx.fed
+    gather_ok = ctx.meta.get("allow_gather")
+    if gather_ok is None and fed is not None:
+        gather_ok = (_resolved(fed, "aggregator")
+                     in ("trimmed_mean", "median")
+                     or _resolved(fed, "codec") != "identity")
+    max_ar = float(ctx.meta.get("max_all_reduce", 1))
+    n_ar = n_by_kind.get("all-reduce", 0)
+    if n_ar > max_ar:
+        out.append(LintViolation(
+            "collective-budget",
+            f"{n_ar:g} delta-sized cross-pod all-reduce(s) per round on "
+            f"the mean path (budget {max_ar:g}): the round pays extra "
+            "cross-pod synchronization",
+            {"cross_pod_n": dict(n_by_kind), "rounds": rounds}))
+    n_ag = n_by_kind.get("all-gather", 0)
+    if n_ag > 0 and not gather_ok:
+        out.append(LintViolation(
+            "collective-budget",
+            f"{n_ag:g} delta-sized cross-pod all-gather(s) per round: the "
+            "mean path promises none (only order-statistic aggregators "
+            "and coded wires may gather the client axis)",
+            {"cross_pod_n": dict(n_by_kind), "rounds": rounds}))
+    return out
+
+
+@lint_rule("recompile-stability", needs_jaxpr=True, needs_second=True)
+def recompile_stability(ctx):
+    """The round traced at two different ``round_idx``/state VALUES must
+    produce identical jaxprs. A mismatch means a value leaked into the
+    trace as a literal, weak type, or shape — and the jit cache will
+    silently recompile every round at run time."""
+    h1 = jaxpr_fingerprint(ctx.jaxpr)
+    h2 = jaxpr_fingerprint(ctx.jaxpr2)
+    if h1 == h2:
+        return []
+    return [LintViolation(
+        "recompile-stability",
+        f"program shape depends on argument values: jaxpr fingerprints "
+        f"{h1[:12]} != {h2[:12]} for two lowerings that differ only in "
+        "round_idx/state values — a value was baked into the trace",
+        {"fingerprint_a": h1, "fingerprint_b": h2})]

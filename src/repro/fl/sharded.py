@@ -625,6 +625,33 @@ def make_round_step(model, fed, num_clients: int, *, fsdp: bool):
             else make_spatial_round(model, fed, num_clients))
 
 
+def capture_round_program(model, fed, num_clients: int, batch, *,
+                          fsdp: bool = False, round_idx: int = 0):
+    """Package the pod round-step for static analysis without executing
+    (or even materializing) anything:
+
+        step, args, meta = sharded.capture_round_program(model, fed, C, batch)
+        report = repro.analysis.lint_program(step, args, fed, meta=meta)
+
+    ``batch`` may be real arrays or ShapeDtypeStructs (dryrun-style); the
+    FederationState is built abstractly via ``jax.eval_shape``. ``meta``
+    carries the wire width and ``pod=True`` so the collective-budget rule
+    holds the round to its single-all-reduce promise (mean path) or the
+    documented client-axis-gather allowance (order statistics / coded
+    wires)."""
+    from repro.utils import param_count
+    step = make_round_step(model, fed, num_clients, fsdp=fsdp)
+    state = jax.eval_shape(lambda: engine.init_state(
+        model.init(jax.random.PRNGKey(0)), fed, num_clients))
+    meta = {"m_total": param_count(state.params),
+            "num_clients": num_clients, "rounds": 1, "pod": True}
+
+    def fn(state, batch):
+        return step(state, batch, round_idx=round_idx)
+
+    return fn, (state, batch), meta
+
+
 # ----------------------------------------------------------------- serving
 def make_prefill_step(model):
     def prefill_step(params, batch):

@@ -181,6 +181,63 @@ def load_federation_state(path: str, like_state, fed=None):
     return tree["state"], tree["rng"], step
 
 
+def _chunk_body(round_fn, data, pm, w, state, rng, r0, n):
+    """n rounds as one scanned program; stats leaves come back [n, ...].
+    The whole FederationState is the scan carry — params, optimizer
+    moments, backlog, and EMAs update in place. ONE implementation shared
+    by ``run_federation``'s jitted ``run_chunk`` (which donates the
+    carry) and ``capture_chunk_program`` (which hands the same program to
+    the static analyzer), so what fedlint checks is what the driver
+    runs."""
+    def body(carry, i):
+        state, rng = carry
+        rng, rkey = jax.random.split(rng)
+        state, stats = round_fn(state, data, pm, w, rkey, r0 + i)
+        return (state, rng), stats
+
+    (state, rng), stats = jax.lax.scan(
+        body, (state, rng), jnp.arange(n, dtype=jnp.int32))
+    return state, rng, stats
+
+
+def capture_chunk_program(loss_fn, init_params, fed, federation: Federation,
+                          *, n: int = 2, start_round: int = 0):
+    """The EXACT scanned chunk program ``run_federation`` jits, packaged
+    for static analysis instead of execution:
+
+        fn, args, donate, meta = capture_chunk_program(loss_fn, p0, fed, fedn)
+        report = repro.analysis.lint_program(fn, args, fed,
+                                             donate_argnums=donate, meta=meta)
+
+    ``fn(state, rng, r0)`` runs ``n`` rounds (``n`` is bound statically,
+    as in the driver); ``args`` holds a freshly initialized state, the
+    seed key, and the start round; ``donate`` mirrors the driver's
+    ``donate_argnums=(0, 1)``. ``meta`` carries the wire width
+    (``m_total``), client count, and round count the lint rules key on.
+    Note the chunk closes over the federation data — by design (it is
+    round-invariant) — so the no-large-literal rule sees it; keep lint
+    federations small, or lint ``make_round_fn``'s output directly with
+    ShapeDtypeStruct args for huge-C analyses."""
+    from repro.core.aggregation import check_client_weights
+    from repro.utils import param_count
+    round_fn = make_round_fn(loss_fn, fed)
+    data = {"x": jnp.asarray(federation.x), "y": jnp.asarray(federation.y)}
+    pm = jnp.asarray(federation.priority_mask)
+    w = jnp.asarray(check_client_weights(federation.weights,
+                                         where="Federation.weights"))
+    C = int(pm.shape[0])
+    state = init_state(init_params, fed, C)
+    rng = jax.random.PRNGKey(fed.seed)
+
+    def fn(state, rng, r0):
+        return _chunk_body(round_fn, data, pm, w, state, rng, r0, n)
+
+    args = (state, rng, jnp.int32(start_round))
+    meta = {"m_total": param_count(init_params), "num_clients": C,
+            "rounds": n}
+    return fn, args, (0, 1), meta
+
+
 def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
                    *, eval_every: int = 1, verbose: bool = False,
                    state=None, rng=None, start_round: int = 0,
@@ -226,18 +283,9 @@ def run_federation(loss_fn: Callable, init_params, fed, federation: Federation,
     @functools.partial(jax.jit, static_argnames=("n",),
                        donate_argnums=(0, 1))
     def run_chunk(state, rng, r0, *, n):
-        """n rounds as one scanned program; stats leaves come back [n, ...].
-        The whole FederationState is the donated scan carry — params,
-        optimizer moments, backlog, and EMAs update in place."""
-        def body(carry, i):
-            state, rng = carry
-            rng, rkey = jax.random.split(rng)
-            state, stats = round_fn(state, data, pm, w, rkey, r0 + i)
-            return (state, rng), stats
-
-        (state, rng), stats = jax.lax.scan(
-            body, (state, rng), jnp.arange(n, dtype=jnp.int32))
-        return state, rng, stats
+        """The scanned chunk (``_chunk_body``) with the FederationState
+        carry and driver key donated — update in place, no copy."""
+        return _chunk_body(round_fn, data, pm, w, state, rng, r0, n)
 
     # chunk boundaries = the eval rounds of the old per-round loop
     # (r % eval_every == 0, plus the final round), so logging cadence and

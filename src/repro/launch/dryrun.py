@@ -13,6 +13,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^ MUST precede every other import (jax locks device count at first init).
 
 import argparse
+import gzip
 import json
 import re
 import time
@@ -324,6 +325,13 @@ def build_parser():
     # from the trainer's (tests/test_pool.py pins the two flag sets equal)
     add_fed_args(ap)
     ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--dump-hlo", default=None, metavar="DIR",
+                    help="write each lowered target's optimized HLO "
+                         "(gzip, one file per combo) plus a .lintmeta.json "
+                         "sidecar into DIR, so fedlint (scripts/fedlint.py "
+                         "--hlo-dir DIR) and the roofline analyze the same "
+                         "artifacts instead of re-lowering; default: the "
+                         "HLO goes next to the records in --out")
     return ap
 
 
@@ -338,6 +346,8 @@ def main():
     shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
 
     os.makedirs(args.out, exist_ok=True)
+    hlo_dir = args.dump_hlo or args.out
+    os.makedirs(hlo_dir, exist_ok=True)
     failures = []
     for a in archs:
         cfg_name = get_config(a).name
@@ -379,10 +389,26 @@ def main():
                               variant=args.variant, fed=fed)
                 if isinstance(out, tuple):
                     rec, hlo_text = out
-                    import gzip
-                    with gzip.open(os.path.join(args.out, tag + ".hlo.txt.gz"),
+                    with gzip.open(os.path.join(hlo_dir, tag + ".hlo.txt.gz"),
                                    "wt") as hf:
                         hf.write(hlo_text)
+                    if args.dump_hlo:
+                        # sidecar the knobs fedlint's allowances key on, so
+                        # lint_hlo_text over the dump needs no re-lowering
+                        devices = rec.get("devices", 0)
+                        lint_meta = {"tag": tag, "pod": True, "rounds": 1,
+                                     "m_total": rec["n_params"],
+                                     "devices": devices,
+                                     "devices_per_pod":
+                                         devices // 2 if args.multi_pod
+                                         else devices,
+                                     "aggregator": fed.aggregator,
+                                     "wire_codec": fed.wire_codec,
+                                     "agg_dtype": fed.agg_dtype}
+                        with open(os.path.join(hlo_dir,
+                                               tag + ".lintmeta.json"),
+                                  "w") as mf:
+                            json.dump(lint_meta, mf, indent=1)
                 else:
                     rec = out
             except Exception as e:  # noqa: BLE001 — record failures, keep going

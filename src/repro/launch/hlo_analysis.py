@@ -1,250 +1,9 @@
-"""Scan-aware HLO cost analysis.
-
-XLA's built-in ``compiled.cost_analysis()`` counts every ``while`` body
-ONCE, so any program built from ``lax.scan`` (our layer stacks, local-epoch
-loops, loss chunking) is undercounted by the trip counts. This module
-re-derives roofline quantities directly from the optimized HLO text:
-
-  * builds the computation call graph (entry -> fusions / calls / while
-    bodies) and multiplies while bodies by ``known_trip_count``,
-  * counts dot/convolution FLOPs exactly from operand shapes (two-pass
-    name->shape symbol table per computation: CPU HLO references operands
-    by name only),
-  * estimates HBM traffic as 2x result bytes of non-aliasing top-level ops
-    (each tensor written once, read ~once; fusion internals stay on-chip),
-  * attributes collective bytes at true multiplicity.
-
-All quantities are per-device (the SPMD module is the per-device program).
-"""
-from __future__ import annotations
-
-import gzip
-import re
-from dataclasses import dataclass, field
-
-DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
-               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
-
-COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-# ops that move no HBM bytes of their own
-_ALIAS_KINDS = {"tuple", "get-tuple-element", "parameter", "constant",
-                "bitcast", "after-all", "iota", "broadcast", "reshape",
-                "while", "conditional", "call"}
-
-_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
-_OP = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
-_CALLED = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
-_COND = re.compile(r"condition=%?([\w.\-]+)")
-_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
-_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_KIND = re.compile(r"^(?:\([^)]*\)|\S+)\s+([\w\-]+)\(")
-_OPERANDS = re.compile(r"\(([^)]*)\)")
-
-
-def _dims_of(blob: str):
-    m = _SHAPE.search(blob)
-    return [int(d) for d in m.group(2).split(",") if d] if m else None
-
-
-def _split_operands(blob: str) -> list[str]:
-    """Split an operand list at top-level commas only. Operand entries may
-    carry inline shapes (``f32[32,48]{1,0} %arg``) whose dims/layout contain
-    commas, so a naive ``split(",")`` truncates them."""
-    parts, cur, depth = [], [], 0
-    for ch in blob:
-        if ch in "([{":
-            depth += 1
-        elif ch in ")]}":
-            depth -= 1
-        if ch == "," and depth == 0:
-            parts.append("".join(cur).strip())
-            cur = []
-        else:
-            cur.append(ch)
-    if cur:
-        parts.append("".join(cur).strip())
-    return parts
-
-
-def _operand_dims(operand: str, shapes: dict):
-    """Dims of one operand: inline shape if present, else symbol table."""
-    if "[" in operand:
-        return _dims_of(operand)
-    name = operand.split(" ")[-1].lstrip("%")
-    return shapes[name][1] if name in shapes else None
-
-
-def _result_bytes(blob: str) -> int:
-    """Bytes of the result shape(s) — the text before the op kind."""
-    total = 0
-    for dt, dims in _SHAPE.findall(blob):
-        if dt not in DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * DTYPE_BYTES[dt]
-    return total
-
-
-@dataclass
-class Comp:
-    name: str
-    dot_flops: float = 0.0
-    bytes_accessed: float = 0.0
-    coll: dict = field(default_factory=dict)
-    transcendental: float = 0.0
-    calls: list = field(default_factory=list)     # (callee, multiplier)
-
-
-def _split_result_op(rhs: str):
-    """rhs = '<result shapes> kind(<operands>), attrs' -> (result_blob, kind, rest)."""
-    m = _KIND.match(rhs)
-    if not m:
-        return rhs, "", ""
-    kind = m.group(1)
-    idx = rhs.find(kind + "(")
-    return rhs[:idx], kind, rhs[idx:]
-
-
-def parse_hlo(text: str) -> tuple[dict, str]:
-    comps: dict[str, Comp] = {}
-    entry = None
-    # --- split into computation blocks --------------------------------------
-    blocks: list[tuple[str, bool, list[str]]] = []
-    cur_name, cur_lines, cur_entry = None, [], False
-    for line in text.splitlines():
-        hdr = _COMP_HDR.match(line)
-        if hdr and line.rstrip().endswith("{"):
-            if cur_name is not None:
-                blocks.append((cur_name, cur_entry, cur_lines))
-            cur_name, cur_lines = hdr.group(1), []
-            cur_entry = line.startswith("ENTRY")
-        elif cur_name is not None:
-            cur_lines.append(line)
-    if cur_name is not None:
-        blocks.append((cur_name, cur_entry, cur_lines))
-
-    for name, is_entry, lines in blocks:
-        comp = Comp(name)
-        comps[name] = comp
-        if is_entry:
-            entry = name
-        shapes: dict[str, list] = {}
-        parsed = []
-        for line in lines:
-            op = _OP.match(line)
-            if not op:
-                continue
-            oname, rhs = op.group(1), op.group(2)
-            result_blob, kind, rest = _split_result_op(rhs)
-            dims = _dims_of(result_blob)
-            if dims is not None:
-                shapes[oname] = (result_blob, dims)
-            parsed.append((oname, rhs, result_blob, kind, rest))
-
-        for oname, rhs, result_blob, kind, rest in parsed:
-            if kind == "dot":
-                res_dims = _dims_of(result_blob) or []
-                opm = _OPERANDS.search(rest)
-                lhs_dims = None
-                if opm:
-                    operands = _split_operands(opm.group(1))
-                    if operands:
-                        lhs_dims = _operand_dims(operands[0], shapes)
-                cm = _LHS_CONTRACT.search(rest)
-                contract = [int(i) for i in cm.group(1).split(",") if i] if cm else []
-                if lhs_dims is not None:
-                    k = 1
-                    for i in contract:
-                        if i < len(lhs_dims):
-                            k *= lhs_dims[i]
-                    out = 1
-                    for d in res_dims:
-                        out *= d
-                    comp.dot_flops += 2.0 * out * k
-            elif kind == "convolution":
-                res_dims = _dims_of(result_blob) or []
-                opm = _OPERANDS.search(rest)
-                kern_dims = None
-                if opm:
-                    parts = _split_operands(opm.group(1))
-                    if len(parts) >= 2:
-                        kern_dims = _operand_dims(parts[1], shapes)
-                if kern_dims and res_dims:
-                    out = 1
-                    for d in res_dims:
-                        out *= d
-                    kf = 1
-                    for d in kern_dims:
-                        kf *= d
-                    comp.dot_flops += 2.0 * out * max(kf // max(res_dims[-1], 1), 1)
-            elif kind in ("exponential", "tanh", "log", "rsqrt", "power", "logistic"):
-                dims = _dims_of(result_blob)
-                if dims:
-                    n = 1
-                    for d in dims:
-                        n *= d
-                    comp.transcendental += n
-
-            if kind in COLLECTIVES:
-                comp.coll[kind] = comp.coll.get(kind, 0) + _result_bytes(result_blob)
-
-            if kind not in _ALIAS_KINDS:
-                comp.bytes_accessed += 2.0 * _result_bytes(result_blob)
-
-            called = _CALLED.search(rest)
-            if called:
-                mult = 1.0
-                if kind == "while":
-                    tm = _TRIP.search(rest)
-                    mult = float(tm.group(1)) if tm else 1.0
-                comp.calls.append((called.group(1), mult))
-                condm = _COND.search(rest)
-                if condm:
-                    comp.calls.append((condm.group(1), 1.0))
-    return comps, entry
-
-
-def aggregate(comps: dict, entry: str) -> dict:
-    memo: dict[str, dict] = {}
-
-    def visit(name: str) -> dict:
-        if name in memo:
-            return memo[name]
-        c = comps.get(name)
-        if c is None:
-            return {"flops": 0.0, "bytes": 0.0, "coll": {}, "transc": 0.0}
-        on_chip = ("fused" in name) or name.startswith("region")
-        total = {"flops": c.dot_flops,
-                 "bytes": 0.0 if on_chip else c.bytes_accessed,
-                 "coll": dict(c.coll), "transc": c.transcendental}
-        memo[name] = total      # (cycles impossible in HLO)
-        for callee, mult in c.calls:
-            sub = visit(callee)
-            total["flops"] += mult * sub["flops"]
-            total["transc"] += mult * sub["transc"]
-            total["bytes"] += mult * sub["bytes"]
-            for k, v in sub["coll"].items():
-                total["coll"][k] = total["coll"].get(k, 0) + mult * v
-        return total
-
-    return visit(entry)
-
-
-def analyze_text(text: str) -> dict:
-    comps, entry = parse_hlo(text)
-    agg = aggregate(comps, entry)
-    agg["coll_total"] = float(sum(agg["coll"].values()))
-    return agg
-
-
-def analyze_file(path: str) -> dict:
-    op = gzip.open if path.endswith(".gz") else open
-    with op(path, "rt") as f:
-        return analyze_text(f.read())
+"""Back-compat shim: the scan-aware HLO analyzer moved to
+``repro.analysis.hlo`` (it now also feeds the fedlint static-analysis
+rules, not just the roofline). Every public name is re-exported so the
+roofline API — ``analyze_file`` / ``analyze_text`` / ``parse_hlo`` /
+``aggregate`` and the ``DTYPE_BYTES`` / ``COLLECTIVES`` tables — keeps
+importing from here."""
+from repro.analysis.hlo import (  # noqa: F401
+    COLLECTIVES, DTYPE_BYTES, Comp, aggregate, analyze_file, analyze_text,
+    hlo_constants, parse_hlo, parse_input_output_alias, read_hlo_file)

@@ -1,0 +1,252 @@
+"""fedlint: every rule fires on its deliberately-broken fixture, stays
+silent on the real engine's programs, and the parser extensions
+(alias-config, constant sizes) read real compiled modules correctly.
+
+Each fixture is the MINIMAL program exhibiting one bug class the rule
+exists for — a closure-captured tensor, a dropped donation, an f32 upcast
+on the bf16 wire, a surprise all-gather, a weak-type recompile — so a
+rule that rots (stops firing) fails here before it silently green-lights
+the sweep.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import lint_hlo_text, lint_program
+from repro.analysis.hlo import parse_input_output_alias
+from repro.analysis.lint import LINT_RULES
+from repro.configs.base import FedConfig
+from repro.data.synth import make_synth_federation
+from repro.fl import engine, simulator
+from repro.models.small import SMALL_MODELS, make_loss_fn
+
+CLIENTS, N_PRIORITY = 12, 4
+
+
+@pytest.fixture(scope="module")
+def logreg():
+    init_fn, apply_fn = SMALL_MODELS["synth_logreg"]
+    loss_fn = make_loss_fn(apply_fn)
+    fedn = make_synth_federation(seed=0, n_priority=N_PRIORITY,
+                                 n_nonpriority=CLIENTS - N_PRIORITY,
+                                 samples_per_client=16)
+    return loss_fn, init_fn(jax.random.PRNGKey(0)), fedn
+
+
+def _violations(report, rule):
+    return [v for v in report.violations if v.rule == rule]
+
+
+# ---------------------------------------------------------------- fixtures
+# one deliberately-broken program per rule: the rule MUST fire
+
+
+def test_no_large_literal_fires_on_captured_tensor():
+    big = jnp.ones((600, 600), jnp.float32)         # 1.44 MB > 1 MiB
+    rep = lint_program(lambda x: x + big.sum(), (jnp.ones((4,)),),
+                       rules=["no-large-literal"], label="captured")
+    vs = _violations(rep, "no-large-literal")
+    assert vs, rep.summary()
+    # both the jaxpr const and the constant-folded HLO literal are seen
+    wheres = {v.detail["where"] for v in vs}
+    assert any(w == "jaxpr const" for w in wheres)
+
+
+@pytest.mark.filterwarnings("ignore:Some donated buffers were not usable")
+def test_donation_honored_fires_on_dropped_alias():
+    # returning the donated carry downcast to bf16 makes the output
+    # buffer half the size: XLA silently drops the alias
+    def step(state):
+        return {"w": (state["w"] * 2).astype(jnp.bfloat16)}
+    st = {"w": jnp.ones((512, 8), jnp.float32)}
+    rep = lint_program(step, (st,), donate_argnums=(0,),
+                       rules=["donation-honored"], label="dropped")
+    vs = _violations(rep, "donation-honored")
+    assert vs, rep.summary()
+    assert vs[0].detail["path"] == "args[0]['w']"
+
+
+def test_dtype_discipline_fires_on_f32_wire_upcast():
+    fed = FedConfig(agg_dtype="bfloat16")
+    m_total = 610
+
+    def flatten(a, b):                       # flatten_stacked's shape, f32
+        return jnp.concatenate([a.reshape(CLIENTS, -1),
+                                b.reshape(CLIENTS, -1)], axis=1)
+    a = jnp.ones((CLIENTS, 600), jnp.float32)
+    b = jnp.ones((CLIENTS, 10), jnp.float32)
+    rep = lint_program(flatten, (a, b), fed, meta={"m_total": m_total},
+                       rules=["dtype-discipline"], label="upcast")
+    assert _violations(rep, "dtype-discipline"), rep.summary()
+
+
+def test_dtype_discipline_exempts_axis0_kernel_padding():
+    # axis-0 M-wide concatenates are the sort kernel's row padding, not
+    # the wire buffer — documented exemption
+    fed = FedConfig(agg_dtype="bfloat16")
+
+    def pad(a, b):
+        return jnp.concatenate([a, b], axis=0)
+    a = jnp.ones((CLIENTS, 610), jnp.float32)
+    b = jnp.ones((4, 610), jnp.float32)
+    rep = lint_program(pad, (a, b), fed, meta={"m_total": 610},
+                       rules=["dtype-discipline"], label="padding")
+    assert rep.ok, rep.summary()
+
+
+_POD_HLO_WITH_GATHER = """HloModule round
+
+ENTRY main (p0: f32[64,610]) -> f32[64,610] {
+  p0 = f32[64,610]{1,0} parameter(0)
+  ag = f32[256,610]{1,0} all-gather(p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  ar = f32[64,610]{1,0} all-reduce(ag), replica_groups={}, to_apply=add
+  ROOT out = f32[64,610]{1,0} add(ar, p0)
+}
+"""
+
+
+def test_collective_budget_fires_on_pod_all_gather():
+    rep = lint_hlo_text(_POD_HLO_WITH_GATHER,
+                        meta={"pod": True, "rounds": 1}, label="gather")
+    vs = _violations(rep, "collective-budget")
+    assert vs, rep.summary()
+    assert "all-gather" in vs[0].message
+
+
+_CROSS_POD_HLO = """HloModule round
+
+ENTRY main (p0: f32[64,610]) -> f32[64,610] {
+  p0 = f32[64,610]{1,0} parameter(0)
+  tp = f32[64,610]{1,0} all-reduce(p0), replica_groups={{0,1},{2,3},{4,5},{6,7}}, to_apply=add
+  ar = f32[64,610]{1,0} all-reduce(tp), replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=add
+  xg = f32[512,610]{1,0} all-gather(ar), replica_groups={{0,4},{1,5},{2,6},{3,7}}, dimensions={0}
+  sl = f32[64,610]{1,0} slice(xg), slice={[0:64], [0:610]}
+  ROOT out = f32[64,610]{1,0} add(sl, p0)
+}
+"""
+
+
+def test_collective_budget_classifies_cross_pod_by_replica_groups():
+    # devices 0-3 are pod 0, 4-7 pod 1: the {0,4}-style groups straddle
+    # the boundary (one cross-pod all-reduce = in budget; the cross-pod
+    # all-gather fires); the {0,1}-style TP all-reduce is intra-pod and
+    # never counts
+    meta = {"pod": True, "rounds": 1, "devices": 8, "devices_per_pod": 4}
+    rep = lint_hlo_text(_CROSS_POD_HLO, meta=meta, label="cross-pod")
+    vs = _violations(rep, "collective-budget")
+    assert len(vs) == 1, rep.summary()
+    assert "all-gather" in vs[0].message
+    assert vs[0].detail["cross_pod_n"]["all-reduce"] == 1
+
+    # same module viewed as ONE pod of 8: nothing is cross-pod
+    meta = {"pod": True, "rounds": 1, "devices": 8, "devices_per_pod": 8}
+    assert lint_hlo_text(_CROSS_POD_HLO, meta=meta, label="one-pod").ok
+
+
+def test_collective_budget_allows_gather_for_order_statistics():
+    fed = FedConfig(aggregator="trimmed_mean")
+    rep = lint_hlo_text(_POD_HLO_WITH_GATHER, fed,
+                        meta={"pod": True, "rounds": 1}, label="trimmed")
+    assert rep.ok, rep.summary()
+
+
+def test_recompile_stability_fires_on_weak_type_leak():
+    # python-scalar round_idx traces weak i32, device scalar traces
+    # strong i32: jit's cache keys on weak_type, so these recompile
+    # against each other every call
+    rep = lint_program(lambda x, r: x * r, (jnp.ones((4,)), 3),
+                       args2=(jnp.ones((4,)), jnp.int32(7)),
+                       rules=["recompile-stability"], label="weak")
+    assert _violations(rep, "recompile-stability"), rep.summary()
+
+
+def test_recompile_stability_clean_on_value_only_change():
+    rep = lint_program(lambda x, r: x * r,
+                       (jnp.ones((4,)), jnp.int32(3)),
+                       args2=(jnp.ones((4,)), jnp.int32(7)),
+                       rules=["recompile-stability"], label="values")
+    assert rep.ok, rep.summary()
+
+
+# ------------------------------------------------------------ real programs
+
+
+def test_chunk_program_clean_all_rules(logreg):
+    loss_fn, params, fedn = logreg
+    fed = FedConfig(num_clients=CLIENTS, num_priority=N_PRIORITY, rounds=4,
+                    local_epochs=1, warmup_frac=0.0,
+                    agg_dtype="bfloat16", aggregator="trimmed_mean")
+    fn, args, donate, meta = simulator.capture_chunk_program(
+        loss_fn, params, fed, fedn, n=2)
+    args2 = (args[0], jax.random.PRNGKey(99), jnp.int32(7))
+    rep = lint_program(fn, args, fed, args2=args2, donate_argnums=donate,
+                       meta=meta, label="chunk")
+    assert rep.ok, rep.summary()
+    assert set(rep.checked) == set(LINT_RULES.names())
+    assert not rep.skipped
+
+
+def test_pooled_round_at_1e4_clients_no_large_literal(logreg):
+    # PR 9 regression: the candidate-pool round at C=1e4 must compile
+    # with NO federation-sized tensor baked into the program — the data
+    # enters as (shape-only) arguments, so the trace and the optimized
+    # HLO stay O(model), not O(population)
+    loss_fn, params, fedn = logreg
+    C, P = 10_000, 500
+    fed = FedConfig(num_clients=C, num_priority=P, rounds=1, local_epochs=1,
+                    warmup_frac=0.0, candidate_pool=2000)
+    round_fn = engine.make_round_fn(loss_fn, fed)
+    state = engine.init_state(params, fed, C)
+    sds = jax.ShapeDtypeStruct
+    data = {"x": sds((C,) + fedn.x.shape[1:], fedn.x.dtype),
+            "y": sds((C,) + fedn.y.shape[1:], fedn.y.dtype)}
+    rep = lint_program(
+        round_fn,
+        (state, data, sds((C,), jnp.bool_), sds((C,), jnp.float32),
+         sds((2,), jnp.uint32), jnp.int32(0)),
+        fed, rules=["no-large-literal"], label="pooled C=1e4")
+    assert rep.ok, rep.summary()
+
+
+def test_suppress_records_rule_as_skipped():
+    big = jnp.ones((600, 600), jnp.float32)
+    rep = lint_program(lambda x: x + big.sum(), (jnp.ones((4,)),),
+                       rules=["no-large-literal"],
+                       suppress=("no-large-literal",), label="suppressed")
+    assert rep.ok
+    assert rep.skipped["no-large-literal"] == "suppressed"
+
+
+# ------------------------------------------------------------ parser pieces
+
+
+def test_alias_parser_on_real_compiled_module():
+    def step(state, x):
+        return {"w": state["w"] + x.sum()}, x * 2
+    st = {"w": jnp.ones((256, 4), jnp.float32)}
+    x = jnp.ones((256, 4), jnp.float32)
+    text = (jax.jit(step, donate_argnums=(0,), keep_unused=True)
+            .lower(st, x).compile().as_text())
+    entries = parse_input_output_alias(text)
+    assert entries, "compiled donation produced no alias config"
+    assert any(e["param_number"] == 0 for e in entries)
+    for e in entries:
+        assert isinstance(e["output_index"], tuple)
+        assert e["kind"] in ("may-alias", "must-alias")
+
+
+def test_alias_parser_handles_nested_braces():
+    text = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+            "{1, 2}: (3, {1}, must-alias) }, entry_computation_layout=...")
+    entries = parse_input_output_alias(text)
+    assert len(entries) == 2
+    assert entries[0] == {"output_index": (0,), "param_number": 0,
+                          "param_index": (), "kind": "may-alias"}
+    assert entries[1] == {"output_index": (1, 2), "param_number": 3,
+                          "param_index": (1,), "kind": "must-alias"}
+
+
+def test_alias_parser_empty_on_module_without_donation():
+    text = jax.jit(lambda x: x * 2).lower(
+        jnp.ones((8,))).compile().as_text()
+    assert parse_input_output_alias(text) == []

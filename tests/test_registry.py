@@ -1,0 +1,94 @@
+"""utils.Registry error paths and the validate_config hook machinery —
+the seams every pluggable table (strategies, aggregators, codecs, lint
+rules) and every config check ride on."""
+import pytest
+
+from repro.configs import base as config_base
+from repro.configs.base import FedConfig, register_validator, validate_config
+from repro.utils import Registry
+
+
+def test_register_stamps_attrs_and_returns_fn():
+    reg = Registry("widget")
+
+    @reg.register("alpha", widget_name="alpha", fancy=True)
+    def alpha():
+        return 1
+
+    assert alpha.widget_name == "alpha"
+    assert alpha.fancy is True
+    assert reg["alpha"] is alpha
+    assert alpha() == 1
+
+
+def test_duplicate_registration_raises_with_kind_and_name():
+    reg = Registry("widget")
+    reg.register("alpha")(lambda: 1)
+    with pytest.raises(ValueError, match="duplicate widget 'alpha'"):
+        reg.register("alpha")(lambda: 2)
+
+
+def test_unknown_lookup_lists_registered_names():
+    reg = Registry("widget")
+    reg.register("alpha")(lambda: 1)
+    reg.register("beta")(lambda: 2)
+    with pytest.raises(ValueError,
+                       match=r"unknown widget 'gamma'; registered: "
+                             r"\['alpha', 'beta'\]"):
+        reg.lookup("gamma")
+
+
+def test_alias_resolution_in_resolve_and_lookup():
+    reg = Registry("widget", aliases={None: "alpha", "none": "alpha"})
+    fn = reg.register("alpha")(lambda: 1)
+    assert reg.resolve(None) == "alpha"
+    assert reg.resolve("none") == "alpha"
+    assert reg.resolve("alpha") == "alpha"
+    assert reg.lookup(None) is fn
+    # an alias pointing at an unregistered name still errors cleanly
+    reg2 = Registry("widget", aliases={"fast": "missing"})
+    with pytest.raises(ValueError, match="unknown widget 'fast'"):
+        reg2.lookup("fast")
+
+
+def test_names_sorted_and_dict_protocol():
+    reg = Registry("widget")
+    for name in ("zeta", "alpha", "mid"):
+        reg.register(name)(lambda: None)
+    assert reg.names() == ["alpha", "mid", "zeta"]
+    assert "zeta" in reg and len(reg) == 3   # it IS a dict
+
+
+# ------------------------------------------------------- validate_config
+
+
+def test_validate_config_returns_fed_and_runs_standard_hooks():
+    fed = FedConfig()
+    assert validate_config(fed) is fed
+    # the standard subsystem hooks registered at import
+    for hook in ("aggregator", "async", "clock", "codec", "population"):
+        assert hook in config_base._VALIDATORS
+
+
+def test_validator_hooks_run_in_sorted_name_order():
+    ran = []
+    try:
+        register_validator("zz_probe")(lambda fed: ran.append("zz_probe"))
+        register_validator("aa_probe")(lambda fed: ran.append("aa_probe"))
+        validate_config(FedConfig())
+        assert ran == ["aa_probe", "zz_probe"]
+    finally:
+        config_base._VALIDATORS.pop("zz_probe", None)
+        config_base._VALIDATORS.pop("aa_probe", None)
+
+
+def test_validator_error_precedence_is_deterministic():
+    # two invalid knobs from different subsystems: the sorted-first
+    # hook's error is the one raised, every time
+    fed = FedConfig(candidate_pool=-1, wire_codec="int8", fused_agg=False)
+    msgs = set()
+    for _ in range(3):
+        with pytest.raises(ValueError) as ei:
+            validate_config(fed)
+        msgs.add(str(ei.value))
+    assert len(msgs) == 1
